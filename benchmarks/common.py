@@ -1,0 +1,31 @@
+"""Shared benchmark helpers: timing, CSV emit, dataset prep at bench scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.svm_datasets import SVMDataset, make_dataset, partition
+
+# scale factors keep wall time sane on one CPU core while preserving each
+# dataset's (d, sparsity, lambda) signature; row counts stay in the thousands.
+BENCH_SCALE = {
+    "adult": 0.15, "ccat": 0.006, "mnist": 0.08, "reuters": 0.6,
+    "usps": 0.6, "webspam": 0.02,
+}
+
+
+def bench_dataset(name: str, seed: int = 0) -> SVMDataset:
+    return make_dataset(name, scale=BENCH_SCALE[name], seed=seed)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    out = jax.block_until_ready(out) if hasattr(out, "block_until_ready") else out
+    return out, time.time() - t0
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Communication-cost comparison: gossip vs all-reduce (the paper's central
+efficiency claim, §2.2.3: "MoM-DSVM broadcasts ... thereby having a higher
+communication cost").
+
+Two sources:
+  * analytic per-step bytes per replica for a P-byte model:
+      ring all-reduce: 2 (n-1)/n P;  R gossip rounds: R * (1-self_share) P
+  * measured collective bytes from the dry-run JSONL (when present) for
+    llama3-8b train_4k allreduce vs gossip on the same mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def analytic(P_bytes: float, n: int, rounds: int, self_share: float = 0.5):
+    allreduce = 2.0 * (n - 1) / n * P_bytes
+    gossip = rounds * (1.0 - self_share) * P_bytes
+    return allreduce, gossip
+
+
+def run(dryrun_jsonl="results/dryrun_baseline.jsonl", verbose=True):
+    rows = {}
+    P = 16e9  # llama3-8b bf16
+    for n, rounds in [(16, 1), (16, 2), (16, 4), (2, 1)]:
+        ar, go = analytic(P, n, rounds)
+        rows[f"n{n}_R{rounds}"] = (ar, go)
+        if verbose:
+            emit(f"gossip_comm/analytic_n{n}_R{rounds}", 0.0,
+                 f"allreduce={ar/1e9:.2f}GB;gossip={go/1e9:.2f}GB;ratio={go/ar:.2f}")
+    if os.path.exists(dryrun_jsonl):
+        recs = [json.loads(l) for l in open(dryrun_jsonl)]
+        for r in recs:
+            if (r.get("arch") == "llama3-8b" and r.get("shape") == "train_4k"
+                    and r.get("status") == "ok"):
+                if verbose:
+                    emit(f"gossip_comm/measured_{r['consensus']}_{r['mesh']}", 0.0,
+                         f"collective_bytes={r['collective_bytes']:.3e}")
+                rows[f"measured_{r['consensus']}_{r['mesh']}"] = r["collective_bytes"]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

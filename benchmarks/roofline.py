@@ -1,0 +1,67 @@
+"""Roofline table generator: reads the dry-run JSONL and renders the
+EXPERIMENTS.md §Roofline markdown table (one row per arch x shape)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+HDR = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+       "bottleneck | model_GFLOPs | useful_ratio | fits_16G |")
+SEP = "|" + "---|" * 10
+
+
+def load(path="results/dryrun_baseline.jsonl"):
+    if not os.path.exists(path):
+        return []
+    recs = [json.loads(l) for l in open(path)]
+    # keep the latest record per (arch, shape, mesh, consensus)
+    seen = {}
+    for r in recs:
+        seen[(r["arch"], r["shape"], r["mesh"], r["consensus"])] = r
+    return list(seen.values())
+
+
+def table(recs, mesh="16x16", consensus="allreduce") -> str:
+    lines = [HDR, SEP]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r["consensus"] != consensus:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
+                         f"skipped: {r['reason']} | — | — | — |")
+            continue
+        if r["status"] == "failed":
+            lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — | — | "
+                         f"FAILED: {r['reason'][:60]} | — | — | — |")
+            continue
+        fits = "yes" if r["per_device_bytes"] <= 16 * 2**30 else \
+            f"no ({r['per_device_bytes']/2**30:.0f}G)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['bottleneck']} | "
+            f"{r['model_flops_global']/1e9:.0f} | {r['useful_flop_ratio']:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def run(path="results/dryrun_baseline.jsonl", verbose=True):
+    recs = load(path)
+    ok = [r for r in recs if r["status"] == "ok"]
+    if verbose and recs:
+        by_bn = {}
+        for r in ok:
+            by_bn.setdefault(r["bottleneck"], []).append(r)
+        for bn, rs in by_bn.items():
+            emit(f"roofline/{bn}-bound", 0.0, f"count={len(rs)}")
+        worst = sorted(ok, key=lambda r: max(r["memory_s"], r["collective_s"])
+                       / max(r["compute_s"], 1e-9), reverse=True)[:3]
+        for r in worst:
+            emit(f"roofline/worst_{r['arch']}_{r['shape']}", 0.0,
+                 f"compute={r['compute_s']:.2f}s mem={r['memory_s']:.2f}s "
+                 f"coll={r['collective_s']:.2f}s")
+    return recs
+
+
+if __name__ == "__main__":
+    print(table(load()))

@@ -1,0 +1,36 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table3     # one suite
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig_convergence, gossip_comm, kernel_bench, roofline,
+                        table3_gadget_vs_pegasos, table4_online_baselines,
+                        table5_speedup, topology_study, gossip_rounds_study)
+
+SUITES = {
+    "table3": lambda: table3_gadget_vs_pegasos.run(),
+    "table4": lambda: table4_online_baselines.run(),
+    "table5": lambda: table5_speedup.run(),
+    "fig_convergence": lambda: fig_convergence.run(),
+    "kernels": lambda: kernel_bench.run(),
+    "gossip_comm": lambda: gossip_comm.run(),
+    "roofline": lambda: roofline.run(),
+    "topology": lambda: topology_study.run(),
+    "gossip_rounds": lambda: gossip_rounds_study.run(),
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    print("name,us_per_call,derived")
+    for n in names:
+        SUITES[n]()
+
+
+if __name__ == "__main__":
+    main()

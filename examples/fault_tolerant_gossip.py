@@ -1,0 +1,62 @@
+"""Node failures during gossip — the paper's §5 future-work scenario, live.
+
+Trains GADGET while links drop 20% of messages (ack'd fail-stop model) and
+with two nodes crashed outright, and shows the surviving network still
+converges — the Push-Sum mass bookkeeping is doing the fault tolerance.
+
+  PYTHONPATH=src python examples/fault_tolerant_gossip.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resilience import FaultySim
+from repro.core import svm_objective as obj
+from repro.data.svm_datasets import make_dataset, partition
+
+
+def gadget_with_faults(Xp, yp, lam, sim: FaultySim, n_iters=1200, batch=8, seed=0):
+    """GADGET loop re-implemented over the faulty simulator (host loop,
+    fine at example scale)."""
+    import jax
+
+    m, n_i, d = Xp.shape
+    W = jnp.zeros((m, d), jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    for t in range(1, n_iters + 1):
+        key, sub = jax.random.split(key)
+        ids = jax.random.randint(sub, (m, batch), 0, n_i)
+        alpha = 1.0 / (lam * t)
+
+        def half(w, Xi, yi, ii):
+            Xb, yb = Xi[ii], yi[ii]
+            L = -obj.hinge_subgradient(w, Xb, yb)
+            return obj.project_ball((1 - lam * alpha) * w + alpha * L, lam)
+
+        W = jax.vmap(half)(W, Xp, yp, ids)
+        st = sim.init((W,))
+        for r in range(3):
+            st = sim.round(st, t * 3 + r)
+        W = st.estimate()[0]
+    return W
+
+
+def main():
+    ds = make_dataset("usps", scale=0.4, seed=0)
+    Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
+    Xp, yp = partition(ds.X_train, ds.y_train, 10)
+    Xp, yp = jnp.asarray(Xp), jnp.asarray(yp)
+
+    for name, sim in [
+        ("clean", FaultySim(10, "random", drop_prob=0.0, seed=1)),
+        ("20% link drops", FaultySim(10, "random", drop_prob=0.2, drop="link", seed=1)),
+        ("2 dead nodes", FaultySim(10, "random", dead_nodes=(2, 5), seed=1)),
+    ]:
+        W = gadget_with_faults(Xp, yp, ds.lam, sim)
+        accs = [float(obj.accuracy(W[i], Xte, yte)) for i in range(10)]
+        alive = [a for i, a in enumerate(accs) if i not in getattr(sim, "dead", ())]
+        print(f"{name:16s}: node-acc mean {np.mean(alive):.3f} "
+              f"(min {min(alive):.3f}, max {max(alive):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""The paper's protocol lifted to deep-net training: train the same reduced
+transformer with (a) classical all-reduce DP and (b) GADGET-style gossip
+consensus, and compare loss curves + replica disagreement.
+
+This is the integration the framework exists for: ``--consensus gossip``
+turns every optimizer step into local-step + Push-Sum parameter mixing
+(collective-permute on a real mesh; a leading replica axis here on CPU).
+
+  PYTHONPATH=src python examples/gossip_vs_allreduce.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import Batcher, TokenStreamConfig
+from repro.launch import steps as steps_mod
+from repro.models.transformer import Model
+
+STEPS, BATCH, SEQ, G = 30, 16, 64, 4
+
+
+def run(consensus: str, gossip_rounds: int = 1):
+    cfg = get_config("llama3-8b").reduced(n_layers=2, d_model=128)
+    model = Model(cfg)
+    tcfg = steps_mod.TrainerConfig(
+        optimizer="adamw", lr=3e-3, total_steps=STEPS, warmup_steps=3,
+        consensus=consensus, n_replicas=G if consensus == "gossip" else 1,
+        gossip_rounds=gossip_rounds)
+    state = steps_mod.make_train_state(model, tcfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(steps_mod.make_train_step(model, tcfg))
+    batcher = Batcher(TokenStreamConfig(cfg.vocab_size, SEQ, BATCH, seed=0))
+    losses = []
+    for s in range(STEPS):
+        b = {k: jnp.asarray(v) for k, v in batcher.global_batch(s).items()}
+        if consensus == "gossip":
+            b = {k: v.reshape(G, BATCH // G, SEQ) for k, v in b.items()}
+        state, m = step_fn(state, b)
+        losses.append(float(m["loss"]))
+    spread = 0.0
+    if consensus == "gossip":
+        spreads = []
+        for leaf in jax.tree.leaves(state["params"]):
+            c = leaf.mean(0, keepdims=True)
+            spreads.append(float(jnp.linalg.norm((leaf - c).astype(jnp.float32)))
+                           / (float(jnp.linalg.norm(c.astype(jnp.float32))) + 1e-9))
+        spread = max(spreads)
+    return losses, spread
+
+
+def main():
+    l_ar, _ = run("allreduce")
+    for rounds in (1, 2):
+        l_go, spread = run("gossip", rounds)
+        print(f"gossip R={rounds}: loss {l_go[0]:.3f}->{np.mean(l_go[-5:]):.3f} "
+              f"(allreduce {l_ar[0]:.3f}->{np.mean(l_ar[-5:]):.3f}); "
+              f"final replica disagreement {spread:.3%}")
+    # comm cost note (per step per replica, P = model bytes):
+    #   allreduce 2(n-1)/n P ~ 1.9P at n=16 ; gossip R/2 P = 0.5P (R=1)
+    print("comm/step: allreduce ~1.9x model bytes; gossip R=1 ~0.5x "
+          "(see benchmarks/gossip_comm.py for measured collective bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: the paper in 60 seconds on one CPU.
+
+1. Train a linear SVM with GADGET (10 gossiping nodes, random-neighbor
+   Push-Sum — the paper's exact protocol) on a paper-signature dataset.
+2. Compare against centralized Pegasos.
+3. Show the consensus: every node ends up with (nearly) the same model.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import svm_objective as obj
+from repro.core.gadget import GadgetConfig, gadget_train
+from repro.core.pegasos import pegasos_train
+from repro.data.svm_datasets import make_dataset, partition
+
+
+def main():
+    ds = make_dataset("reuters", scale=0.3, seed=0)
+    Xtr, ytr = jnp.asarray(ds.X_train), jnp.asarray(ds.y_train)
+    Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
+    print(f"dataset=reuters(synthetic signature) d={ds.d} "
+          f"n_train={len(ytr)} lambda={ds.lam}")
+
+    cen = pegasos_train(Xtr, ytr, lam=ds.lam, n_iters=1500, batch_size=8)
+    print(f"centralized Pegasos   acc={float(obj.accuracy(cen.w, Xte, yte)):.3f}")
+
+    Xp, yp = partition(ds.X_train, ds.y_train, m=10)
+    res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp),
+                       GadgetConfig(lam=ds.lam, batch_size=8, gossip_rounds=4,
+                                    topology="random", epsilon=1e-3,
+                                    max_iters=1500, check_every=300))
+    acc = float(obj.accuracy(res.w_consensus, Xte, yte))
+    print(f"GADGET (10 nodes)     acc={acc:.3f}  iters={res.iters} "
+          f"eps_at_stop={res.epsilon:.2e}")
+
+    W = np.asarray(res.W)
+    spread = np.linalg.norm(W - W.mean(0), axis=1) / np.linalg.norm(W.mean(0))
+    print(f"consensus: max relative node disagreement = {spread.max():.3%}")
+    print("per-node accuracies:",
+          [round(float(obj.accuracy(res.W[i], Xte, yte)), 3) for i in range(10)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Checkpoint substrate: pytree <-> .npz + JSON treedef, with rotation."""
+from repro.checkpoint.io import latest_step, restore, save  # noqa: F401

@@ -1,0 +1,98 @@
+"""Checkpointing: flatten any pytree of arrays to an .npz plus a JSON treedef.
+
+No orbax in the container; this covers the trainer's needs — atomic writes
+(tmp + rename), step-numbered directories, keep-last-k rotation, and dtype/
+shape-faithful restore onto the caller's tree structure (so restored arrays
+can be re-sharded by the caller's jit in/out shardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+__all__ = ["save", "restore", "latest_step"]
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:09d}")
+
+
+def save(root: str, step: int, tree: Pytree, keep: int = 3) -> str:
+    """Write ``tree`` under root/step_XXXXXXXXX atomically; rotate old steps."""
+    os.makedirs(root, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "shapes": [list(a.shape) for a in arrays.values()],
+    }
+    tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_ckpt_")
+    try:
+        np.savez(os.path.join(tmp, _ARRAYS), **arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as fh:
+            json.dump(manifest, fh)
+        final = _step_dir(root, step)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _rotate(root, keep)
+    return final
+
+
+def _rotate(root: str, keep: int) -> None:
+    steps = sorted(_list_steps(root))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+def _list_steps(root: str) -> list[int]:
+    out = []
+    if not os.path.isdir(root):
+        return out
+    for name in os.listdir(root):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(root: str) -> int | None:
+    steps = _list_steps(root)
+    return max(steps) if steps else None
+
+
+def restore(root: str, like: Pytree, step: int | None = None) -> Pytree:
+    """Restore arrays into the structure of ``like`` (shape/dtype validated)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    path = _step_dir(root, step)
+    with np.load(os.path.join(path, _ARRAYS)) as z:
+        arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(arrays):
+        raise ValueError(f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}")
+    for i, (a, l) in enumerate(zip(arrays, leaves)):
+        if tuple(a.shape) != tuple(np.shape(l)):
+            raise ValueError(f"leaf {i}: checkpoint shape {a.shape} != expected {np.shape(l)}")
+    return jax.tree.unflatten(treedef, arrays)

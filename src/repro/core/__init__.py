@@ -1,0 +1,27 @@
+"""Core: the GADGET SVM paper's contribution — gossip/Push-Sum consensus
+learning — as composable JAX modules.
+
+* topology      — gossip graphs + doubly-stochastic mixing matrices
+* push_sum      — Push-Sum/Push-Vector (simulator + mesh/ppermute paths)
+* svm_objective — primal SVM math shared by Pegasos/GADGET/kernels
+* pegasos       — centralized baseline solver
+* gadget        — the distributed GADGET SVM algorithm
+* consensus     — gossip vs all-reduce strategies for deep-net training
+"""
+from repro.core.topology import (  # noqa: F401
+    TOPOLOGIES,
+    build_matrix,
+    is_doubly_stochastic,
+    mixing_time_bound,
+)
+from repro.core.push_sum import (  # noqa: F401
+    GossipRound,
+    PushSumSim,
+    PushSumState,
+    exponential_schedule,
+    push_sum_mesh,
+    push_sum_round,
+)
+from repro.core.gadget import GadgetConfig, GadgetResult, gadget_train  # noqa: F401
+from repro.core.pegasos import PegasosResult, pegasos_train  # noqa: F401
+from repro.core.consensus import ConsensusConfig, allreduce_grads, gossip_mix, mix_params  # noqa: F401

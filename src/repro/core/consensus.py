@@ -1,0 +1,158 @@
+"""Consensus strategies: the paper's gossip protocol as a first-class
+alternative to all-reduce data parallelism for arbitrary models.
+
+* ``allreduce`` — classical synchronous DP: gradients are ``pmean``-ed over
+  the replica axes every step. This is the "centralized" reference point,
+  the deep-net analogue of the paper's Pegasos baseline.
+
+* ``gossip`` — Stochastic-Gradient-Push / GADGET-style: gradients are NOT
+  synchronized; each replica applies its local optimizer update, then the
+  *parameters* are mixed with ``R`` Push-Sum rounds over the time-varying
+  one-peer exponential graph (one ``ppermute`` per round). ``R`` per step is a
+  knob: R = log2(n_replicas) gives exact averaging (gossip-equivalent of
+  all-reduce); R < log2(n) gives the paper's partial-consensus anytime
+  behaviour at a fraction of the per-step communication.
+
+Collective-cost napkin math (recorded for §Roofline): ring all-reduce moves
+2·(n−1)/n · |params| bytes per step per replica; R gossip rounds move
+R/2 · |params| (each round ships self_share-weighted halves one hop). With
+R = 2 on a 16-way axis gossip ships ~1.0× |params| vs ~1.9× for all-reduce —
+the paper's "cheaper than centralizing" claim, now measurable in the dry-run.
+
+The mixing runs *inside shard_map*; schedule rotation across steps uses
+``lax.switch`` on the traced step counter so one compiled program serves all
+steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.push_sum import GossipRound, PushSumState, exponential_schedule, push_sum_round
+
+Pytree = Any
+
+__all__ = ["ConsensusConfig", "allreduce_grads", "gossip_mix", "gossip_mix_stacked", "mix_params"]
+
+
+class ConsensusConfig(NamedTuple):
+    kind: str = "allreduce"       # "allreduce" | "gossip" | "none"
+    gossip_rounds: int = 2        # R — Push-Sum rounds per optimizer step
+    self_share: float = 0.5
+    mix_every: int = 1            # gossip only every k-th step (local SGD flavor)
+
+    def validate(self) -> "ConsensusConfig":
+        if self.kind not in ("allreduce", "gossip", "none"):
+            raise ValueError(f"unknown consensus kind {self.kind!r}")
+        if self.gossip_rounds < 1 or self.mix_every < 1:
+            raise ValueError("gossip_rounds and mix_every must be >= 1")
+        return self
+
+
+def allreduce_grads(grads: Pytree, axis_names: Sequence[str]) -> Pytree:
+    """pmean over the replica axes (inside shard_map)."""
+    axes = tuple(axis_names)
+    return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads)
+
+
+def _one_round_branches(sched: list[GossipRound], self_share: float):
+    """One lax.switch branch per schedule entry (static ppermute perms)."""
+    return [
+        (lambda state, rnd=rnd: push_sum_round(state, rnd, self_share=self_share))
+        for rnd in sched
+    ]
+
+
+def gossip_mix(
+    params: Pytree,
+    step: jax.Array,
+    *,
+    axis_sizes: dict[str, int],
+    rounds: int,
+    self_share: float = 0.5,
+) -> Pytree:
+    """R Push-Sum rounds on the parameter pytree (inside shard_map).
+
+    The hop schedule is rotated by the traced ``step`` so consecutive steps
+    continue the exponential hop sequence — without this, repeating hop=1
+    every step never contracts the slow modes of the consensus error.
+    """
+    sched = exponential_schedule(axis_sizes)
+    if not sched:
+        return params
+    L = len(sched)
+    branches = _one_round_branches(sched, self_share)
+    state = PushSumState(values=params, weight=jnp.float32(1.0))
+    base = (step.astype(jnp.int32) * rounds) % L
+    for k in range(rounds):
+        idx = (base + k) % L
+        state = jax.lax.switch(idx, branches, state)
+    return state.estimate()
+
+
+def gossip_mix_stacked(
+    params: Pytree,
+    step: jax.Array,
+    *,
+    n_nodes: int,
+    rounds: int = 1,
+    self_share: float = 0.5,
+    payload_dtype: Any = None,
+) -> Pytree:
+    """Global-view gossip: every leaf carries a leading replica axis of size
+    ``n_nodes`` (sharded over the gossip mesh axis); one Push-Sum round is
+    ``x <- s*x + (1-s)*roll(x, hop, axis=0)`` which XLA lowers to a
+    collective-permute across that axis. Hop schedule rotates with the traced
+    step via lax.switch (hops 1, 2, ..., n/2).
+
+    With the deterministic doubly-stochastic schedule the Push-Sum mass
+    weight is identically 1, so no weight tracking is needed here (property-
+    tested in tests/test_consensus.py against PushSumSim).
+
+    ``payload_dtype`` (beyond-paper): quantize the SENT share only (e.g.
+    jnp.bfloat16) — halves gossip wire bytes; the kept self-share stays full
+    precision, so the quantization noise per round is bounded by
+    (1-self_share) * one payload-dtype ulp of the neighbor value.
+    """
+    if n_nodes == 1:
+        return params
+    if n_nodes & (n_nodes - 1):
+        raise ValueError("n_nodes must be a power of two")
+    hops = [1 << k for k in range((n_nodes - 1).bit_length())]
+
+    def mk(hop):
+        def f(p):
+            def mix(x):
+                sent = x.astype(payload_dtype) if payload_dtype is not None else x
+                recv = jnp.roll(sent, hop, axis=0).astype(jnp.float32)
+                return (self_share * x.astype(jnp.float32)
+                        + (1.0 - self_share) * recv).astype(x.dtype)
+            return jax.tree.map(mix, p)
+        return f
+
+    branches = [mk(h) for h in hops]
+    L = len(hops)
+    base = (step.astype(jnp.int32) * rounds) % L
+    for k in range(rounds):
+        params = jax.lax.switch((base + k) % L, branches, params)
+    return params
+
+
+def mix_params(
+    cfg: ConsensusConfig,
+    params: Pytree,
+    step: jax.Array,
+    *,
+    axis_sizes: dict[str, int],
+) -> Pytree:
+    """Post-update parameter mixing per the configured strategy."""
+    if cfg.kind != "gossip":
+        return params
+    mixed = gossip_mix(params, step, axis_sizes=axis_sizes,
+                       rounds=cfg.gossip_rounds, self_share=cfg.self_share)
+    if cfg.mix_every == 1:
+        return mixed
+    skip = (step % cfg.mix_every) != 0
+    return jax.tree.map(lambda m, p: jnp.where(skip, p, m), mixed, params)

@@ -1,0 +1,107 @@
+"""Synthetic SVM datasets with the same signature as the paper's benchmarks.
+
+The container is offline, so the six datasets of Table 2 (Adult, CCAT, MNIST,
+Reuters, USPS, Webspam) are regenerated synthetically with matching
+(N_train, N_test, d, sparsity, lambda). Real files in LibSVM format drop in
+via :mod:`repro.data.libsvm` with zero code changes.
+
+Generator model: a ground-truth hyperplane w* with optional sparse features
+and controllable label noise + margin — this reproduces the *shape* of each
+task (dimensionality, sparsity, class balance) so that the paper's structural
+claims (GADGET ≈ centralized Pegasos; convergence/consensus behaviour) are
+exercised at the same operating points. ``scale`` shrinks N for CI-speed runs
+while keeping d and sparsity exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["SVMDataset", "PAPER_DATASETS", "make_dataset", "partition"]
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    n_train: int
+    n_test: int
+    d: int
+    sparsity: float      # fraction of nonzero features (1.0 = dense)
+    lam: float           # paper's lambda for this dataset (Table 2)
+    label_noise: float = 0.05
+    class_balance: float = 0.5
+
+
+# Table 2 of the paper. Sparsity "NA" in the paper => dense here, except CCAT
+# which the paper reports at 0.16% nonzeros.
+PAPER_DATASETS: dict[str, DatasetSpec] = {
+    "adult":   DatasetSpec("adult",   32561,  16281,   123, 1.0,    3.07e-5, label_noise=0.15, class_balance=0.24),
+    "ccat":    DatasetSpec("ccat",    781265, 23149, 47236, 0.0016, 1e-4,    label_noise=0.05, class_balance=0.47),
+    "mnist":   DatasetSpec("mnist",   60000,  10000,   784, 0.19,   1.67e-5, label_noise=0.02, class_balance=0.099),
+    "reuters": DatasetSpec("reuters", 7770,   3299,   8315, 0.01,   1.29e-4, label_noise=0.03, class_balance=0.3),
+    "usps":    DatasetSpec("usps",    7329,   1969,    256, 1.0,    1.36e-4, label_noise=0.02, class_balance=0.167),
+    "webspam": DatasetSpec("webspam", 234500, 115500,  254, 0.33,   1e-5,    label_noise=0.1,  class_balance=0.39),
+}
+
+
+@dataclass
+class SVMDataset:
+    name: str
+    X_train: np.ndarray  # (n_train, d) float32
+    y_train: np.ndarray  # (n_train,)  float32 in {-1, +1}
+    X_test: np.ndarray
+    y_test: np.ndarray
+    lam: float
+
+    @property
+    def d(self) -> int:
+        return self.X_train.shape[1]
+
+
+def _gen_split(spec: DatasetSpec, n: int, w_star: np.ndarray, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
+    d = spec.d
+    X = rng.normal(0.0, 1.0, size=(n, d)).astype(np.float32)
+    if spec.sparsity < 1.0:
+        nnz = max(1, int(round(spec.sparsity * d)))
+        # sparse nonnegative "text-like" features: top-|nnz| mask per row
+        mask = np.zeros((n, d), dtype=bool)
+        cols = rng.integers(0, d, size=(n, nnz))
+        mask[np.arange(n)[:, None], cols] = True
+        X = np.where(mask, np.abs(X), 0.0).astype(np.float32)
+    # normalize rows (the paper's text sets are tf-idf normalized)
+    norms = np.linalg.norm(X, axis=1, keepdims=True)
+    X = X / np.maximum(norms, 1e-8)
+    margin = X @ w_star
+    # shift threshold to match class balance
+    thr = np.quantile(margin, 1.0 - spec.class_balance)
+    y = np.where(margin > thr, 1.0, -1.0).astype(np.float32)
+    flip = rng.random(n) < spec.label_noise
+    y = np.where(flip, -y, y)
+    return X, y
+
+
+def make_dataset(name: str, scale: float = 1.0, seed: int = 0) -> SVMDataset:
+    """Build a paper-signature dataset. ``scale`` < 1 shrinks row counts."""
+    spec = PAPER_DATASETS[name]
+    rng = np.random.default_rng((seed, hash(name) & 0xFFFF))
+    w_star = rng.normal(size=spec.d).astype(np.float32)
+    if spec.sparsity < 1.0:
+        w_star = np.abs(w_star)  # nonneg features need signed-balance via threshold
+    n_tr = max(64, int(spec.n_train * scale))
+    n_te = max(64, int(spec.n_test * scale))
+    X_tr, y_tr = _gen_split(spec, n_tr, w_star, rng)
+    X_te, y_te = _gen_split(spec, n_te, w_star, rng)
+    return SVMDataset(name, X_tr, y_tr, X_te, y_te, spec.lam)
+
+
+def partition(X: np.ndarray, y: np.ndarray, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Horizontal partition over m nodes (paper §3): shuffle then split into
+    equal chunks, returning (m, n_i, d) and (m, n_i). Rows beyond m*n_i are
+    dropped (at most m-1 rows)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(y))
+    n_i = len(y) // m
+    idx = idx[: m * n_i]
+    return X[idx].reshape(m, n_i, X.shape[1]), y[idx].reshape(m, n_i)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle used by tests).
+
+* hinge_subgrad   — fused Pegasos hinge-subgradient step (the paper's hot-spot)
+* flash_attention — causal/SWA online-softmax attention (prefill hot-spot)
+* rglru_scan      — RG-LRU linear recurrence (RecurrentGemma)
+* rwkv6_scan      — RWKV-6 WKV state recurrence
+
+The models use the pure-jnp paths by default (this container lowers for CPU);
+on a real TPU deployment the ops here replace those call-sites 1:1 — they are
+shape/dtype-compatible and tested against the same oracles.
+"""

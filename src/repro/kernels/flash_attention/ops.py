@@ -1,0 +1,37 @@
+"""Jitted GQA wrapper around the flash attention kernel.
+
+Maps the model layout (B, S, H, Dh) + GQA kv (B, S, Hkv, Dh) to the kernel's
+(BH, S, Dh) layout. KV heads are expanded to query heads with a broadcast
+reshape — XLA lowers this to an index remap into the kernel's BlockSpec
+loads rather than a copied repeat when the kernel consumes it directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+__all__ = ["gqa_flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k", "interpret"))
+def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        blk_q: int = 128, blk_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, Dh); k/v: (B, S, Hkv, Dh) -> (B, S, H, Dh)."""
+    b, s, h, dh = q.shape
+    hkv = k.shape[2]
+    n_rep = h // hkv
+    if n_rep > 1:
+        k = jnp.broadcast_to(k[:, :, :, None], (b, s, hkv, n_rep, dh)).reshape(b, s, h, dh)
+        v = jnp.broadcast_to(v[:, :, :, None], (b, s, hkv, n_rep, dh)).reshape(b, s, h, dh)
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, dh)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, s, dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, s, dh)
+    of = flash_attention(qf, kf, vf, causal=causal, window=window,
+                         blk_q=min(blk_q, s), blk_k=min(blk_k, s), interpret=interpret)
+    return jnp.moveaxis(of.reshape(b, h, s, dh), 1, 2)

@@ -1,0 +1,52 @@
+"""Jitted public op: fused Pegasos step backed by the Pallas kernels.
+
+Handles padding to block multiples, violator-coefficient computation, the
+global-norm ball projection (O(d) in jnp), and the loss scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hinge_subgrad import hinge_subgrad as K
+
+__all__ = ["pegasos_step"]
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "blk_b", "blk_d", "interpret"))
+def pegasos_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
+                 t: jax.Array, blk_b: int = K.DEFAULT_BLK_B,
+                 blk_d: int = K.DEFAULT_BLK_D, interpret: bool = False):
+    """Kernel-backed equivalent of ref.pegasos_step_ref -> (w_new, loss)."""
+    B, d = X.shape
+    blk_b_, blk_d_ = min(blk_b, B), min(blk_d, d)
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), blk_b_, 0), blk_d_, 1)
+    wp = _pad_to(w.astype(jnp.float32), blk_d_, 0)
+    yp = _pad_to(y.astype(jnp.float32), blk_b_, 0)
+
+    m = K.margins(Xp, wp, yp, blk_b=blk_b_, blk_d=blk_d_, interpret=interpret)
+    # padded rows have y=0 => margin 0 < 1: mask them out of the violator set
+    row_valid = (jnp.arange(Xp.shape[0]) < B)
+    viol = (m < 1.0) & row_valid
+    coeff = jnp.where(viol, yp, 0.0)
+    loss = jnp.sum(jnp.where(row_valid, jnp.maximum(0.0, 1.0 - m), 0.0)) / B
+
+    alpha = 1.0 / (lam * t.astype(jnp.float32))
+    scal = jnp.stack([lam * alpha, alpha / B])
+    w_half = K.grad_update(Xp, wp, coeff, scal, blk_b=blk_b_, blk_d=blk_d_,
+                           interpret=interpret)[:d]
+    norm = jnp.linalg.norm(w_half)
+    scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norm, 1e-30))
+    return (w_half * scale).astype(w.dtype), loss

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused Pegasos hinge-subgradient step.
+
+Matches repro.core.svm_objective.pegasos_update exactly (same math, one
+function) — the kernel is the paper's per-iteration compute hot-spot:
+margins = X w;  L = X^T (1[margin<1] * y) / B;
+w' = (1 - lam*alpha) w + alpha L;  project to the 1/sqrt(lam) ball.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pegasos_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array):
+    """Returns (w_new (d,), mean_hinge_loss ()). X: (B, d); y: (B,) in {-1,+1}."""
+    margins = y * (X @ w)
+    viol = (margins < 1.0).astype(X.dtype)
+    L = (X.T @ (viol * y)) / X.shape[0]
+    alpha = 1.0 / (lam * t)
+    w_half = (1.0 - lam * alpha) * w + alpha * L
+    norm = jnp.linalg.norm(w_half)
+    scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norm, 1e-30))
+    loss = jnp.mean(jnp.maximum(0.0, 1.0 - margins))
+    return w_half * scale, loss

@@ -1,0 +1,29 @@
+"""Jitted wrapper for the RG-LRU scan kernel (padding + dtype policy)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+
+__all__ = ["linear_recurrence"]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_s", "blk_d", "interpret"))
+def linear_recurrence(a: jax.Array, b: jax.Array, *, blk_s: int = 256,
+                      blk_d: int = 256, interpret: bool = False) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t along axis 1; pads S and D to block multiples.
+
+    Padding with a=1, b=0 on channels is harmless (identity recurrence);
+    padded sequence tail is sliced away.
+    """
+    B, S, D = a.shape
+    bs, bd = min(blk_s, S), min(blk_d, D)
+    ps, pd = (-S) % bs, (-D) % bd
+    if ps or pd:
+        a = jnp.pad(a, ((0, 0), (0, ps), (0, pd)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, ps), (0, pd)))
+    h = rglru_scan(a, b, blk_s=bs, blk_d=bd, interpret=interpret)
+    return h[:, :S, :D]

@@ -1,0 +1,9 @@
+"""Oracle for the RG-LRU linear recurrence (re-exported from the model)."""
+from repro.models.rglru import rglru_scan_ref  # noqa: F401
+import jax.numpy as jnp
+
+
+def scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t with h_{-1} = 0. a, b: (B, S, D)."""
+    h0 = jnp.zeros_like(a[:, 0])
+    return rglru_scan_ref(a, b, h0)

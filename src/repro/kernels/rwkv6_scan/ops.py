@@ -1,0 +1,27 @@
+"""Jitted wrapper for the WKV kernel (sequence padding)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv_scan
+
+__all__ = ["wkv"]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_s", "interpret"))
+def wkv(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+        *, blk_s: int = 128, interpret: bool = False) -> jax.Array:
+    """RWKV-6 wkv. r,k,v,w: (B, S, H, n); u: (H, n). Pads S; w pads with 1
+    (identity decay), k/v with 0 (no state update)."""
+    B, S, H, n = r.shape
+    bs = min(blk_s, S)
+    ps = (-S) % bs
+    if ps:
+        pad = ((0, 0), (0, ps), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(x, pad) for x in (r, k, v))
+        w = jnp.pad(w, pad, constant_values=1.0)
+    out = wkv_scan(r, k, v, w, u, blk_s=bs, interpret=interpret)
+    return out[:, :S]

@@ -1,0 +1,12 @@
+"""Oracle for the WKV recurrence (re-exported from the model)."""
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_scan_ref  # noqa: F401
+
+
+def scan_ref(r, k, v, w, u):
+    """out only (state discarded); S_0 = 0."""
+    B, S, H, n = r.shape
+    S0 = jnp.zeros((B, H, n, n), jnp.float32)
+    out, _ = wkv_scan_ref(r, k, v, w, u, S0)
+    return out

@@ -1,0 +1,3 @@
+"""Launch layer: production meshes, sharding plans, step builders, dry-run,
+and the train/serve drivers. dryrun.py must be executed as its own process
+(it forces 512 placeholder devices before jax init)."""

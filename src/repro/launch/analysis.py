@@ -1,0 +1,127 @@
+"""Per-stage roofline accounting.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, ignoring
+the trip count (verified empirically on the CPU backend in this repo). Since
+depth is scanned, the rolled module's numbers undercount layers. Correction:
+
+    total_cost = rolled_module_cost + sum_stages (repeats_s - 1) * body_cost_s
+
+where ``body_cost_s`` comes from lowering exactly the scan body (the model's
+group_fwd / group_decode closure, fwd+bwd for training) against the same
+shardings on the same mesh, where it is loop-free and therefore counted
+exactly. Memory analysis is NOT corrected (buffers are reused across
+iterations, so the rolled module's temp bytes are the true peak).
+
+Collective bytes get the same treatment: collectives inside the scanned body
+appear once in the rolled HLO, so per-stage collective bytes are scaled by
+(repeats - 1) as well.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import compile_stages
+from repro.models.transformer import Model
+
+Pytree = Any
+
+__all__ = ["stage_costs", "CostTriple"]
+
+
+class CostTriple(dict):
+    """{"flops", "bytes", "collective_bytes"} per device."""
+
+    @staticmethod
+    def of(flops: float, bytes_: float, coll: float) -> "CostTriple":
+        return CostTriple(flops=flops, bytes=bytes_, collective_bytes=coll)
+
+    def __add__(self, o):  # type: ignore[override]
+        return CostTriple.of(self["flops"] + o["flops"], self["bytes"] + o["bytes"],
+                             self["collective_bytes"] + o["collective_bytes"])
+
+    def __mul__(self, k: float):
+        return CostTriple.of(self["flops"] * k, self["bytes"] * k,
+                             self["collective_bytes"] * k)
+
+
+def _cost_of(lowered, parse_collectives: Callable[[str], dict]) -> CostTriple:
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    return CostTriple.of(float(ca.get("flops", 0.0)),
+                         float(ca.get("bytes accessed", 0.0)),
+                         float(colls["total_bytes"]))
+
+
+def _is_sds(x) -> bool:
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _drop_axis(sds: jax.ShapeDtypeStruct, mesh, axis: int) -> jax.ShapeDtypeStruct:
+    """SDS with dim ``axis`` removed, preserving the sharding of other dims."""
+    spec = sds.sharding.spec if sds.sharding is not None else P(*([None] * len(sds.shape)))
+    spec = tuple(spec) + (None,) * (len(sds.shape) - len(tuple(spec)))
+    new_shape = sds.shape[:axis] + sds.shape[axis + 1:]
+    new_spec = P(*(spec[:axis] + spec[axis + 1:]))
+    return jax.ShapeDtypeStruct(new_shape, sds.dtype, sharding=NamedSharding(mesh, new_spec))
+
+
+def _positions_like(x: jax.Array) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(x.shape[-2]), x.shape[:-1])
+
+
+def stage_costs(model: Model, *, mesh, kind: str,
+                x_sds: jax.ShapeDtypeStruct,
+                params_sds: Pytree,
+                cache_sds: Pytree | None,
+                parse_collectives: Callable[[str], dict],
+                gossip: bool = False) -> CostTriple:
+    """sum_stages (repeats - 1) * body_cost — the while-loop correction term.
+
+    ``x_sds``: SDS of the activation entering the stages — (B, S, D) sharded
+    like the embedding output ((G, B/G, S, D) in gossip mode). ``params_sds``
+    leaves carry their shardings (as passed to the main lowering).
+    """
+    cfg = model.cfg
+    stages = compile_stages(cfg.n_layers, cfg.block_pattern)
+    repeat_axis = 1 if gossip else 0
+    total = CostTriple.of(0.0, 0.0, 0.0)
+    for s_idx, (kinds, repeats) in enumerate(stages):
+        if repeats <= 1:
+            continue
+        sp_sds = jax.tree.map(lambda s: _drop_axis(s, mesh, repeat_axis),
+                              params_sds["stages"][s_idx], is_leaf=_is_sds)
+
+        if kind == "train":
+            group = model.group_fwd_fn(kinds)
+
+            if gossip:
+                def loss_body(p, x):
+                    def one(p_, x_):
+                        y, aux = group(x_, p_, _positions_like(x_))
+                        return jnp.sum(y.astype(jnp.float32)) + aux
+                    return jnp.mean(jax.vmap(one)(p, x))
+            else:
+                def loss_body(p, x):
+                    y, aux = group(x, p, _positions_like(x))
+                    return jnp.sum(y.astype(jnp.float32)) + aux
+
+            lowered = jax.jit(jax.grad(loss_body, argnums=(0, 1))).lower(sp_sds, x_sds)
+        elif kind == "prefill":
+            group = model.group_fwd_fn(kinds)
+            lowered = jax.jit(
+                lambda p, x: group(x, p, _positions_like(x))).lower(sp_sds, x_sds)
+        else:  # decode
+            group_dec = model.group_decode_fn(kinds)
+            c_sds = jax.tree.map(lambda s: _drop_axis(s, mesh, 0),
+                                 cache_sds[s_idx], is_leaf=_is_sds)
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = jax.jit(
+                lambda p, x, c, pos: group_dec(x, p, c, pos)).lower(
+                    sp_sds, x_sds, c_sds, pos_sds)
+        total = total + _cost_of(lowered, parse_collectives) * (repeats - 1)
+    return total

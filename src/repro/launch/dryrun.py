@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+against ShapeDtypeStruct inputs, print memory/cost analysis, and extract the
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices. Nothing
+else in the repo sets this flag (tests/benches see the real single device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+  ... --multi-pod            (2 x 16 x 16 mesh; default single-pod 16 x 16)
+  ... --consensus gossip     (paper technique; gossip axis = pod or data)
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from dataclasses import asdict, dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, InputShape, skip_reason
+from repro.launch import input_specs as ispecs
+from repro.launch import shardings as shard
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import Model
+
+# ------------------------------------------------------------ HW constants
+PEAK_FLOPS = 197e12      # TPU v5e bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+from repro.launch.hlo_parse import (  # noqa: F401 — re-exported API
+    _COLL_RE, _GROUPS_RE, _shape_bytes, parse_collectives)
+
+
+def model_flops(cfg, shape: InputShape, n_params_active: int, n_params_total: int) -> float:
+    """6*N*D with N = active params (MoE counts top-k+shared experts only)."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * n_params_active * tokens
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def count_active_params(cfg, params) -> int:
+    """Total params minus the non-routed share of expert weights."""
+    total = count_params(params)
+    if cfg.moe is None:
+        return total
+    import numpy as np
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        ps = shard._path_str(path)
+        if re.search(r"ch/w[igo]$", ps):
+            expert += int(np.prod(leaf.shape))
+    active = total - expert + int(expert * cfg.moe.top_k / cfg.moe.n_experts)
+    return active
+
+
+@dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    consensus: str
+    status: str                  # ok | skipped | failed
+    reason: str = ""
+    compile_secs: float = 0.0
+    per_device_bytes: int = 0    # peak (args+temp+output) from memory_analysis
+    arg_bytes: int = 0
+    temp_bytes: int = 0
+    hlo_flops: float = 0.0       # per device, scan-corrected (see analysis.py)
+    hlo_bytes: float = 0.0       # per device, scan-corrected
+    collective_bytes: float = 0.0
+    rolled_flops: float = 0.0    # uncorrected (while bodies counted once)
+    collectives: dict | None = None
+    n_params: int = 0
+    n_params_active: int = 0
+    model_flops_global: float = 0.0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_flop_ratio: float = 0.0
+
+
+def _roofline(res: DryrunResult, n_chips: int) -> None:
+    res.compute_s = res.hlo_flops / PEAK_FLOPS
+    res.memory_s = res.hlo_bytes / HBM_BW
+    res.collective_s = res.collective_bytes / LINK_BW
+    terms = {"compute": res.compute_s, "memory": res.memory_s,
+             "collective": res.collective_s}
+    res.bottleneck = max(terms, key=terms.get)
+    global_hlo_flops = res.hlo_flops * n_chips
+    res.useful_flop_ratio = (res.model_flops_global / global_hlo_flops
+                             if global_hlo_flops else 0.0)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            consensus: str = "allreduce", remat: bool = False,
+            verbose: bool = True, extra_tag: str = "",
+            param_mode: str = "auto", seq_shard: bool = False,
+            remat_policy: str = "full", swa_variant: bool = False) -> DryrunResult:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    arch_label = arch
+    if swa_variant and not cfg.subquadratic() and not cfg.is_encoder:
+        # sliding-window variant of a full-attention arch: the sanctioned
+        # carve-in that makes long_500k runnable for dense models. Reported
+        # as "<arch>+swa" — a variant, not the assigned config.
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, name=f"{cfg.name}+swa",
+            block_pattern=tuple("swa" for _ in cfg.block_pattern), window=4096)
+        arch_label = f"{arch}+swa"
+    mesh_name = ("2x16x16" if multi_pod else "16x16") + (extra_tag or "")
+    res = DryrunResult(arch=arch_label, shape=shape_name, mesh=mesh_name,
+                       consensus=consensus, status="ok")
+
+    why = skip_reason(cfg, shape)
+    if why:
+        res.status, res.reason = "skipped", why
+        if verbose:
+            _print_result(res)
+        return res
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = Model(cfg, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+
+    gossip = consensus == "gossip"
+    replica_axis = "pod" if multi_pod else "data"
+    n_replicas = dict(zip(mesh.axis_names, mesh.devices.shape))[replica_axis] if gossip else 1
+    if gossip and shape.kind != "train":
+        res.status, res.reason = "skipped", "gossip consensus applies to training only"
+        if verbose:
+            _print_result(res)
+        return res
+
+    tcfg = steps_mod.TrainerConfig(consensus=consensus, n_replicas=n_replicas,
+                                   replica_axis=replica_axis, remat=remat,
+                                   remat_policy=remat_policy)
+
+    # logical-axis rules: batch over the DP axes (minus the gossip replica
+    # axis, which vmap handles via spmd_axis_name), vocab over `model`.
+    from repro.sharding.api import AxisRules, activate
+    batch_axes_all = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    rule_batch = tuple(a for a in batch_axes_all if not (gossip and a == replica_axis))
+    rules = AxisRules(mesh, {
+        "batch": rule_batch or None,
+        "seq": ("model" if seq_shard else None),
+        "embed": None,
+        "vocab": "model",
+        "mlp": "model",        # MoE expert hidden dim
+        "expert": None,
+        "capacity": None,
+        "heads_dec": None,     # decode q heads replicated (flash-decode)
+        "cache_seq": "model",  # decode scores sharded on cache sequence
+    })
+
+    t0 = time.time()
+    _rules_ctx = activate(rules)
+    _rules_ctx.__enter__()
+    try:
+        key = jax.random.PRNGKey(0)
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda k: steps_mod.make_train_state(model, tcfg, k), key)
+            # ZeRO-1 (weights TP-only, moments data-sharded) for models whose
+            # TP shard fits comfortably; ZeRO-3/FSDP for the 100B+ ones.
+            param_bytes = sum(x.size * x.dtype.itemsize
+                              for x in jax.tree.leaves(state_shapes["params"]))
+            mode = "zero1" if (param_mode == "auto" and param_bytes < 60e9) else \
+                ("fsdp" if param_mode == "auto" else param_mode)
+            pspecs = shard.param_specs(mesh, state_shapes["params"], gossip=gossip,
+                                       replica_axis=replica_axis, mode=mode)
+            mspecs = shard.param_specs(mesh, state_shapes["params"], gossip=gossip,
+                                       replica_axis=replica_axis, mode="fsdp")
+            sspecs = steps_mod.train_state_specs(pspecs, tcfg, moment_specs=mspecs)
+            bspecs = shard.batch_specs(mesh, cfg, shape, gossip_stacked=gossip,
+                                       replica_axis=replica_axis)
+            bshapes = ispecs.train_batch_shapes(cfg, shape,
+                                                n_replicas=n_replicas if gossip else 0)
+            state_sds = jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                state_shapes, sspecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                                 sharding=NamedSharding(mesh, bspecs[k]))
+                         for k, v in bshapes.items()}
+            step_fn = steps_mod.make_train_step(model, tcfg)
+            lowered = jax.jit(step_fn).lower(state_sds, batch_sds)
+        elif shape.kind == "prefill":
+            params_shape = jax.eval_shape(model.init, key)
+            pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params_shape))
+            mode = "zero1" if (param_mode == "auto" and pb < 60e9) else \
+                ("fsdp" if param_mode == "auto" else param_mode)
+            pspecs = shard.param_specs(mesh, params_shape, mode=mode)
+            bspecs = shard.batch_specs(mesh, cfg, shape)
+            bshapes = ispecs.train_batch_shapes(cfg, shape)
+            params_sds = jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                params_shape, pspecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                                 sharding=NamedSharding(mesh, bspecs[k]))
+                         for k, v in bshapes.items()}
+            lowered = jax.jit(steps_mod.make_prefill_step(model)).lower(params_sds, batch_sds)
+        else:  # decode
+            params_shape = jax.eval_shape(model.init, key)
+            pb = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params_shape))
+            mode = "zero1" if (param_mode == "auto" and pb < 60e9) else \
+                ("fsdp" if param_mode == "auto" else param_mode)
+            pspecs = shard.param_specs(mesh, params_shape, mode=mode)
+            params_sds = jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                params_shape, pspecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            tokens_sds, cache_shapes, pos_sds = ispecs.decode_input_shapes(model, shape)
+            cspecs = shard.cache_spec_tree(mesh, cache_shapes)
+            cache_sds = jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                   sharding=NamedSharding(mesh, sp)),
+                cache_shapes, cspecs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            tok_spec = (P(batch_axes, None)
+                        if shape.global_batch % n_chips_axis(mesh, batch_axes) == 0
+                        else P(*([None] * 2)))
+            tokens_sds = jax.ShapeDtypeStruct(tokens_sds.shape, tokens_sds.dtype,
+                                              sharding=NamedSharding(mesh, tok_spec))
+            lowered = jax.jit(steps_mod.make_serve_step(model)).lower(
+                params_sds, tokens_sds, cache_sds, pos_sds)
+
+        compiled = lowered.compile()
+        res.compile_secs = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        res.arg_bytes = int(getattr(ma, "argument_size_in_bytes", 0))
+        res.temp_bytes = int(getattr(ma, "temp_size_in_bytes", 0))
+        res.per_device_bytes = (res.arg_bytes + res.temp_bytes
+                                + int(getattr(ma, "output_size_in_bytes", 0))
+                                - int(getattr(ma, "alias_size_in_bytes", 0)))
+        ca = compiled.cost_analysis() or {}
+        res.rolled_flops = float(ca.get("flops", 0.0))
+        res.hlo_flops = res.rolled_flops
+        res.hlo_bytes = float(ca.get("bytes accessed", 0.0))
+        colls = parse_collectives(compiled.as_text())
+        res.collectives = colls
+        res.collective_bytes = float(colls["total_bytes"])
+
+        # scan-body correction (XLA counts while bodies once; analysis.py)
+        D = cfg.d_model
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if shape.kind == "train":
+            if gossip:
+                x_spec = P(replica_axis, tuple(a for a in batch_axes if a != replica_axis) or None,
+                           None, None)
+                x_shape = (n_replicas, shape.global_batch // n_replicas, shape.seq_len, D)
+            else:
+                x_spec = P(batch_axes, None, None)
+                x_shape = (shape.global_batch, shape.seq_len, D)
+        elif shape.kind == "prefill":
+            x_spec = P(batch_axes, None, None)
+            x_shape = (shape.global_batch, shape.seq_len, D)
+        else:
+            divisible = shape.global_batch % n_chips_axis(mesh, batch_axes) == 0
+            x_spec = P(batch_axes if divisible else None, None, None)
+            x_shape = (shape.global_batch, 1, D)
+        x_sds = jax.ShapeDtypeStruct(x_shape, jnp.bfloat16,
+                                     sharding=NamedSharding(mesh, x_spec))
+        from repro.launch.analysis import stage_costs
+        params_sds_tree = (state_sds["params"] if shape.kind == "train" else params_sds)
+        corr = stage_costs(model, mesh=mesh, kind=shape.kind, x_sds=x_sds,
+                           params_sds=params_sds_tree,
+                           cache_sds=(cache_sds if shape.kind == "decode" else None),
+                           parse_collectives=parse_collectives, gossip=gossip)
+        res.hlo_flops += corr["flops"]
+        res.hlo_bytes += corr["bytes"]
+        res.collective_bytes += corr["collective_bytes"]
+
+        params_tree = (state_shapes["params"] if shape.kind == "train" else params_shape)
+        res.n_params = count_params(params_tree) // (n_replicas if gossip else 1)
+        res.n_params_active = count_active_params(cfg, params_tree) // (n_replicas if gossip else 1)
+        res.model_flops_global = model_flops(cfg, shape, res.n_params_active, res.n_params)
+        _roofline(res, n_chips)
+    except Exception as e:  # noqa: BLE001 — dry-run failures are data
+        res.status = "failed"
+        res.reason = f"{type(e).__name__}: {e}"[:500]
+        res.compile_secs = time.time() - t0
+    finally:
+        _rules_ctx.__exit__(None, None, None)
+    if verbose:
+        _print_result(res)
+    return res
+
+
+def n_chips_axis(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return max(n, 1)
+
+
+def _print_result(res: DryrunResult) -> None:
+    if res.status != "ok":
+        print(f"[{res.status}] {res.arch} x {res.shape} ({res.mesh}, {res.consensus}): {res.reason}")
+        return
+    print(f"[ok] {res.arch} x {res.shape} ({res.mesh}, {res.consensus}) "
+          f"compile={res.compile_secs:.1f}s")
+    print(f"     per-device bytes: args={res.arg_bytes/2**30:.2f}GiB "
+          f"temp={res.temp_bytes/2**30:.2f}GiB total={res.per_device_bytes/2**30:.2f}GiB")
+    print(f"     per-device HLO: flops={res.hlo_flops:.3e} bytes={res.hlo_bytes:.3e} "
+          f"collective_bytes={res.collective_bytes:.3e}")
+    print(f"     roofline: compute={res.compute_s*1e3:.2f}ms memory={res.memory_s*1e3:.2f}ms "
+          f"collective={res.collective_s*1e3:.2f}ms -> {res.bottleneck}-bound; "
+          f"useful-flop ratio={res.useful_flop_ratio:.2f}")
+    if res.collectives and res.collectives["count_by_op"]:
+        print(f"     collectives: {res.collectives['count_by_op']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true", help="every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--consensus", default="allreduce", choices=("allreduce", "gossip"))
+    ap.add_argument("--remat", action=argparse.BooleanOptionalAction, default=True,
+                    help="activation-checkpoint each block group in train steps")
+    ap.add_argument("--remat-policy", default="full", choices=("full", "dots"))
+    ap.add_argument("--swa-variant", action="store_true",
+                    help="replace full attention with SWA(4096) — unlocks "
+                         "long_500k for dense archs, labeled '<arch>+swa'")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="Megatron-style sequence parallelism: residual stream "
+                         "sharded on `model` between blocks")
+    ap.add_argument("--param-mode", default="auto", choices=("auto", "fsdp", "zero1"),
+                    help="weight sharding: fsdp (ZeRO-3), zero1 (TP-only weights, "
+                         "data-sharded moments), or auto by model size")
+    ap.add_argument("--out", help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    n_fail = 0
+    records = []
+    for a, s, mp in combos:
+        res = run_one(a, s, multi_pod=mp, consensus=args.consensus, remat=args.remat,
+                      param_mode=args.param_mode, seq_shard=args.seq_shard,
+                      remat_policy=args.remat_policy, swa_variant=args.swa_variant)
+        records.append(res)
+        n_fail += res.status == "failed"
+        if args.out:
+            with open(args.out, "a") as fh:
+                fh.write(json.dumps(asdict(res)) + "\n")
+    ok = sum(r.status == "ok" for r in records)
+    sk = sum(r.status == "skipped" for r in records)
+    print(f"\n== dry-run summary: {ok} ok, {sk} skipped, {n_fail} failed "
+          f"of {len(records)} ==")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,71 @@
+"""HLO-text collective parser (no jax/device side effects — import freely).
+
+Convention (documented in EXPERIMENTS.md): ring-algorithm bytes from the
+per-device output shape O and group size g —
+  all-gather: (g-1)/g * O;  reduce-scatter: (g-1) * O (input is g*O);
+  all-reduce: 2*(g-1)/g * O;  all-to-all: (g-1)/g * O;
+  collective-permute: O.
+"""
+from __future__ import annotations
+
+import re
+
+__all__ = ["parse_collectives", "_COLL_RE", "_GROUPS_RE", "_shape_bytes"]
+
+_COLL_RE = re.compile(
+    r"%(?P<name>[\w.\-]+) = (?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^=]*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\(")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{(?P<explicit>[\d,]+)\}|\[(?P<iota>\d+),(?P<gsz>\d+)\])")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, by op kind.
+
+    Convention (documented in EXPERIMENTS.md): ring-algorithm bytes from the
+    per-device output shape O and group size g —
+      all-gather: (g-1)/g * O;  reduce-scatter: (g-1) * O (input is g*O);
+      all-reduce: 2*(g-1)/g * O;  all-to-all: (g-1)/g * O;
+      collective-permute: O.
+    """
+    totals: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_b = _shape_bytes(m.group("dtype"), m.group("dims"))
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            if gm.group("explicit") is not None:
+                g = gm.group("explicit").count(",") + 1
+            else:
+                g = int(gm.group("gsz"))
+        if op == "all-gather":
+            moved = out_b * (g - 1) / max(g, 1)
+        elif op == "reduce-scatter":
+            moved = out_b * (g - 1)
+        elif op == "all-reduce":
+            moved = 2 * out_b * (g - 1) / max(g, 1)
+        elif op == "all-to-all":
+            moved = out_b * (g - 1) / max(g, 1)
+        else:  # collective-permute
+            moved = out_b
+        totals[op] = totals.get(op, 0.0) + moved
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_op": totals, "count_by_op": count,
+            "total_bytes": sum(totals.values())}
+
+

@@ -1,0 +1,91 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, zero allocation. The dry-run lowers against these.
+
+Layouts:
+  train/prefill tokens:  {tokens (B,S) i32, targets (B,S) i32}
+  vlm:     {patch_embeds (B,P,D) bf16, tokens (B,S-P) i32, targets (B,S-P)}
+  frames:  {frames (B,S,D) bf16, targets (B,S) i32, mask (B,S) bool}
+  decode:  tokens (B,1) i32, caches (eval_shape of model.init_cache), pos ()
+
+Gossip-mode training batches gain a leading replica axis: (G, B/G, ...).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import InputShape
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+__all__ = ["train_batch_shapes", "decode_input_shapes", "make_host_batch"]
+
+
+def train_batch_shapes(cfg: ModelConfig, shape: InputShape, *,
+                       n_replicas: int = 0, act_dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    lead = (n_replicas, B // n_replicas) if n_replicas else (B,)
+
+    def sds(*dims, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct(lead + dims, dtype)
+
+    if cfg.embed_kind == "tokens":
+        return {"tokens": sds(S), "targets": sds(S)}
+    if cfg.embed_kind == "patches":
+        P_ = min(cfg.n_prefix_embeds, S // 2)
+        St = S - P_
+        return {
+            "patch_embeds": sds(P_, cfg.d_model, dtype=act_dtype),
+            "tokens": sds(St),
+            "targets": sds(St),
+        }
+    if cfg.embed_kind == "frames":
+        return {
+            "frames": sds(S, cfg.d_model, dtype=act_dtype),
+            "targets": sds(S),
+            "mask": sds(S, dtype=jnp.bool_),
+        }
+    raise ValueError(cfg.embed_kind)
+
+
+def decode_input_shapes(model: Model, shape: InputShape, *, cache_dtype=jnp.bfloat16):
+    """(tokens_sds, cache_shapes, pos_sds) for serve_step lowering."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, S, cache_dtype))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache_shapes, pos
+
+
+def make_host_batch(cfg: ModelConfig, batch: int, seq: int, *, key=None,
+                    n_replicas: int = 0, dtype=jnp.float32) -> dict[str, jax.Array]:
+    """Small *concrete* batch for CPU smoke training (same layouts)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    lead = (n_replicas, batch // n_replicas) if n_replicas else (batch,)
+
+    def toks(k, *dims):
+        return jax.random.randint(k, lead + dims, 0, cfg.vocab_size)
+
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.embed_kind == "tokens":
+        t = toks(k1, seq + 1)
+        return {"tokens": t[..., :-1], "targets": t[..., 1:]}
+    if cfg.embed_kind == "patches":
+        P_ = min(cfg.n_prefix_embeds, seq // 2)
+        t = toks(k1, seq - P_ + 1)
+        return {
+            "patch_embeds": 0.02 * jax.random.normal(k2, lead + (P_, cfg.d_model), dtype),
+            "tokens": t[..., :-1],
+            "targets": t[..., 1:],
+        }
+    if cfg.embed_kind == "frames":
+        return {
+            "frames": 0.02 * jax.random.normal(k2, lead + (seq, cfg.d_model), dtype),
+            "targets": toks(k1, seq),
+            "mask": jax.random.bernoulli(k3, 0.5, lead + (seq,)),
+        }
+    raise ValueError(cfg.embed_kind)

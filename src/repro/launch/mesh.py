@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods = 512 chips
+as (pod=2, data=16, model=16) — the `pod` axis is the gossip axis of the
+hierarchical-consensus deployment (DESIGN.md §4).
+
+``make_production_mesh`` is a function (never a module constant) so importing
+this module never touches jax device state; dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever local devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"requested {data}x{model} mesh but only {n} devices")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_sizes(mesh: jax.sharding.Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

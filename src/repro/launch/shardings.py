@@ -1,0 +1,212 @@
+"""Parameter / batch / cache PartitionSpec assignment.
+
+Divisibility-aware: every preferred mesh-axis placement is checked against
+the actual dim size and falls back to replication when it does not divide —
+one rule table serves all ten architectures on any mesh.
+
+Default layout (single pod): tensor parallel over `model`, FSDP over `data`
+(ZeRO-3-style: 405B params + AdamW moments shard over all 256 chips). The
+gossip-consensus variant stacks a leading replica axis on every param leaf,
+sharded over the gossip axis (`pod` on the multi-pod mesh) — see
+launch/steps.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import InputShape
+from repro.models.config import ModelConfig
+
+Pytree = Any
+
+__all__ = ["param_specs", "batch_specs", "cache_spec_tree", "named", "ShardingPlan"]
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    prod = int(np.prod([sizes[a] for a in axes]))
+    return dim % prod == 0
+
+
+def _spec(mesh: Mesh, shape: tuple[int, ...], *wants) -> P:
+    """wants[i] = preferred mesh axis (or tuple) for dim i; falls back to the
+    largest prefix of the axis tuple that divides, then to None."""
+    entries = []
+    used: set[str] = set()
+    for dim, want in zip(shape, wants):
+        placed = None
+        if want is not None:
+            cands = (want,) if isinstance(want, str) else tuple(want)
+            # try longest prefix first: ("model","data") -> both, then model only
+            for k in range(len(cands), 0, -1):
+                pre = tuple(a for a in cands[:k] if a not in used)
+                if pre and _fits(dim, mesh, pre):
+                    placed = pre if len(pre) > 1 else pre[0]
+                    used.update(pre)
+                    break
+        entries.append(placed)
+    return P(*entries)
+
+
+# ----------------------------------------------------------------- params
+
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    # (path regex, wants per dim) — first match wins
+    (r"embed/table$",        ("model", "data")),       # (V, D) vocab-parallel + fsdp
+    (r"attn/wq$",            ("data", "model", None)),  # (D, H, Dh)
+    (r"attn/w[kv]$",         (("model", "data"), None, None)),  # (D, Hkv, Dh) row-parallel
+    (r"attn/wo$",            ("model", None, "data")),  # (H, Dh, D)
+    (r"ch/router$",          ("data", None)),           # (D, E)
+    (r"shared/w[ig]/w$",     ("data", "model")),        # moe shared-expert mlp (D, F)
+    (r"shared/wo/w$",        ("model", "data")),
+    (r"ch/w[ig]$",           (None, "data", "model")),  # moe (E, D, F) TP-in-expert
+    (r"ch/wo$",              (None, "model", "data")),  # moe (E, F, D)
+    (r"ch/w[ig]/w$",         ("data", "model")),        # dense mlp (D, F)
+    (r"ch/wo/w$",            ("model", "data")),        # dense mlp (F, D)
+    (r"rglru/w_(gate_in|rnn_in)$", ("data", "model")),  # (D, Drnn)
+    (r"rglru/w_[ax]$",       (None, "model")),          # (Drnn, Drnn)
+    (r"rglru/conv_w$",       (None, "model")),
+    (r"rglru/(lambda|b_[ax])$", ("model",)),
+    (r"rglru/w_out$",        ("model", "data")),
+    (r"rwkv/w_[rkvg]$",      ("data", "model")),        # (D, D)
+    (r"rwkv/w_o$",           ("model", "data")),
+    (r"rwkv/cm_w[ir]$",      ("data", "model")),
+    (r"rwkv/cm_wo$",         ("model", "data")),
+    (r"rwkv/decay_lora_a$",  ("data", None)),
+    (r"rwkv/decay_lora_b$",  (None, "model")),
+    (r"rwkv/bonus_u$",       (None, None)),
+    (r"head/w$",             ("data", "model")),        # (D, V)
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _strip_axis(wants: tuple, axis: str) -> tuple:
+    out = []
+    for w in wants:
+        if w is None:
+            out.append(None)
+            continue
+        ws = tuple(a for a in ((w,) if isinstance(w, str) else w) if a != axis)
+        out.append(ws[0] if len(ws) == 1 else (ws or None))
+    return tuple(out)
+
+
+def param_specs(mesh: Mesh, params_shape: Pytree, *, gossip: bool = False,
+                replica_axis: str = "pod", mode: str = "fsdp") -> Pytree:
+    """PartitionSpec tree for a param (shape-)tree.
+
+    Stage params carry a leading layer-repeat axis (replicated) from their
+    vmapped init. ``gossip=True`` expects one more leading axis on *every*
+    leaf — the divergent-replica axis — sharded on ``replica_axis``.
+
+    ``mode``: "fsdp" shards weight dims over `data` too (ZeRO-3 — required
+    for 100B+ models); "zero1" keeps weights TP-only (replicated over
+    `data`) — XLA then never gathers *activations* to feed a data-sharded
+    contraction, which measured 6 GiB/layer on llama3-8b train_4k. ZeRO-1
+    memory is recovered by sharding the optimizer moments over `data`
+    (see steps.train_state_specs).
+    """
+
+    def leaf_spec(path, leaf) -> P:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        lead: list = []
+        if gossip:
+            lead.append(replica_axis if replica_axis in mesh.axis_names else None)
+        if ps.startswith("stages"):
+            lead.append(None)  # layer-repeat axis
+        core_shape = shape[len(lead):]
+        for rx, wants in _PARAM_RULES:
+            if re.search(rx, ps):
+                if gossip:  # the replica axis is taken by the leading dim
+                    wants = _strip_axis(wants, replica_axis)
+                if mode == "zero1":
+                    wants = _strip_axis(wants, "data")
+                core = _spec(mesh, core_shape, *wants)
+                break
+        else:
+            core = P(*([None] * len(core_shape)))
+        return P(*lead, *core)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+# ------------------------------------------------------------ batch/cache
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, shape: InputShape, *,
+                gossip_stacked: bool = False, replica_axis: str = "pod") -> dict[str, P]:
+    """Specs for the input batch dict (matches launch.input_specs layouts)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if gossip_stacked:
+        batch_axes = tuple(a for a in batch_axes if a != replica_axis)
+    bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+
+    def vec(*extra):
+        lead = (replica_axis,) if gossip_stacked and replica_axis in mesh.axis_names else ()
+        return P(*lead, bspec, *extra)
+
+    out = {"tokens": vec(None), "targets": vec(None)}
+    if cfg.embed_kind == "patches":
+        out["patch_embeds"] = vec(None, None)
+    if cfg.embed_kind == "frames":
+        out = {"frames": vec(None, None), "targets": vec(None), "mask": vec(None)}
+    return out
+
+
+def cache_spec_tree(mesh: Mesh, cache_shapes: Pytree) -> Pytree:
+    """PartitionSpec tree for an eval_shape'd decode-cache tree.
+
+    Attention KV (R, B, S_cache, Hkv, Dh): batch on `data` when divisible;
+    cache sequence on `model` (flash-decode-style partial-softmax sharding —
+    Hkv is too small to cover the axis) — memory-balances the 32k caches.
+    RWKV state (R, B, H, n, n) hits the same 5-dim rule; its H dim simply
+    fails divisibility and replicates, which is right (state is KBs).
+    Recurrent channel dims go on `model` when divisible.
+    """
+    def leaf(x) -> P:
+        shape = tuple(x.shape)
+        if len(shape) == 5:       # (R, B, S_cache, Hkv, Dh) or rwkv (R, B, H, n, n)
+            return _spec(mesh, shape, None, "data", "model", None, None)
+        if len(shape) == 4:       # rglru conv tail (R, B, W-1, D)
+            return _spec(mesh, shape, None, "data", None, "model")
+        if len(shape) == 3:       # (R, B, D) recurrent carries
+            return _spec(mesh, shape, None, "data", "model")
+        return P(*([None] * len(shape)))
+
+    return jax.tree.map(leaf, cache_shapes)
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+class ShardingPlan:
+    """Bundle of spec trees for one (arch, shape, mesh, consensus) combo."""
+
+    def __init__(self, mesh: Mesh, params: Pytree, batch: Pytree, opt: Pytree | None = None,
+                 cache: Pytree | None = None):
+        self.mesh = mesh
+        self.params = params
+        self.batch = batch
+        self.opt = opt
+        self.cache = cache

@@ -1,0 +1,4 @@
+"""Model substrate: config, shared layers, the six architecture families, and
+the scan-over-layers assembly."""
+from repro.models.config import ModelConfig, MoEConfig, compile_stages  # noqa: F401
+from repro.models.transformer import Model  # noqa: F401

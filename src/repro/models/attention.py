@@ -1,0 +1,156 @@
+"""Grouped-query attention: full / sliding-window / local, train + decode.
+
+Pure-jnp reference path (used on CPU and for the dry-run lowering); the
+Pallas flash kernel in ``repro.kernels.flash_attention`` is the TPU hot-path
+and is validated against ``_attend`` below.
+
+Layouts: activations (B, S, D); q/k/v (B, S, H, Dh) with H_kv <= H (GQA).
+KV cache for decode: (B, S_cache, H_kv, Dh) absolute-position layout for full
+attention, ring layout (pos % window) for SWA — the ring keeps the long_500k
+cache O(window) instead of O(seq), which is the sub-quadratic carve-in that
+lets SWA architectures run the 524k shape at all.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["AttnParams", "KVCache", "init_attention", "attention_train", "attention_decode", "init_kv_cache"]
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = 1.0 / jnp.sqrt(d_model)
+    return {
+        "wq": jax.random.normal(kq, (d_model, n_heads, head_dim), dtype) * s,
+        "wk": jax.random.normal(kk, (d_model, n_kv_heads, head_dim), dtype) * s,
+        "wv": jax.random.normal(kv, (d_model, n_kv_heads, head_dim), dtype) * s,
+        "wo": jax.random.normal(ko, (n_heads, head_dim, d_model), dtype) * (1.0 / jnp.sqrt(n_heads * head_dim)),
+    }
+
+
+AttnParams = dict
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_cache, H_kv, Dh)
+    v: jax.Array      # (B, S_cache, H_kv, Dh)
+
+    @property
+    def size(self) -> int:
+        return self.k.shape[1]
+
+
+def init_kv_cache(batch: int, seq: int, n_kv: int, head_dim: int, window: int, dtype=jnp.bfloat16) -> KVCache:
+    s_cache = min(seq, window) if window else seq
+    shape = (batch, s_cache, n_kv, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def _attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array,
+            score_axes: tuple | None = None) -> jax.Array:
+    """GQA-native softmax(q k^T / sqrt(dh) + mask) v, f32 softmax.
+
+    q: (B,Sq,H,Dh); k/v: (B,Sk,Hkv,Dh) with Hkv | H — queries are grouped
+    per kv head in the einsum itself, so K/V are NEVER materialized at H
+    copies (repeat_kv expansion cost ~n_rep x cache bytes in f32; observed
+    141 GB/step on mistral-large decode_32k).
+
+    ``score_axes``: optional logical axes pinned onto the
+    (B,Hkv,rep,Sq,Sk) scores — the decode path keeps scores sharded on the
+    cache-sequence axis (flash-decode), overriding XLA's backward
+    propagation of the output projection's head sharding (which otherwise
+    all-gathers the KV cache).
+    """
+    from repro.sharding.api import constrain
+
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    qg = q.reshape(b, sq, hkv, rep, dh)
+    scores = (jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+              / jnp.sqrt(float(dh)))
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)  # mask (1,1,Sq,Sk)
+    if score_axes is not None:
+        scores = constrain(scores, score_axes)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    if score_axes is not None:
+        probs = constrain(probs, score_axes)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _train_mask(seq: int, window: int, causal: bool) -> jax.Array:
+    """(1, 1, S, S) bool mask: causal (+band when window>0); full iff not causal."""
+    q_pos = jnp.arange(seq)[:, None]
+    k_pos = jnp.arange(seq)[None, :]
+    mask = jnp.ones((seq, seq), bool) if not causal else (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    return mask[None, None]
+
+
+def attention_train(p: AttnParams, x: jax.Array, positions: jax.Array, *,
+                    window: int = 0, causal: bool = True, rope_theta: float = 10000.0) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = L.rotary(q, positions, rope_theta)
+    k = L.rotary(k, positions, rope_theta)
+    mask = _train_mask(x.shape[1], window, causal)
+    out = _attend(q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p: AttnParams, x: jax.Array, cache: KVCache, pos: jax.Array, *,
+                     window: int = 0, rope_theta: float = 10000.0) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x (B, 1, D), pos scalar int32 (same for all rows).
+
+    Full attention: write at absolute slot ``pos``, attend over slots <= pos.
+    SWA: ring slot ``pos % window``, attend over the last ``window`` slots.
+    """
+    from repro.sharding.api import constrain
+
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = L.rotary(q, posb, rope_theta)
+    k_new = L.rotary(k_new, posb, rope_theta)
+    # flash-decode sharding: q heads REPLICATED (a ~100 KB gather) so the
+    # (B, H, 1, S) scores inherit the cache's sequence sharding — otherwise
+    # q's head sharding conflicts with K's seq sharding on the same mesh
+    # axis and XLA all-gathers the 2 GiB cache per layer instead.
+    q = constrain(q, ("batch", None, "heads_dec", None))
+
+    s_cache = cache.size
+    slot = (pos % window) if window else pos
+    # masked arithmetic write instead of dynamic_update_slice: a DUS on the
+    # (sequence-)sharded cache dim makes XLA SPMD all-gather the whole cache
+    # per layer per token (observed: 2 GiB/layer on mistral-large decode_32k);
+    # the where-write shards perfectly and costs one elementwise pass.
+    write = (jnp.arange(s_cache) == slot)[None, :, None, None]
+    k = jnp.where(write, k_new.astype(cache.k.dtype), cache.k)
+    v = jnp.where(write, v_new.astype(cache.v.dtype), cache.v)
+    new_cache = KVCache(k=k, v=v)
+
+    slots = jnp.arange(s_cache)
+    if window:
+        # ring: slot i holds absolute position p_i = the latest p <= pos with p % window == i
+        abs_pos = pos - ((pos - slots) % window)
+        valid = (abs_pos >= 0) & (abs_pos >= pos - window + 1)
+    else:
+        valid = slots <= pos
+    mask = valid[None, None, None, :]  # (1,1,1,S_cache)
+
+    out = _attend(q, k, v, mask,
+                  score_axes=("batch", "kv_heads", "heads_dec", None, "cache_seq"))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache

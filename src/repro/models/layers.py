@@ -1,0 +1,115 @@
+"""Shared neural layers: norms, embeddings, rotary, MLP variants.
+
+Parameters are plain dicts of jax arrays; every layer is a pure function
+(init_*, apply pairs). Stacking across scan repeats is done by the caller
+via vmapped init.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+__all__ = [
+    "rms_norm", "layer_norm", "init_norm",
+    "init_embedding", "embed", "unembed",
+    "rotary", "init_dense", "dense",
+    "init_mlp", "mlp_apply",
+]
+
+
+def init_norm(d: int, dtype=jnp.float32, with_bias: bool = False) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T (f32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["table"].astype(jnp.float32))
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """RoPE on the last dim of x: (..., S, H, Dh), positions (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> Params:
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * s}
+
+
+def dense(p: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...d,df->...f", x, p["w"])
+
+
+MLP_KINDS = ("gated_silu", "squared_relu", "gelu")
+
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, kind: str, dtype=jnp.float32) -> Params:
+    """Param dicts hold arrays only (kind is a static arg of mlp_apply) so the
+    whole tree maps cleanly under optimizers/checkpointing/gossip."""
+    ks = jax.random.split(key, 3)
+    if kind == "gated_silu":
+        return {
+            "wi": init_dense(ks[0], d, d_ff, dtype),
+            "wg": init_dense(ks[1], d, d_ff, dtype),
+            "wo": init_dense(ks[2], d_ff, d, dtype),
+        }
+    if kind in ("squared_relu", "gelu"):
+        return {
+            "wi": init_dense(ks[0], d, d_ff, dtype),
+            "wo": init_dense(ks[2], d_ff, d, dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def mlp_apply(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gated_silu":
+        h = jax.nn.silu(dense(p["wi"], x)) * dense(p["wg"], x)
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(dense(p["wi"], x)))
+    elif kind == "gelu":
+        h = jax.nn.gelu(dense(p["wi"], x))
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return dense(p["wo"], h)

@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Temporal-mixing block:  x -> [branch A: dense -> GeLU]  x  [branch B: dense ->
+causal conv1d(w=4) -> RG-LRU] -> elementwise product -> dense out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  data-dependent decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training path uses ``jax.lax.associative_scan`` on the linear recurrence —
+O(log S) depth, the TPU-native replacement for the paper-adjacent CUDA linear
+scan. Decode path is the single-step update carrying h as state. The Pallas
+kernel in ``repro.kernels.rglru_scan`` implements the blocked sequential scan
+form and is validated against ``rglru_scan_ref`` here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+__all__ = ["init_rglru_block", "rglru_scan_ref", "rglru_train", "rglru_decode", "RGLRUState", "CONV_WIDTH"]
+
+CONV_WIDTH = 4
+_C = 8.0  # decay sharpening constant from the Griffin paper
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array       # (B, D_rnn) recurrence carry
+    conv: jax.Array    # (B, CONV_WIDTH-1, D_rnn) causal conv tail
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int | None = None, dtype=jnp.float32):
+    d_rnn = d_rnn or d_model
+    ks = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d_model)
+    # Lambda init so that a^(1/c)=softplus^-1 decay spreads over [0.9, 0.999]
+    u = jax.random.uniform(ks[5], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "w_gate_in": jax.random.normal(ks[0], (d_model, d_rnn), dtype) * s,   # branch A
+        "w_rnn_in": jax.random.normal(ks[1], (d_model, d_rnn), dtype) * s,    # branch B
+        "conv_w": jax.random.normal(ks[2], (CONV_WIDTH, d_rnn), dtype) * 0.5,
+        "w_a": jax.random.normal(ks[3], (d_rnn, d_rnn), dtype) * s,
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": jax.random.normal(ks[4], (d_rnn, d_rnn), dtype) * s,
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        "lambda": lam,
+        "w_out": jax.random.normal(jax.random.fold_in(key, 7), (d_rnn, d_model), dtype) * (1.0 / jnp.sqrt(d_rnn)),
+    }
+
+
+def _gates(p, u: jax.Array):
+    """u: (..., D_rnn) post-conv activations -> (a, beta_scaled_input)."""
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u, p["w_a"]).astype(jnp.float32) + p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u, p["w_x"]).astype(jnp.float32) + p["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * u.astype(jnp.float32)
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """Oracle: h_t = a_t h_{t-1} + b_t along axis 1. a, b: (B, S, D); h0 (B, D)."""
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def _assoc_scan(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """associative_scan over composed affine maps; O(log S) depth on TPU."""
+    b0 = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a2 * a1, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return hs
+
+
+def _conv1d_train(p, x: jax.Array) -> jax.Array:
+    """Causal depthwise conv, width CONV_WIDTH. x: (B, S, D)."""
+    pads = jnp.pad(x, ((0, 0), (CONV_WIDTH - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for w in range(CONV_WIDTH):
+        out = out + pads[:, w:w + x.shape[1]].astype(jnp.float32) * p["conv_w"][w].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rglru_train(p, x: jax.Array) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B, S, D_model)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_in"]))
+    u = jnp.einsum("bsd,de->bse", x, p["w_rnn_in"])
+    u = _conv1d_train(p, u)
+    a, b = _gates(p, u)
+    h0 = jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32)
+    h = _assoc_scan(a, b, h0).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", h * gate, p["w_out"])
+
+
+def init_rglru_state(batch: int, d_rnn: int, dtype=jnp.float32) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, d_rnn), jnp.float32),
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, d_rnn), dtype),
+    )
+
+
+def rglru_decode(p, x: jax.Array, state: RGLRUState) -> tuple[jax.Array, RGLRUState]:
+    """One-token step. x: (B, 1, D_model)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_gate_in"]))
+    u = jnp.einsum("bsd,de->bse", x, p["w_rnn_in"])  # (B, 1, D)
+    hist = jnp.concatenate([state.conv, u], axis=1)  # (B, W, D)
+    u_c = jnp.einsum("bwd,wd->bd", hist.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))[:, None].astype(x.dtype)
+    a, b = _gates(p, u_c)
+    h = a[:, 0] * state.h + b[:, 0]
+    y = jnp.einsum("be,ed->bd", h.astype(x.dtype) * gate[:, 0], p["w_out"])[:, None]
+    return y, RGLRUState(h=h, conv=hist[:, 1:])

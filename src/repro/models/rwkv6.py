@@ -1,0 +1,170 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent decay, plus RWKV channel mixing.
+
+Time mixing (per head, head_dim = n):
+    state S in R^{n x n};  per step t with receptance r, key k, value v, decay
+    w_t (data-dependent, per channel) and bonus u:
+        out_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+        S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+Token shift: x'_t = lerp(x_t, x_{t-1}, mu) with per-projection learned mu
+(the paper's LoRA-parameterized shifts are folded into per-channel mu plus a
+low-rank data-dependent term for the decay, ddlerp_w).
+
+Training path: jax.lax.scan over time carrying S (exact recurrence — the
+oracle for the chunked Pallas kernel in repro.kernels.rwkv6_scan). Decode:
+single-step update; state is O(H·n·n) regardless of context length, which is
+why rwkv6 runs the 524k shape.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_rwkv6_block", "time_mix_train", "channel_mix_train",
+           "time_mix_decode", "channel_mix_decode", "RWKV6State",
+           "wkv_scan_ref", "init_rwkv6_state"]
+
+_DECAY_LORA = 32
+
+
+class RWKV6State(NamedTuple):
+    S: jax.Array        # (B, H, n, n) wkv state
+    x_prev_tm: jax.Array  # (B, D) last token for time-mix shift
+    x_prev_cm: jax.Array  # (B, D) last token for channel-mix shift
+
+
+def init_rwkv6_block(key, d_model: int, d_ff: int, head_dim: int, dtype=jnp.float32):
+    h = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    s = 1.0 / jnp.sqrt(d_model)
+    # decay base spread per channel (RWKV init: -6..-0.3 in log space)
+    ratios = jnp.arange(d_model, dtype=jnp.float32) / max(1, d_model - 1)
+    decay_base = -6.0 + 5.7 * ratios
+    return {
+        # time-mix projections
+        "w_r": jax.random.normal(ks[0], (d_model, d_model), dtype) * s,
+        "w_k": jax.random.normal(ks[1], (d_model, d_model), dtype) * s,
+        "w_v": jax.random.normal(ks[2], (d_model, d_model), dtype) * s,
+        "w_g": jax.random.normal(ks[3], (d_model, d_model), dtype) * s,
+        "w_o": jax.random.normal(ks[4], (d_model, d_model), dtype) * s,
+        # token-shift interpolants (mu) per projection
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_v": jnp.full((d_model,), 0.5, dtype),
+        "mu_g": jnp.full((d_model,), 0.5, dtype),
+        "mu_w": jnp.full((d_model,), 0.5, dtype),
+        # data-dependent decay: w_t = exp(-exp(decay_base + lora(x')))
+        "decay_base": decay_base,
+        "decay_lora_a": jax.random.normal(ks[5], (d_model, _DECAY_LORA), dtype) * s,
+        "decay_lora_b": jax.random.normal(ks[6], (_DECAY_LORA, d_model), dtype) * 0.01,
+        "bonus_u": jax.random.normal(ks[7], (h, head_dim), jnp.float32) * 0.1,
+        # channel mix
+        "cm_mu": jnp.full((d_model,), 0.5, dtype),
+        "cm_wi": jax.random.normal(ks[8], (d_model, d_ff), dtype) * s,
+        "cm_wo": jax.random.normal(ks[9], (d_ff, d_model), dtype) * (1.0 / jnp.sqrt(d_ff)),
+        "cm_wr": jax.random.normal(ks[10], (d_model, d_model), dtype) * s,
+        "ln_x_scale": jnp.ones((d_model,), dtype),  # group-norm on wkv output
+    }
+
+
+def _shift_train(x: jax.Array, x0: jax.Array) -> jax.Array:
+    """x_{t-1} along seq axis; position 0 gets x0 (decode carry or zeros)."""
+    return jnp.concatenate([x0[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def wkv_scan_ref(r, k, v, w, u, S0):
+    """Oracle wkv recurrence.
+
+    r,k,v: (B, S, H, n); w: (B, S, H, n) decay in (0,1); u: (H, n) bonus;
+    S0: (B, H, n, n). Returns (out (B,S,H,n), S_final).
+    S layout: S[b,h,i,j] accumulates k_i v_j.
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, n)
+        kv = jnp.einsum("bhi,bhj->bhij", k_t, v_t)
+        out = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None] [..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, out
+
+    seq = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+           jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    S, outs = jax.lax.scan(step, S0, seq)
+    return jnp.moveaxis(outs, 0, 1), S
+
+
+def _heads(x, head_dim):
+    b, s, d = x.shape
+    return x.reshape(b, s, d // head_dim, head_dim)
+
+
+def _time_mix(p, x: jax.Array, x_prev: jax.Array, S0: jax.Array, head_dim: int):
+    """Shared by train (S: full seq) and decode (S: one step)."""
+    xs = x_prev
+    r = jnp.einsum("bsd,de->bse", _lerp(x, xs, p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,de->bse", _lerp(x, xs, p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,de->bse", _lerp(x, xs, p["mu_v"]), p["w_v"])
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", _lerp(x, xs, p["mu_g"]), p["w_g"]))
+    xw = _lerp(x, xs, p["mu_w"])
+    dd = jnp.einsum("bsd,dr,re->bse", xw, p["decay_lora_a"], p["decay_lora_b"])
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32) + dd.astype(jnp.float32)))  # (B,S,D) in (0,1)
+
+    hd = head_dim
+    rh, kh, vh = _heads(r, hd).astype(jnp.float32), _heads(k, hd).astype(jnp.float32), _heads(v, hd).astype(jnp.float32)
+    wh = _heads(w, hd)
+    out, S = wkv_scan_ref(rh, kh, vh, wh, p["bonus_u"].astype(jnp.float32), S0)
+    b, s, h, n = out.shape
+    o = out.reshape(b, s, h * n)
+    # per-head group norm
+    o = o.reshape(b, s, h, n)
+    o = (o - o.mean(-1, keepdims=True)) * jax.lax.rsqrt(o.var(-1, keepdims=True) + 1e-5)
+    o = o.reshape(b, s, h * n) * p["ln_x_scale"].astype(jnp.float32)
+    o = (o.astype(x.dtype) * g)
+    return jnp.einsum("bsd,de->bse", o, p["w_o"]), S
+
+
+def _channel_mix(p, x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    xk = _lerp(x, x_prev, p["cm_mu"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xk, p["cm_wr"]).astype(jnp.float32)).astype(x.dtype)
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,de->bse", xk, p["cm_wi"])))
+    return rr * jnp.einsum("bsd,de->bse", h, p["cm_wo"])
+
+
+def time_mix_train(p, x: jax.Array, head_dim: int) -> jax.Array:
+    """Full-sequence time mixing; x is the post-norm stream (B, S, D)."""
+    b, s, d = x.shape
+    S0 = jnp.zeros((b, d // head_dim, head_dim, head_dim), jnp.float32)
+    tm, _ = _time_mix(p, x, _shift_train(x, jnp.zeros_like(x[:, 0])), S0, head_dim)
+    return tm
+
+
+def channel_mix_train(p, x: jax.Array) -> jax.Array:
+    """Full-sequence channel mixing; x is the post-norm stream (B, S, D)."""
+    return _channel_mix(p, x, _shift_train(x, jnp.zeros_like(x[:, 0])))
+
+
+def init_rwkv6_state(batch: int, d_model: int, head_dim: int, dtype=jnp.float32) -> RWKV6State:
+    h = d_model // head_dim
+    return RWKV6State(
+        S=jnp.zeros((batch, h, head_dim, head_dim), jnp.float32),
+        x_prev_tm=jnp.zeros((batch, d_model), dtype),
+        x_prev_cm=jnp.zeros((batch, d_model), dtype),
+    )
+
+
+def time_mix_decode(p, x: jax.Array, state: RWKV6State, head_dim: int):
+    """One-token time mixing; x: (B, 1, D) post-norm."""
+    tm, S = _time_mix(p, x, state.x_prev_tm[:, None], state.S, head_dim)
+    return tm, state._replace(S=S, x_prev_tm=x[:, 0])
+
+
+def channel_mix_decode(p, x: jax.Array, state: RWKV6State):
+    """One-token channel mixing; x: (B, 1, D) post-norm."""
+    cm = _channel_mix(p, x, state.x_prev_cm[:, None])
+    return cm, state._replace(x_prev_cm=x[:, 0])

@@ -1,0 +1,297 @@
+"""Model assembly: scan-over-layers decoder/encoder covering all six assigned
+families (dense GQA, MoE, RG-LRU hybrid, RWKV-6 SSM, VLM backbone, audio
+encoder).
+
+Depth is organized as *stages* (see config.compile_stages): each stage scans a
+parameter tree stacked over ``repeats`` of a fixed block-kind group, so HLO
+size is O(pattern length), not O(n_layers) — a 126-layer model lowers as fast
+as a 2-layer one, and ``cost_analysis`` stays exact (XLA multiplies loop-body
+costs by trip count).
+
+Two entry points per model:
+  * ``loss(params, batch)``      — training / prefill objective (+ aux)
+  * ``decode_step(params, tok, cache, pos)`` — one-token serve step
+
+Caches are pytrees stacked the same way as stage params, so the very same
+scan drives decode.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as G
+from repro.models import rwkv6 as W
+from repro.models.config import ModelConfig, compile_stages
+from repro.sharding.api import constrain
+
+Params = Any
+
+__all__ = ["Model"]
+
+_ATTN_KINDS = ("attn", "swa", "local_attn")
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": L.init_norm(cfg.d_model, dtype)}
+    if kind in _ATTN_KINDS:
+        p["attn"] = A.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, dtype)
+    elif kind == "rglru":
+        p["rglru"] = G.init_rglru_block(ks[0], cfg.d_model, dtype=dtype)
+    elif kind == "rwkv6":
+        p["rwkv"] = W.init_rwkv6_block(ks[0], cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim, dtype)
+        p["norm2"] = L.init_norm(cfg.d_model, dtype)
+        return p  # rwkv brings its own channel mix
+    else:
+        raise ValueError(kind)
+    p["norm2"] = L.init_norm(cfg.d_model, dtype)
+    if cfg.moe is not None:
+        p["ch"] = M.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.mlp, dtype)
+    else:
+        p["ch"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    dtype: Any = jnp.float32        # activation dtype (bf16 on TPU)
+    param_dtype: Any = jnp.float32
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> Params:
+        cfg = self.cfg
+        stages = compile_stages(cfg.n_layers, cfg.block_pattern)
+        kemb, khead, *kstages = jax.random.split(key, 2 + len(stages))
+        params: dict[str, Any] = {}
+        if cfg.embed_kind == "tokens" or cfg.family == "vlm":
+            params["embed"] = L.init_embedding(kemb, cfg.vocab_size, cfg.d_model, self.param_dtype)
+        params["final_norm"] = L.init_norm(cfg.d_model, self.param_dtype)
+        if not cfg.tie_embeddings or cfg.embed_kind == "frames":
+            params["head"] = L.init_dense(khead, cfg.d_model, cfg.vocab_size, self.param_dtype)
+        params["stages"] = []
+        for (kinds, repeats), ks in zip(stages, kstages):
+            def group_init(k):
+                kb = jax.random.split(k, len(kinds))
+                return {f"blk{j}": _init_block(kb[j], kind, cfg, self.param_dtype)
+                        for j, kind in enumerate(kinds)}
+            params["stages"].append(jax.vmap(group_init)(jax.random.split(ks, repeats)))
+        return params
+
+    # ----------------------------------------------------------- norms/mixes
+    def _norm(self, p, x):
+        return L.rms_norm(p, x) if self.cfg.norm == "rmsnorm" else L.layer_norm(p, x)
+
+    def _channel(self, p, x):
+        """Returns (y, aux_losses_scalar)."""
+        if self.cfg.moe is not None:
+            y, aux = M.moe_apply(p, x, self.cfg.moe, self.cfg.mlp)
+            return y, aux.load_balance_loss + aux.router_z_loss
+        return L.mlp_apply(p, x, self.cfg.mlp), jnp.float32(0.0)
+
+    def _block_train(self, kind: str, p, x, positions):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        if kind in _ATTN_KINDS:
+            window = cfg.window if kind in ("swa", "local_attn") else 0
+            h = A.attention_train(p["attn"], self._norm(p["norm1"], x), positions,
+                                  window=window, causal=not cfg.is_encoder,
+                                  rope_theta=cfg.rope_theta)
+            x = x + h
+            ch, aux = self._channel(p["ch"], self._norm(p["norm2"], x))
+            x = x + ch
+        elif kind == "rglru":
+            x = x + G.rglru_train(p["rglru"], self._norm(p["norm1"], x))
+            ch, aux = self._channel(p["ch"], self._norm(p["norm2"], x))
+            x = x + ch
+        elif kind == "rwkv6":
+            x = x + W.time_mix_train(p["rwkv"], self._norm(p["norm1"], x), cfg.rwkv_head_dim)
+            x = x + W.channel_mix_train(p["rwkv"], self._norm(p["norm2"], x))
+        else:
+            raise ValueError(kind)
+        x = constrain(x, ("batch", "seq", "embed"))
+        return x, aux
+
+    # -------------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_kind == "tokens":
+            x = L.embed(params["embed"], batch["tokens"]).astype(self.dtype)
+        elif cfg.embed_kind == "patches":
+            tok = L.embed(params["embed"], batch["tokens"]).astype(self.dtype)
+            img = batch["patch_embeds"].astype(self.dtype)
+            x = jnp.concatenate([img, tok], axis=1)
+        elif cfg.embed_kind == "frames":
+            x = batch["frames"].astype(self.dtype)
+        else:
+            raise ValueError(cfg.embed_kind)
+        return constrain(x, ("batch", "seq", "embed"))
+
+    def group_fwd_fn(self, kinds: tuple[str, ...], *, remat: bool = False,
+                     remat_policy: str = "full"):
+        """(x, stage_params_slice, positions) -> (x, aux) for one block group —
+        the scan body; exposed for the per-stage roofline analysis.
+
+        remat_policy: "full" recomputes everything in the backward pass
+        (min memory, max HBM re-reads); "dots" saves matmul outputs and
+        recomputes only elementwise ops (≈2x fewer backward reads for ~10-20%
+        more live memory — the right trade for memory-BANDWIDTH-bound MoE)."""
+
+        def group_fwd(x, p, positions):
+            aux = jnp.float32(0.0)
+            for j, kind in enumerate(kinds):
+                x, a = self._block_train(kind, p[f"blk{j}"], x, positions)
+                aux = aux + a
+            return x, aux
+
+        if not remat:
+            return group_fwd
+        if remat_policy == "dots":
+            return jax.checkpoint(
+                group_fwd,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return jax.checkpoint(group_fwd)
+
+    def forward(self, params: Params, batch: dict, *, remat: bool = False,
+                remat_policy: str = "full"):
+        """Full-sequence forward -> (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        stages = compile_stages(cfg.n_layers, cfg.block_pattern)
+
+        aux_total = jnp.float32(0.0)
+        for (kinds, repeats), stage_params in zip(stages, params["stages"]):
+            group_fwd = self.group_fwd_fn(kinds, remat=remat, remat_policy=remat_policy)
+
+            def scan_body(carry, p):
+                x, aux = carry
+                x, a = group_fwd(x, p, positions)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(scan_body, (x, aux_total), stage_params)
+
+        x = self._norm(params["final_norm"], x)
+        if "head" in params:
+            logits = L.dense(params["head"], x.astype(jnp.float32))
+        else:
+            logits = L.unembed(params["embed"], x)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        return logits, aux_total
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params: Params, batch: dict, *, remat: bool = False,
+             remat_policy: str = "full"):
+        """Scalar objective + metrics. Batch layouts:
+        tokens:  {tokens (B,S), targets (B,S)}
+        patches: {patch_embeds (B,P,D), tokens (B,St), targets (B,St)}
+        frames:  {frames (B,S,D), targets (B,S), mask (B,S) bool}
+        """
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat, remat_policy=remat_policy)
+        targets = batch["targets"]
+        if cfg.embed_kind == "patches":
+            logits = logits[:, -targets.shape[1]:]  # loss on text positions only
+        # fused CE: lse(logits) - logit[target] — avoids materializing the
+        # full (B, S, V) log-softmax array (one less 128k-vocab round trip)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = lse - tgt
+        if cfg.embed_kind == "frames":
+            mask = batch["mask"].astype(jnp.float32)
+            ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            ce = jnp.mean(nll)
+        total = ce + aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ---------------------------------------------------------------- cache
+    def init_cache(self, batch: int, seq_len: int, cache_dtype=jnp.bfloat16) -> list:
+        """Per-stage stacked decode state. seq_len = context capacity."""
+        cfg = self.cfg
+        if not cfg.supports_decode():
+            raise ValueError(f"{cfg.name} is encoder-only: no decode path")
+        stages = compile_stages(cfg.n_layers, cfg.block_pattern)
+        caches = []
+        for kinds, repeats in stages:
+            group: dict[str, Any] = {}
+            for j, kind in enumerate(kinds):
+                if kind in _ATTN_KINDS:
+                    window = cfg.window if kind in ("swa", "local_attn") else 0
+                    c = A.init_kv_cache(batch, seq_len, cfg.n_kv_heads, cfg.head_dim,
+                                        window, cache_dtype)
+                elif kind == "rglru":
+                    c = G.init_rglru_state(batch, cfg.d_model, self.dtype)
+                elif kind == "rwkv6":
+                    c = W.init_rwkv6_state(batch, cfg.d_model, cfg.rwkv_head_dim, self.dtype)
+                group[f"blk{j}"] = c
+            # stack over repeats
+            caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (repeats,) + a.shape), group))
+        return caches
+
+    def group_decode_fn(self, kinds: tuple[str, ...]):
+        """(x, stage_params_slice, cache_slice, pos) -> (x, new_cache) —
+        the decode scan body; exposed for per-stage roofline analysis."""
+
+        def group_dec(x, p, c, pos):
+            new_c = {}
+            for j, kind in enumerate(kinds):
+                x, cj = self._block_decode(kind, p[f"blk{j}"], x, c[f"blk{j}"], pos)
+                new_c[f"blk{j}"] = cj
+            return x, new_c
+
+        return group_dec
+
+    def _block_decode(self, kind: str, p, x, cache, pos):
+        cfg = self.cfg
+        if kind in _ATTN_KINDS:
+            window = cfg.window if kind in ("swa", "local_attn") else 0
+            h, cache = A.attention_decode(p["attn"], self._norm(p["norm1"], x), cache, pos,
+                                          window=window, rope_theta=cfg.rope_theta)
+            x = x + h
+            ch, _ = self._channel(p["ch"], self._norm(p["norm2"], x))
+            x = x + ch
+        elif kind == "rglru":
+            h, cache = G.rglru_decode(p["rglru"], self._norm(p["norm1"], x), cache)
+            x = x + h
+            ch, _ = self._channel(p["ch"], self._norm(p["norm2"], x))
+            x = x + ch
+        elif kind == "rwkv6":
+            tm, cache = W.time_mix_decode(p["rwkv"], self._norm(p["norm1"], x), cache,
+                                          cfg.rwkv_head_dim)
+            x = x + tm
+            cm, cache = W.channel_mix_decode(p["rwkv"], self._norm(p["norm2"], x), cache)
+            x = x + cm
+        return x, cache
+
+    def decode_step(self, params: Params, tokens: jax.Array, caches: list, pos: jax.Array):
+        """One-token serve step. tokens: (B, 1) -> (logits (B,1,V), new caches)."""
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens).astype(self.dtype)
+        x = constrain(x, ("batch", "seq", "embed"))
+        stages = compile_stages(cfg.n_layers, cfg.block_pattern)
+        new_caches = []
+        for (kinds, repeats), stage_params, stage_cache in zip(stages, params["stages"], caches):
+            group_dec = self.group_decode_fn(kinds)
+
+            def scan_body(x, pc):
+                p, c = pc
+                return group_dec(x, p, c, pos)
+
+            x, nc = jax.lax.scan(scan_body, x, (stage_params, stage_cache))
+            new_caches.append(nc)
+        x = self._norm(params["final_norm"], x)
+        if "head" in params:
+            logits = L.dense(params["head"], x.astype(jnp.float32))
+        else:
+            logits = L.unembed(params["embed"], x)
+        return logits, new_caches

@@ -1,0 +1,16 @@
+"""Optimizer substrate (optax is not installed in the container; built here).
+
+A minimal GradientTransformation protocol compatible with the familiar
+(init, update) pair, plus the schedules the paper and the LM trainer need.
+"""
+from repro.optim.transforms import (  # noqa: F401
+    GradientTransformation,
+    adamw,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    scale,
+    scale_by_schedule,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_warmup, pegasos_schedule  # noqa: F401

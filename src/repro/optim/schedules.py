@@ -1,0 +1,27 @@
+"""Learning-rate schedules, including the paper's Pegasos schedule."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["constant", "pegasos_schedule", "cosine_warmup"]
+
+
+def constant(value: float):
+    return lambda step: jnp.float32(value)
+
+
+def pegasos_schedule(lam: float):
+    """alpha_t = 1 / (lambda * t), t 1-based — paper step (d)."""
+    return lambda step: 1.0 / (lam * (step.astype(jnp.float32) + 1.0))
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak * (s + 1.0) / max(1, warmup_steps)  # nonzero lr at step 0
+        prog = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return sched

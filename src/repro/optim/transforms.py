@@ -1,0 +1,165 @@
+"""Gradient transformations (optax-style, self-contained).
+
+Every transform is an (init_fn, update_fn) pair over pytrees; ``chain``
+composes them; ``apply_updates`` applies the final update to params. State is
+a plain pytree so it checkpoints and gossips like any other training state.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+__all__ = [
+    "GradientTransformation",
+    "chain",
+    "scale",
+    "scale_by_schedule",
+    "clip_by_global_norm",
+    "sgd",
+    "adamw",
+    "apply_updates",
+    "global_norm",
+]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree], tuple[Pytree, Pytree]]
+    # update(grads, state, params) -> (updates, new_state)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        scale_ = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale_).astype(g.dtype), grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScheduleState(NamedTuple):
+    step: jax.Array
+
+
+def scale_by_schedule(schedule: Schedule) -> GradientTransformation:
+    def init(params):
+        return ScheduleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        lr = schedule(state.step)
+        out = jax.tree.map(lambda g: g * lr.astype(g.dtype), grads)
+        return out, ScheduleState(step=state.step + 1)
+
+    return GradientTransformation(init, update)
+
+
+class MomentumState(NamedTuple):
+    momentum: Pytree
+
+
+def sgd(learning_rate: float | Schedule, momentum: float = 0.0, nesterov: bool = False) -> GradientTransformation:
+    lr_sched: Schedule = learning_rate if callable(learning_rate) else (lambda s: jnp.float32(learning_rate))
+
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else ()
+        return (MomentumState(mom), ScheduleState(jnp.zeros((), jnp.int32)))
+
+    def update(grads, state, params):
+        mstate, sstate = state
+        if momentum:
+            new_m = jax.tree.map(lambda m, g: momentum * m + g, mstate.momentum, grads)
+            eff = (jax.tree.map(lambda m, g: momentum * m + g, new_m, grads)
+                   if nesterov else new_m)
+            mstate = MomentumState(new_m)
+        else:
+            eff = grads
+        lr = lr_sched(sstate.step)
+        updates = jax.tree.map(lambda g: (-lr * g.astype(jnp.float32)).astype(g.dtype), eff)
+        return updates, (mstate, ScheduleState(sstate.step + 1))
+
+    return GradientTransformation(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw(
+    learning_rate: float | Schedule,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> GradientTransformation:
+    """AdamW with fp32 moments regardless of param dtype (bf16-safe)."""
+    lr_sched: Schedule = learning_rate if callable(learning_rate) else (lambda s: jnp.float32(learning_rate))
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=jax.tree.map(f32, params),
+                         nu=jax.tree.map(f32, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = lr_sched(state.step)
+
+        def upd(m, v, p):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

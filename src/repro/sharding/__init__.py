@@ -1,0 +1,1 @@
+from repro.sharding.api import AxisRules, activate, constrain, current_rules  # noqa: F401

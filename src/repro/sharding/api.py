@@ -1,0 +1,101 @@
+"""Logical-axis sharding: model code names axes ("batch", "embed", ...);
+launch code binds them to mesh axes and activates the binding around tracing.
+
+``constrain(x, axes)`` is an identity outside an active binding, so the same
+model code runs on one CPU device (tests) and on the production mesh
+(dry-run/train) unchanged — the MaxText "logical axis rules" pattern.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "activate", "constrain", "logical_to_spec", "param_spec", "current_rules"]
+
+_state = threading.local()
+
+
+class AxisRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    def __init__(self, mesh: Mesh, rules: dict[str, Any]):
+        self.mesh = mesh
+        self.rules = dict(rules)
+
+    def spec(self, logical_axes: Sequence[str | None]) -> P:
+        entries = []
+        used: set[str] = set()
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax is not None else None
+            # a mesh axis may appear at most once in a spec
+            if m is None:
+                entries.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else tuple(m)
+            ms = tuple(a for a in ms if a not in used)
+            used.update(ms)
+            entries.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+        return P(*entries)
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activate(rules: AxisRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint under the active rules; identity otherwise.
+
+    Mesh-axis placements that do not divide the dim size are dropped (e.g.
+    batch=1 decode can never shard its batch axis) — one rule set serves all
+    shapes. Inside vmap the array rank is smaller than the annotation; the
+    leading logical axes are dropped to match (the mapped axis is handled by
+    the caller's ``spmd_axis_name``).
+    """
+    r = current_rules()
+    if r is None:
+        return x
+    axes = list(logical_axes)
+    if len(axes) > x.ndim:
+        axes = axes[len(axes) - x.ndim:]
+    elif len(axes) < x.ndim:
+        axes = [None] * (x.ndim - len(axes)) + axes
+    sizes = dict(zip(r.mesh.axis_names, r.mesh.devices.shape))
+    spec_entries = []
+    for dim, entry in zip(x.shape, tuple(r.spec(axes))):
+        if entry is None:
+            spec_entries.append(None)
+            continue
+        names = (entry,) if isinstance(entry, str) else tuple(entry)
+        prod = 1
+        kept = []
+        for a in names:
+            if dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                prod *= sizes[a]
+        spec_entries.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*spec_entries)))
+
+
+def logical_to_spec(rules: AxisRules, logical_axes: Sequence[str | None]) -> P:
+    return rules.spec(logical_axes)
+
+
+def param_spec(rules: AxisRules, path: str, shape: tuple[int, ...]) -> P:
+    """Fallback param spec derivation — launch.shardings assigns real specs;
+    this exists for ad-hoc tools."""
+    return P(*([None] * len(shape)))

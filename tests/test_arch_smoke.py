@@ -1,0 +1,89 @@
+"""Deliverable (f): per-architecture smoke tests — every assigned arch as a
+REDUCED variant (<=2 layers + pattern tail, d_model<=512, <=4 experts) runs
+one forward + one train step on CPU with shape and finiteness assertions;
+decoders additionally run a decode step against a cache."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import input_specs as ispecs
+from repro.launch import steps as steps_mod
+from repro.models.transformer import Model
+
+B, S = 2, 32
+
+
+def _batch(cfg):
+    return ispecs.make_host_batch(cfg, B, S, key=jax.random.PRNGKey(7))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers <= max(2, len(cfg.block_pattern)) and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    model = Model(cfg)
+    tcfg = steps_mod.TrainerConfig(optimizer="sgd", lr=1e-2, total_steps=3,
+                                   warmup_steps=1)
+    state = steps_mod.make_train_state(model, tcfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    logits, aux = model.forward(state["params"], batch)
+    # patches layout: P prefix + (S - P) text = S total positions
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    step_fn = jax.jit(steps_mod.make_train_step(model, tcfg))
+    new_state, metrics = step_fn(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    changed = jax.tree.map(lambda a, b: bool(jnp.any(a != b)),
+                           state["params"], new_state["params"])
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS
+                                  if get_config(a).supports_decode()])
+def test_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, 64, jnp.float32)
+    logits, new_cache = jax.jit(model.decode_step)(
+        params, jnp.zeros((B, 1), jnp.int32), cache, jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert-xlarge").reduced()
+    with pytest.raises(ValueError, match="encoder-only"):
+        Model(cfg).init_cache(2, 8)
+
+
+def test_full_configs_exact():
+    """The 10 full configs carry the exact assigned hyperparameters."""
+    expect = {
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "rwkv6-3b": (32, 2560, 0, 0, 8960, 65536),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    }
+    for arch, (L, D, H, KV, F, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == \
+            (L, D, H, KV, F, V), arch
+    assert get_config("mixtral-8x22b").moe.n_experts == 8
+    assert get_config("mixtral-8x22b").moe.top_k == 2
+    q = get_config("qwen2-moe-a2.7b").moe
+    assert (q.n_experts, q.top_k, q.d_shared) == (60, 4, 5632)

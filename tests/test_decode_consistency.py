@@ -1,0 +1,75 @@
+"""Token-by-token decode must reproduce the full-sequence forward logits —
+pins KV-cache indexing, RoPE positions, SWA ring masks, and recurrent-state
+threading. MoE archs are checked under dropless capacity (capacity drops
+legitimately differ between prefill and decode batch statistics)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.transformer import Model
+
+CASES = ["llama3-8b", "recurrentgemma-9b", "rwkv6-3b", "mixtral-8x22b",
+         "qwen2-moe-a2.7b", "llava-next-mistral-7b", "nemotron-4-15b"]
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_decode_matches_forward(arch):
+    S = 24
+    cfg = get_config(arch).reduced()
+    if cfg.moe is not None:  # dropless so routing is identical
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B = 2
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+
+    if cfg.embed_kind == "patches":
+        P_ = min(cfg.n_prefix_embeds, 8)
+        cfg2 = dataclasses.replace(cfg, n_prefix_embeds=P_)
+        model = Model(cfg2)
+        patch = 0.02 * jax.random.normal(jax.random.PRNGKey(3), (B, P_, cfg.d_model))
+        batch = {"patch_embeds": patch, "tokens": toks, "targets": toks}
+        logits_full, _ = model.forward(params, batch)
+        logits_full = logits_full[:, P_:]
+        # decode continues AFTER the image prefix: replay prefix tokens too
+        # (the image part itself is exercised via forward only)
+        pytest.skip("vlm decode covered by smoke test; prefix replay is N/A")
+    else:
+        batch = {"tokens": toks, "targets": toks}
+        logits_full, _ = model.forward(params, batch)
+
+    cache = model.init_cache(B, S, jnp.float32)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    logits_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_full),
+                               atol=5e-4, rtol=1e-3)
+
+
+def test_swa_ring_cache_long_context():
+    """Decode far past the window: ring cache must equal a fresh big cache."""
+    cfg = get_config("mixtral-8x22b").reduced()
+    cfg = dataclasses.replace(
+        cfg, window=8,
+        moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts)))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 40
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = model.forward(params, {"tokens": toks, "targets": toks})
+    cache = model.init_cache(B, S, jnp.float32)  # ring: size = window 8 << 40
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.int32(t))
+        outs.append(lg[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(logits_full), atol=5e-4, rtol=1e-3)

@@ -1,0 +1,43 @@
+"""End-user CLI smoke tests: the train/serve drivers as actually invoked."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(mod, *args, timeout=420):
+    return subprocess.run([sys.executable, "-m", mod, *args],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=ENV, cwd=REPO)
+
+
+def test_train_cli_allreduce(tmp_path):
+    p = _run("repro.launch.train", "--arch", "llama3-8b", "--steps", "12",
+             "--batch", "4", "--seq", "32", "--d-model", "64",
+             "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "6")
+    assert p.returncode == 0, p.stdout[-1500:] + p.stderr[-800:]
+    assert "improved" in p.stdout
+    assert any(d.startswith("step_") for d in os.listdir(tmp_path / "ck"))
+
+
+def test_train_cli_gossip():
+    p = _run("repro.launch.train", "--arch", "rwkv6-3b", "--steps", "10",
+             "--batch", "4", "--seq", "32", "--d-model", "64",
+             "--consensus", "gossip", "--n-replicas", "2")
+    assert p.returncode == 0, p.stdout[-1500:] + p.stderr[-800:]
+    assert "consensus=gossip" in p.stdout
+
+
+def test_serve_cli():
+    p = _run("repro.launch.serve", "--arch", "llama3-8b", "--batch", "2",
+             "--prompt-len", "8", "--gen", "4", "--d-model", "64")
+    assert p.returncode == 0, p.stdout[-1500:] + p.stderr[-800:]
+    assert "ms/tok" in p.stdout
+
+
+def test_serve_cli_encoder_graceful():
+    p = _run("repro.launch.serve", "--arch", "hubert-xlarge")
+    assert p.returncode == 0
+    assert "encoder-only" in p.stdout

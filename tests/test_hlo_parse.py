@@ -1,0 +1,52 @@
+"""Unit tests for the HLO collective parser (pure text -> bytes accounting).
+These pin the byte conventions the roofline tables are built on."""
+from repro.launch.hlo_parse import parse_collectives
+
+
+def test_all_reduce_iota_groups():
+    line = "  %all-reduce = f32[128]{0} all-reduce(%x), replica_groups=[32,16]<=[512]"
+    out = parse_collectives(line)
+    # 128 floats = 512 B; ring AR moves 2*(g-1)/g * O with g=16
+    assert out["bytes_by_op"]["all-reduce"] == 2 * 512 * 15 / 16
+    assert out["count_by_op"]["all-reduce"] == 1
+
+
+def test_all_gather_explicit_groups():
+    line = ("  %all-gather = bf16[64,32]{1,0} all-gather(%x), "
+            "replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}")
+    out = parse_collectives(line)
+    # 64*32 bf16 = 4096 B; (g-1)/g with g=4
+    assert out["bytes_by_op"]["all-gather"] == 4096 * 3 / 4
+
+
+def test_collective_permute_counts_output():
+    line = "  %collective-permute = f32[16,16]{1,0} collective-permute(%x), channel_id=7"
+    out = parse_collectives(line)
+    assert out["bytes_by_op"]["collective-permute"] == 16 * 16 * 4
+
+
+def test_reduce_scatter():
+    line = ("  %reduce-scatter = f32[8]{0} reduce-scatter(%x), "
+            "replica_groups=[2,8]<=[16], dimensions={0}")
+    out = parse_collectives(line)
+    assert out["bytes_by_op"]["reduce-scatter"] == 32 * (8 - 1)
+
+
+def test_non_collective_lines_ignored():
+    txt = "\n".join([
+        "  %dot = f32[128,128]{1,0} dot(%a, %b)",
+        "  %add = f32[4]{0} add(%x, %y)",
+        "ENTRY %main { ... }",
+    ])
+    out = parse_collectives(txt)
+    assert out["total_bytes"] == 0 and not out["count_by_op"]
+
+
+def test_multiple_ops_summed():
+    txt = "\n".join([
+        "  %all-gather.1 = f32[4]{0} all-gather(%x), replica_groups={{0,1}}",
+        "  %all-gather.2 = f32[4]{0} all-gather(%y), replica_groups={{0,1}}",
+    ])
+    out = parse_collectives(txt)
+    assert out["count_by_op"]["all-gather"] == 2
+    assert out["bytes_by_op"]["all-gather"] == 2 * 16 * 1 / 2

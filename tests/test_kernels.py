@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode.
+One test class per kernel (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import gqa_flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hinge_subgrad.ops import pegasos_step
+from repro.kernels.hinge_subgrad.ref import pegasos_step_ref
+from repro.kernels.rglru_scan.ops import linear_recurrence
+from repro.kernels.rglru_scan.ref import scan_ref as rglru_ref
+from repro.kernels.rwkv6_scan.ops import wkv
+from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
+
+RNG = np.random.default_rng(0)
+
+
+class TestHingeSubgrad:
+    @pytest.mark.parametrize("B,d", [(8, 32), (64, 100), (128, 512), (300, 777), (5, 2048)])
+    @pytest.mark.parametrize("dtype", [np.float32])
+    def test_matches_ref(self, B, d, dtype):
+        X = jnp.asarray(RNG.normal(size=(B, d)).astype(dtype))
+        y = jnp.asarray(np.sign(RNG.normal(size=B)).astype(dtype))
+        w = jnp.asarray(RNG.normal(size=d).astype(dtype)) * 0.1
+        t = jnp.float32(3.0)
+        w1, l1 = pegasos_step(w, X, y, lam=1e-3, t=t, interpret=True)
+        w2, l2 = pegasos_step_ref(w, X, y, 1e-3, t)
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=2e-5)
+        np.testing.assert_allclose(float(l1), float(l2), atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 60), st.integers(2, 90), st.integers(1, 50))
+    def test_property_random_shapes(self, B, d, t):
+        X = jnp.asarray(RNG.normal(size=(B, d)).astype(np.float32))
+        y = jnp.asarray(np.sign(RNG.normal(size=B) + 0.1).astype(np.float32))
+        w = jnp.zeros(d, jnp.float32)
+        w1, _ = pegasos_step(w, X, y, lam=1e-2, t=jnp.float32(t), interpret=True)
+        w2, _ = pegasos_step_ref(w, X, y, 1e-2, jnp.float32(t))
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=2e-5)
+        # ball projection invariant
+        assert float(jnp.linalg.norm(w1)) <= 1.0 / np.sqrt(1e-2) + 1e-3
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,hkv,dh,causal,window", [
+        (2, 128, 4, 2, 64, True, 0),
+        (1, 256, 4, 1, 64, True, 64),
+        (2, 64, 2, 2, 32, False, 0),
+        (1, 128, 8, 4, 128, True, 32),
+        (1, 96, 2, 1, 16, True, 0),      # non-128-multiple seq
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, s, h, hkv, dh, causal, window, dtype):
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, dh), dtype)
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, s, hkv, dh), dtype)
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, s, hkv, dh), dtype)
+        out = gqa_flash_attention(q, k, v, causal=causal, window=window,
+                                  blk_q=32, blk_k=32, interpret=True)
+        n_rep = h // hkv
+        ke = jnp.repeat(k, n_rep, axis=2)
+        ve = jnp.repeat(v, n_rep, axis=2)
+        qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, dh)
+        kf = jnp.moveaxis(ke, 2, 1).reshape(b * h, s, dh)
+        vf = jnp.moveaxis(ve, 2, 1).reshape(b * h, s, dh)
+        ref = jnp.moveaxis(attention_ref(qf, kf, vf, causal=causal, window=window)
+                           .reshape(b, h, s, dh), 1, 2)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=tol)
+
+
+class TestRGLRUScan:
+    @pytest.mark.parametrize("B,S,D,bs,bd", [
+        (2, 64, 128, 16, 64), (1, 100, 70, 32, 32), (3, 256, 256, 128, 128),
+        (1, 17, 130, 8, 128),
+    ])
+    def test_matches_ref(self, B, S, D, bs, bd):
+        a = jnp.asarray(RNG.uniform(0.8, 0.999, size=(B, S, D)).astype(np.float32))
+        b = jnp.asarray(RNG.normal(size=(B, S, D)).astype(np.float32))
+        h1 = linear_recurrence(a, b, blk_s=bs, blk_d=bd, interpret=True)
+        h2 = rglru_ref(a, b)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(1, 3), st.integers(2, 70), st.integers(2, 80))
+    def test_property(self, B, S, D):
+        a = jnp.asarray(RNG.uniform(0.0, 1.0, size=(B, S, D)).astype(np.float32))
+        b = jnp.asarray(RNG.normal(size=(B, S, D)).astype(np.float32))
+        h1 = linear_recurrence(a, b, blk_s=16, blk_d=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(h1), np.asarray(rglru_ref(a, b)), atol=1e-5)
+
+
+class TestRWKV6Scan:
+    @pytest.mark.parametrize("B,S,H,n,bs", [
+        (2, 64, 2, 16, 16), (1, 100, 3, 32, 32), (2, 128, 2, 64, 64), (1, 33, 1, 8, 16),
+    ])
+    def test_matches_ref(self, B, S, H, n, bs):
+        r, k, v = (jnp.asarray(RNG.normal(size=(B, S, H, n)).astype(np.float32)) * 0.3
+                   for _ in range(3))
+        w = jnp.asarray(RNG.uniform(0.8, 0.999, size=(B, S, H, n)).astype(np.float32))
+        u = jnp.asarray(RNG.normal(size=(H, n)).astype(np.float32)) * 0.1
+        o1 = wkv(r, k, v, w, u, blk_s=bs, interpret=True)
+        o2 = wkv_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)

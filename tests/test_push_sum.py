@@ -1,0 +1,69 @@
+"""Push-Sum protocol invariants (Kempe et al. 2003 / paper Algorithm 1):
+mass conservation at every round, convergence of v/w to the true average."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.push_sum import PushSumSim, exponential_schedule
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 16), st.sampled_from(["ring", "exponential", "random", "complete"]),
+       st.integers(0, 3))
+def test_mass_conservation_every_round(n, topology, seed):
+    sim = PushSumSim(n, topology, seed=seed)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32))
+    state = sim.init((x,))
+    total0 = float(jnp.sum(state.values[0]))
+    for t in range(8):
+        state = sim.round(state, t)
+        assert np.isclose(float(jnp.sum(state.values[0])), total0, atol=1e-3)
+        assert np.isclose(float(jnp.sum(state.weight)), n, atol=1e-4)
+
+
+@pytest.mark.parametrize("topology,rounds,tol", [
+    ("exponential", 4, 1e-5),   # exact after log2(16)=4 rounds
+    ("complete", 1, 1e-5),
+    ("ring", 200, 1e-3),
+    ("random", 80, 1e-3),
+])
+def test_convergence_to_average(topology, rounds, tol):
+    n = 16
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+    sim = PushSumSim(n, topology, seed=2)
+    st_ = sim.run((x,), rounds)
+    est = st_.estimate()[0]
+    true = jnp.mean(x, axis=0)
+    assert float(jnp.max(jnp.abs(est - true))) < tol
+
+
+def test_weighted_average_via_initial_weights():
+    """Initializing mass weights with n_i makes v/w the data-weighted mean —
+    the paper's sum(n_i w_i)/N consensus target."""
+    n = 8
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    counts = jnp.asarray(rng.integers(1, 50, size=n).astype(np.float32))
+    sim = PushSumSim(n, "exponential")
+    state = sim.init((vals * counts[:, None],))
+    state = state._replace(weight=counts)
+    for t in range(3 + 4):
+        state = sim.round(state, t)
+    est = state.estimate()[0]
+    want = jnp.sum(vals * counts[:, None], axis=0) / jnp.sum(counts)
+    assert float(jnp.max(jnp.abs(est - want))) < 1e-4
+
+
+def test_rounds_for_error_monotone():
+    sim = PushSumSim(16, "ring")
+    assert sim.rounds_for_error(1e-4) > sim.rounds_for_error(1e-1)
+
+
+def test_exponential_schedule_covers_axes():
+    sched = exponential_schedule({"pod": 2, "data": 16})
+    assert [r.axis for r in sched] == ["pod"] + ["data"] * 4
+    assert [r.hop for r in sched] == [1, 1, 2, 4, 8]
+    with pytest.raises(ValueError):
+        exponential_schedule({"data": 12})

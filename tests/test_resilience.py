@@ -1,0 +1,59 @@
+"""Fault-tolerant Push-Sum (paper §5 future work): link failures, message
+loss, and dead nodes — the mass-conservation algebra under each model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.resilience import FaultySim
+
+
+def _vals(n=16, d=4, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32))
+
+
+def test_link_drop_conserves_mass_and_converges():
+    x = _vals()
+    sim = FaultySim(16, "random", drop_prob=0.3, drop="link", seed=1)
+    st = sim.run((x,), 120)
+    # exact mass conservation under ack'd links
+    assert np.isclose(float(jnp.sum(st.values[0][:, 0])), float(jnp.sum(x[:, 0])), atol=1e-3)
+    assert np.isclose(float(jnp.sum(st.weight)), 16.0, atol=1e-3)
+    est = st.estimate()[0]
+    true = jnp.mean(x, axis=0)
+    assert float(jnp.max(jnp.abs(est - true))) < 1e-2
+
+
+def test_message_drop_estimates_stay_consistent():
+    """Lost messages lose mass, but every node's v/w ratio remains a convex
+    combination of initial values (no double counting) — node estimates
+    stay within the convex hull of the inputs."""
+    x = _vals(seed=2)
+    sim = FaultySim(16, "random", drop_prob=0.2, drop="message", seed=3)
+    st = sim.run((x,), 80)
+    est = np.asarray(st.estimate()[0])
+    lo, hi = np.asarray(x).min(0), np.asarray(x).max(0)
+    assert np.all(est >= lo - 1e-4) and np.all(est <= hi + 1e-4)
+    # mass strictly lost
+    assert float(jnp.sum(st.weight)) < 16.0
+
+
+def test_dead_nodes_freeze_but_survivors_agree():
+    x = _vals(seed=4)
+    sim = FaultySim(16, "random", dead_nodes=(3, 7), seed=5)
+    st = sim.run((x,), 150)
+    est = np.asarray(st.estimate()[0])
+    # dead nodes keep their initial value
+    assert np.allclose(est[3], np.asarray(x)[3], atol=1e-5)
+    assert np.allclose(est[7], np.asarray(x)[7], atol=1e-5)
+    # survivors reach consensus among themselves
+    alive = [i for i in range(16) if i not in (3, 7)]
+    spread = est[alive].max(0) - est[alive].min(0)
+    assert float(spread.max()) < 1e-2
+
+
+def test_zero_drop_matches_clean_pushsum():
+    from repro.core.push_sum import PushSumSim
+    x = _vals(seed=6)
+    a = FaultySim(8, "random", drop_prob=0.0, seed=7).run((x[:8],), 40)
+    b = PushSumSim(8, "random", seed=7).run((x[:8],), 40)
+    assert np.allclose(np.asarray(a.estimate()[0]), np.asarray(b.estimate()[0]), atol=1e-5)

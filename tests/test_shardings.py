@@ -1,0 +1,89 @@
+"""Unit tests for the sharding rule engine: divisibility fallback, rule
+matching per family, gossip/zero1 axis stripping. Runs on the single CPU
+device (specs are pure metadata; no mesh placement happens here)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch import shardings as shard
+from repro.models.transformer import Model
+
+
+class FakeMesh:
+    """Duck-typed mesh: shardings._spec only reads axis_names/devices.shape."""
+    def __init__(self, sizes: dict):
+        self.axis_names = tuple(sizes)
+        import numpy as np
+        self.devices = np.empty(tuple(sizes.values()), dtype=object)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _specs_for(arch, **kw):
+    cfg = get_config(arch)
+    m = Model(cfg, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    return shapes, shard.param_specs(MESH, shapes, **kw)
+
+
+def test_divisibility_fallback():
+    # Hkv=8 cannot shard on a 16-way axis; D=4096 can
+    s = shard._spec(MESH, (4096, 8, 128), "data", "model", None)
+    assert s == P("data", None, None)
+    s = shard._spec(MESH, (4096, 32, 128), "data", "model", None)
+    assert s == P("data", "model", None)
+
+
+def test_axis_used_once():
+    s = shard._spec(MESH, (4096, 4096), ("model", "data"), "model")
+    # second dim cannot reuse model
+    assert s == P(("model", "data"), None)
+
+
+def test_dense_param_rules():
+    shapes, specs = _specs_for("llama3-8b")
+    blk = specs["stages"][0]["blk0"]
+    assert blk["attn"]["wq"] == P(None, "data", "model", None)
+    assert blk["ch"]["wi"]["w"] == P(None, "data", "model")
+    assert blk["ch"]["wo"]["w"] == P(None, "model", "data")
+    assert specs["embed"]["table"] == P("model", "data")
+
+
+def test_moe_param_rules():
+    shapes, specs = _specs_for("qwen2-moe-a2.7b")
+    blk = specs["stages"][0]["blk0"]
+    assert blk["ch"]["wi"] == P(None, None, "data", "model")     # (E,D,F)
+    assert blk["ch"]["shared"]["wi"]["w"] == P(None, "data", "model")
+
+
+def test_zero1_strips_data():
+    _, specs = _specs_for("llama3-8b", mode="zero1")
+    blk = specs["stages"][0]["blk0"]
+    assert blk["ch"]["wi"]["w"] == P(None, None, "model")
+    assert specs["embed"]["table"] == P("model", None)
+
+
+def test_gossip_adds_replica_axis_and_strips_it_from_core():
+    cfg = get_config("llama3-8b")
+    m = Model(cfg, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((16,) + s.shape, s.dtype), shapes)
+    specs = shard.param_specs(MESH, stacked, gossip=True, replica_axis="data")
+    blk = specs["stages"][0]["blk0"]
+    # leading replica axis on `data`, and no other dim may use `data`
+    assert blk["ch"]["wi"]["w"][0] == "data"
+    assert "data" not in jax.tree.leaves(tuple(blk["ch"]["wi"]["w"][1:]))
+    assert specs["embed"]["table"][0] == "data"
+
+
+def test_cache_spec_tree():
+    cfg = get_config("llama3-8b")
+    m = Model(cfg, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16)
+    cache_shapes = jax.eval_shape(lambda: m.init_cache(128, 32768, jnp.bfloat16))
+    specs = shard.cache_spec_tree(MESH, cache_shapes)
+    kv = specs[0]["blk0"]
+    assert kv.k == P(None, "data", "model", None, None)  # (R,B,S,Hkv,Dh)

@@ -1,0 +1,136 @@
+"""Substrate tests: optim, checkpoint, data pipeline, libsvm parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro import optim
+from repro.data import libsvm, svm_datasets, tokens
+
+
+# ------------------------------------------------------------------- optim
+
+def test_adamw_converges_quadratic():
+    opt = optim.adamw(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_sgd_momentum_converges():
+    opt = optim.sgd(0.05, momentum=0.9)
+    params = {"w": jnp.array([4.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        upd, state = opt.update(grads, state, params)
+        params = optim.apply_updates(params, upd)
+    assert abs(float(params["w"][0])) < 2e-2
+
+
+def test_clip_by_global_norm():
+    clip = optim.clip_by_global_norm(1.0)
+    g = {"a": jnp.full((10,), 10.0)}
+    out, _ = clip.update(g, (), None)
+    from repro.optim.transforms import global_norm
+    assert float(global_norm(out)) <= 1.0 + 1e-5
+
+
+def test_schedules():
+    s = optim.cosine_warmup(1.0, 10, 100)
+    assert float(s(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(s(jnp.int32(10))) == pytest.approx(1.0)
+    assert float(s(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    p = optim.pegasos_schedule(0.1)
+    assert float(p(jnp.int32(0))) == pytest.approx(10.0)
+
+    # bf16 moments stay fp32
+    opt = optim.adamw(0.1)
+    st_ = opt.init({"w": jnp.zeros(3, jnp.bfloat16)})
+    assert st_.mu["w"].dtype == jnp.float32
+
+
+# -------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "step": jnp.int32(7), "nested": [jnp.ones(4), jnp.zeros((2, 2))]}
+    root = str(tmp_path / "ck")
+    ckpt.save(root, 100, tree)
+    ckpt.save(root, 200, tree)
+    assert ckpt.latest_step(root) == 200
+    out = ckpt.restore(root, tree)
+    assert np.allclose(out["params"]["w"], np.arange(6.0).reshape(2, 3))
+    assert int(out["step"]) == 7
+
+
+def test_checkpoint_rotation_and_mismatch(tmp_path):
+    root = str(tmp_path / "ck")
+    tree = {"w": jnp.ones(3)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(root, s, tree, keep=2)
+    assert ckpt.latest_step(root) == 5
+    assert len([d for d in os.listdir(root) if d.startswith("step_")]) == 2
+    with pytest.raises(ValueError):
+        ckpt.restore(root, {"w": jnp.ones(4)})
+
+
+# -------------------------------------------------------------------- data
+
+def test_libsvm_parser(tmp_path):
+    p = tmp_path / "toy.svm"
+    p.write_text("+1 1:0.5 3:2.0\n-1 2:1.5\n+1 3:1.0 4:-0.5\n")
+    X, y = libsvm.load_libsvm(str(p))
+    assert X.shape == (3, 4)
+    assert np.allclose(y, [1, -1, 1])
+    assert X[0, 0] == 0.5 and X[1, 1] == 1.5 and X[2, 3] == -0.5
+
+
+def test_svm_dataset_signatures():
+    ds = svm_datasets.make_dataset("reuters", scale=0.05)
+    spec = svm_datasets.PAPER_DATASETS["reuters"]
+    assert ds.d == spec.d
+    assert set(np.unique(ds.y_train)) <= {-1.0, 1.0}
+    # sparsity approx respected
+    nnz_frac = (ds.X_train != 0).mean()
+    assert nnz_frac < 3 * max(spec.sparsity, 1e-3) + 0.05
+    # rows normalized
+    norms = np.linalg.norm(ds.X_train, axis=1)
+    assert np.all(norms < 1.0 + 1e-4)
+
+
+def test_partition_shapes():
+    X = np.arange(101 * 3, dtype=np.float32).reshape(101, 3)
+    y = np.ones(101, np.float32)
+    Xp, yp = svm_datasets.partition(X, y, 10)
+    assert Xp.shape == (10, 10, 3) and yp.shape == (10, 10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50))
+def test_token_stream_deterministic(step):
+    cfg = tokens.TokenStreamConfig(vocab_size=512, seq_len=32, global_batch=4, seed=1)
+    a = tokens.synthetic_tokens(cfg, step)
+    b = tokens.synthetic_tokens(cfg, step)
+    assert np.array_equal(a, b)
+    assert a.shape == (4, 33) and a.min() >= 0 and a.max() < 512
+
+
+def test_batcher_host_slicing():
+    cfg = tokens.TokenStreamConfig(vocab_size=64, seq_len=16, global_batch=8, seed=0)
+    b = tokens.Batcher(cfg)
+    g = b.global_batch(3)
+    h0 = b.local_slice(3, 0, 4)
+    h3 = b.local_slice(3, 3, 4)
+    assert np.array_equal(h0["tokens"], g["tokens"][:2])
+    assert np.array_equal(h3["tokens"], g["tokens"][6:])
+    with pytest.raises(ValueError):
+        b.local_slice(0, 0, 3)

@@ -1,0 +1,71 @@
+"""Mixing-matrix invariants (paper §2.3/§3): stochasticity, connectivity,
+mixing time — property-tested with hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 7))
+def test_deterministic_topologies_doubly_stochastic(n, t):
+    for name in ("ring", "complete", "exponential"):
+        B = topo.build_matrix(name, n, t=t)
+        assert topo.is_doubly_stochastic(B), (name, n, t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 100))
+def test_random_neighbor_mass_conserving(n, seed):
+    B = topo.build_matrix("random", n, t=seed)
+    # row-stochastic: each node distributes exactly its own mass
+    assert np.allclose(B.sum(axis=1), 1.0)
+    assert np.all(B >= 0)
+    # column sums generally != 1 for a single draw — that is WHY Push-Sum
+    # carries the weight scalar. Mass conservation is the column-sum total:
+    assert np.isclose(B.sum(), n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 20))
+def test_exponential_partner_is_permutation(log_n, t):
+    n = 2 ** log_n
+    p = topo.exponential_partner(n, t)
+    assert sorted(p.tolist()) == list(range(n))
+
+
+def test_exponential_exact_after_log_rounds():
+    n = 16
+    x = np.arange(n, dtype=np.float64)
+    for t in range(4):  # log2(16) rounds, hops 1,2,4,8
+        B = topo.one_peer_exponential_matrix(n, t)
+        x = B.T @ x
+    assert np.allclose(x, 7.5)
+
+
+def test_metropolis_arbitrary_graph():
+    rng = np.random.default_rng(3)
+    n = 12
+    adj = rng.random((n, n)) < 0.4
+    adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    # ensure connectivity via a ring
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = True
+    B = topo.metropolis_matrix(adj)
+    assert topo.is_doubly_stochastic(B)
+    assert np.isfinite(topo.mixing_time_bound(B))
+
+
+def test_mixing_time_ordering():
+    # complete mixes instantly; ring mixes slower than exponential average
+    n = 32
+    t_complete = topo.mixing_time_bound(topo.complete_matrix(n))
+    t_ring = topo.mixing_time_bound(topo.ring_matrix(n))
+    assert t_complete <= 1.0 < t_ring
+
+
+def test_unknown_topology_raises():
+    with pytest.raises(ValueError):
+        topo.build_matrix("star", 4)
