@@ -4,9 +4,8 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
-from repro.data.svm_datasets import SVMDataset, make_dataset, partition
+from repro.data.svm_datasets import SVMDataset, make_dataset
 
 # scale factors keep wall time sane on one CPU core while preserving each
 # dataset's (d, sparsity, lambda) signature; row counts stay in the thousands.

@@ -8,6 +8,8 @@ wall-times are NOT TPU numbers; what is measured and reported:
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -22,6 +24,7 @@ from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
 
 
 def _time(fn, *args, iters=5):
+    """Mean latency in us of the jitted fn, after one warm-up call."""
     fn_j = jax.jit(fn)
     out = fn_j(*args)
     jax.block_until_ready(out)
@@ -32,40 +35,56 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6  # us
 
 
-def run(verbose=True):
+def run(verbose=True, quick=False, json_path=None):
     rng = np.random.default_rng(0)
     rows = {}
+    # --quick shrinks every shape ~4x so the CI smoke job finishes in seconds
+    # while still exercising the same jitted code paths.
+    s = 4 if quick else 1
 
-    X = jnp.asarray(rng.normal(size=(512, 1024)).astype(np.float32))
-    y = jnp.asarray(np.sign(rng.normal(size=512)).astype(np.float32))
-    w = jnp.zeros(1024, jnp.float32)
+    X = jnp.asarray(rng.normal(size=(512 // s, 1024 // s)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=512 // s)).astype(np.float32))
+    w = jnp.zeros(1024 // s, jnp.float32)
     us = _time(lambda w, X, y: pegasos_step_ref(w, X, y, 1e-3, jnp.float32(5.0)), w, X, y)
     rows["hinge_subgrad"] = us
     if verbose:
-        emit("kernel/hinge_subgrad(512x1024)", us, "oracle_jit;pallas=interpret-validated")
+        emit(f"kernel/hinge_subgrad({512 // s}x{1024 // s})", us,
+             "oracle_jit;pallas=interpret-validated")
 
-    q = jnp.asarray(rng.normal(size=(8, 512, 64)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(8 // min(s, 2), 512 // s, 64)).astype(np.float32))
     us = _time(lambda q: attention_ref(q, q, q, causal=True), q)
     rows["flash_attention"] = us
     if verbose:
-        emit("kernel/flash_attention(8x512x64)", us, "oracle_jit;pallas=interpret-validated")
+        emit(f"kernel/flash_attention({q.shape[0]}x{q.shape[1]}x64)", us,
+             "oracle_jit;pallas=interpret-validated")
 
-    a = jnp.asarray(rng.uniform(0.9, 0.999, size=(4, 1024, 256)).astype(np.float32))
-    b = jnp.asarray(rng.normal(size=(4, 1024, 256)).astype(np.float32))
+    a = jnp.asarray(rng.uniform(0.9, 0.999, size=(4, 1024 // s, 256 // s)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4, 1024 // s, 256 // s)).astype(np.float32))
     us = _time(rglru_ref, a, b)
     rows["rglru_scan"] = us
     if verbose:
-        emit("kernel/rglru_scan(4x1024x256)", us, "oracle_jit;pallas=interpret-validated")
+        emit(f"kernel/rglru_scan(4x{1024 // s}x{256 // s})", us,
+             "oracle_jit;pallas=interpret-validated")
 
-    r = jnp.asarray(rng.normal(size=(2, 256, 4, 64)).astype(np.float32)) * 0.3
-    wdec = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, 256, 4, 64)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(2, 256 // s, 4, 64)).astype(np.float32)) * 0.3
+    wdec = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, 256 // s, 4, 64)).astype(np.float32))
     u = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32)) * 0.1
     us = _time(lambda r, w, u: wkv_ref(r, r, r, w, u), r, wdec, u)
     rows["rwkv6_scan"] = us
     if verbose:
-        emit("kernel/rwkv6_scan(2x256x4x64)", us, "oracle_jit;pallas=interpret-validated")
+        emit(f"kernel/rwkv6_scan(2x{256 // s}x4x64)", us,
+             "oracle_jit;pallas=interpret-validated")
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump({"quick": quick, "us_per_call": rows}, fh, indent=2)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke scale (~4x smaller shapes)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json_path)

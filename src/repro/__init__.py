@@ -1,0 +1,3 @@
+"""GADGET SVM reproduction: gossip-based sub-gradient linear SVM on JAX/Pallas."""
+
+__version__ = "0.1.0"

@@ -9,14 +9,22 @@ Every node i holds a horizontal partition M_i (n_i × d) and a weight vector
   (f)    [optional] project w̃_i onto the 1/√λ ball
   (g)    ŵ_i ← PushSum(B, w̃_i)                     (gossip consensus)
   (h)    [optional] project again
-
 The algorithm is *anytime*: it stops when max_i ‖ŵ_i^(t+1) − ŵ_i^(t)‖ < ε.
 
-Two execution paths (see core/push_sum.py): the **simulator** runs all m nodes
-in one array with matrix-form Push-Sum (any topology, incl. the paper's random
-one-neighbor protocol) and is what the paper-validation benchmarks use; the
-**mesh** path (`make_gadget_mesh_step`) shards nodes over mesh axes with
-ppermute gossip and is what scales to pods.
+The simulator path is **device-resident**: the whole training loop — local
+half-steps (Pallas ``margins``/``grad_update`` kernels, vmapped over nodes),
+Push-Sum mixing, the ε-check and the objective trace — is one jitted
+``lax.while_loop`` with donated weight buffers. Mixing matrices never cross
+the host boundary inside the loop: deterministic topologies (exponential,
+ring, clique/complete, torus) are uploaded once as a stacked (period, m, m)
+array and indexed with ``t % period``; the paper's random one-neighbor
+protocol is drawn with ``jax.random`` inside the step. The host wrapper
+(`gadget_train`) syncs exactly once, after termination, to materialize traces.
+
+``gadget_train_reference`` keeps the seed's host-chunk loop (per-iteration
+host matrix builds, per-chunk ``float(...)`` syncs) on the *same* PRNG
+streams — it is the parity oracle for tests and the baseline the transfer
+counter in ``benchmarks/gossip_device_bench.py`` measures against.
 
 Weighted consensus: the paper pushes n_i·ŵ_i so the consensus target is the
 data-weighted network average Σ n_i ŵ_i / N. We implement this by initializing
@@ -25,7 +33,7 @@ weighted mean for free, including under non-uniform partitions.
 """
 from __future__ import annotations
 
-from functools import partial
+import functools
 from typing import NamedTuple
 
 import jax
@@ -33,9 +41,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import svm_objective as obj
-from repro.core.push_sum import PushSumSim, PushSumState, exponential_schedule, push_sum_round
+from repro.core import topology as topo
+from repro.core.push_sum import PushSumState, exponential_schedule, mix_rounds, push_sum_round
+from repro.kernels.hinge_subgrad import ops as hinge_ops
 
-__all__ = ["GadgetConfig", "GadgetState", "GadgetResult", "gadget_train", "make_gadget_mesh_step"]
+__all__ = [
+    "GadgetConfig",
+    "GadgetResult",
+    "gadget_train",
+    "gadget_train_reference",
+    "make_gadget_mesh_step",
+    "transfer_stats",
+    "reset_transfer_stats",
+]
 
 
 class GadgetConfig(NamedTuple):
@@ -46,15 +64,13 @@ class GadgetConfig(NamedTuple):
     project_before_gossip: bool = True   # paper step (f)
     project_after_gossip: bool = True    # paper step (h)
     epsilon: float = 1e-3        # anytime stopping tolerance (paper: 0.001)
-    check_every: int = 100       # host-side ε check cadence
+    check_every: int = 100       # ε-check / trace cadence (on device)
     max_iters: int = 5000
     seed: int = 0
-
-
-class GadgetState(NamedTuple):
-    W: jax.Array        # (m, d) per-node weight vectors ŵ_i
-    W_sum: jax.Array    # (m, d) running iterate sums (for w̄_i / T)
-    t: jax.Array        # iteration counter (scalar int32)
+    # None → Pallas half-step kernels wherever they compile natively (TPU),
+    # pure-jnp where they would only interpret (CPU). True forces the kernel
+    # path (interpret-mode off-TPU — what CI's device-path tests exercise).
+    use_kernels: bool | None = None
 
 
 class GadgetResult(NamedTuple):
@@ -64,6 +80,21 @@ class GadgetResult(NamedTuple):
     epsilon: float          # max_i ‖Δŵ_i‖ at termination
     objective_trace: np.ndarray  # (n_checks,) primal objective of consensus w
     time_trace: np.ndarray       # iteration index per check
+    eps_trace: np.ndarray        # (n_checks,) max_i ‖Δŵ_i‖ per check
+    W_avg: jax.Array | None = None  # (m, d) per-node iterate averages w̄_i
+    # (Pegasos' Theorem-2-style guarantee bounds the averaged iterate, not the
+    # last one — same reason pegasos_train exposes w_avg)
+
+
+# Host↔device traffic instrumentation, read by benchmarks/gossip_device_bench.py:
+# `matrix_uploads` counts host→device transfers of mixing matrices, `host_syncs`
+# counts device→host scalar pulls made for the anytime ε-check / traces.
+transfer_stats = {"matrix_uploads": 0, "host_syncs": 0}
+
+
+def reset_transfer_stats() -> None:
+    transfer_stats["matrix_uploads"] = 0
+    transfer_stats["host_syncs"] = 0
 
 
 def _partition_counts(y_parts: jax.Array) -> jax.Array:
@@ -71,49 +102,178 @@ def _partition_counts(y_parts: jax.Array) -> jax.Array:
     return jnp.full((m,), float(n_i), jnp.float32)
 
 
-def _local_half_step(w, X_i, y_i, ids, lam, t, project):
+def _resolve_kernels(cfg: GadgetConfig) -> GadgetConfig:
+    """Pin cfg.use_kernels to a concrete bool (it keys the jit cache)."""
+    if cfg.use_kernels is None:
+        return cfg._replace(use_kernels=not hinge_ops.default_interpret())
+    return cfg
+
+
+def _local_half_step(w, X_i, y_i, ids, lam, t, project, use_kernels):
     Xb, yb = X_i[ids], y_i[ids]
+    if use_kernels:
+        return hinge_ops.local_half_step(w, Xb, yb, lam=lam, t=t, project=project)
     alpha = 1.0 / (lam * t)
     L_hat = -obj.hinge_subgradient(w, Xb, yb)
     w_half = (1.0 - lam * alpha) * w + alpha * L_hat
     return obj.project_ball(w_half, lam) if project else w_half
 
 
-def _make_sim_chunk(cfg: GadgetConfig, m: int, n_i: int):
-    """Scan body for `chunk` iterations of the simulator path. Mixing matrices
-    are precomputed per round and fed as scan inputs (the paper's random
-    topology needs fresh host-side draws each round)."""
+# ---------------------------------------------------------------------------
+# Shared PRNG / mixing-matrix derivations — the device loop and the host-loop
+# reference use these verbatim so their trajectories are comparable.
+# ---------------------------------------------------------------------------
 
-    def chunk_fn(state: GadgetState, X: jax.Array, y: jax.Array,
-                 B_stack: jax.Array, key0: jax.Array, n_counts: jax.Array):
-        # X: (m, n_i, d), y: (m, n_i), B_stack: (chunk, R, m, m)
-        def step(carry, inp):
+
+def _stream_keys(seed: int):
+    data_key, mix_key = jax.random.split(jax.random.PRNGKey(seed))
+    return data_key, mix_key
+
+
+def _batch_ids(data_key: jax.Array, t: jax.Array, m: int, n_i: int, batch_size: int):
+    keys = jax.random.split(jax.random.fold_in(data_key, t), m)
+    return jax.vmap(lambda k: jax.random.randint(k, (batch_size,), 0, n_i))(keys)
+
+
+def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
+                 m: int, R: int, topology: str) -> jax.Array:
+    """(R, m, m) mixing matrices for iteration t (1-based), fully on device."""
+    if topology == "random":
+        kt = jax.random.fold_in(mix_key, t)
+        return jax.vmap(
+            lambda r: topo.random_neighbor_matrix_device(jax.random.fold_in(kt, r), m)
+        )(jnp.arange(R))
+    T = B_stack.shape[0]
+    idx = ((t - 1) * R + jnp.arange(R)) % T
+    return B_stack[idx]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident training loop (tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _gossip_step(cfg: GadgetConfig, m: int, n_i: int,
+                 X: jax.Array, y: jax.Array, n_counts: jax.Array,
+                 data_key: jax.Array, W: jax.Array, W_sum: jax.Array,
+                 t: jax.Array, Bs: jax.Array):
+    """Steps (a)-(h) for all m nodes at iteration t, given the (R, m, m)
+    mixing matrices for this iteration. The single shared step body — the
+    device loop and the host-loop reference differ only in orchestration
+    (where Bs comes from, where the ε-check runs)."""
+    tf = t.astype(jnp.float32)
+    ids = _batch_ids(data_key, t, m, n_i, cfg.batch_size)
+    W_half = jax.vmap(
+        lambda w, Xi, yi, ii: _local_half_step(w, Xi, yi, ii, cfg.lam, tf,
+                                               cfg.project_before_gossip, cfg.use_kernels)
+    )(W, X, y, ids)
+    # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean.
+    vals, wts = mix_rounds(W_half * n_counts[:, None], n_counts, Bs)
+    W_new = vals / wts[:, None]
+    if cfg.project_after_gossip:
+        W_new = jax.vmap(lambda w: obj.project_ball(w, cfg.lam))(W_new)
+    return W_new, W_sum + W_new
+
+
+def _one_iteration(cfg: GadgetConfig, m: int, n_i: int,
+                   X: jax.Array, y: jax.Array, n_counts: jax.Array,
+                   data_key: jax.Array, mix_key: jax.Array, B_stack: jax.Array | None,
+                   W: jax.Array, W_sum: jax.Array, t: jax.Array):
+    """One fully device-resident iteration: derive this iteration's mixing
+    matrices on device (stack slice or in-step draw), then the shared step."""
+    Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology)
+    return _gossip_step(cfg, m, n_i, X, y, n_counts, data_key, W, W_sum, t, Bs)
+
+
+def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
+    """Key for the jit-factory caches: the traced program never reads
+    cfg.seed (PRNG keys are runtime arguments), so multi-seed sweeps must
+    share one compiled executable."""
+    return cfg._replace(seed=0)
+
+
+@functools.lru_cache(maxsize=32)
+def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
+                       n_chunks: int, chunk: int):
+    """Jitted whole-training function: while_loop over ε-check chunks, scan
+    over iterations inside each chunk, donated weight buffers, on-device
+    objective/ε traces. Returns arrays only — the caller syncs once."""
+
+    def train(X, y, B_stack, data_key, mix_key, n_counts, W0, W_sum0):
+        X_flat = X.reshape(m * n_i, d)
+        y_flat = y.reshape(m * n_i)
+        total_n = jnp.sum(n_counts)
+
+        def step(carry, _):
             W, W_sum, t = carry
-            Bs, step_key = inp
-            tf = t.astype(jnp.float32)
-            keys = jax.random.split(step_key, m)
-            ids = jax.vmap(lambda k: jax.random.randint(k, (cfg.batch_size,), 0, n_i))(keys)
-            W_half = jax.vmap(
-                lambda w, Xi, yi, ii: _local_half_step(w, Xi, yi, ii, cfg.lam, tf,
-                                                       cfg.project_before_gossip)
-            )(W, X, y, ids)
-            # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean.
-            vals = W_half * n_counts[:, None]
-            wts = n_counts
-            for r in range(cfg.gossip_rounds):
-                B = Bs[r]
-                vals = B.T @ vals
-                wts = B.T @ wts
-            W_new = vals / wts[:, None]
-            if cfg.project_after_gossip:
-                W_new = jax.vmap(lambda w: obj.project_ball(w, cfg.lam))(W_new)
-            return (W_new, W_sum + W_new, t + 1), None
+            active = t <= cfg.max_iters
+            W, W_sum = jax.lax.cond(
+                active,
+                lambda a: _one_iteration(cfg, m, n_i, X, y, n_counts,
+                                         data_key, mix_key, B_stack, *a),
+                lambda a: (a[0], a[1]),
+                (W, W_sum, t),
+            )
+            return (W, W_sum, jnp.where(active, t + 1, t)), None
 
-        keys = jax.random.split(key0, B_stack.shape[0])
-        (W, W_sum, t), _ = jax.lax.scan(step, (state.W, state.W_sum, state.t), (B_stack, keys))
-        return GadgetState(W, W_sum, t)
+        def chunk_body(carry):
+            W, W_sum, t, ci, _, obj_tr, it_tr, eps_tr = carry
+            W_prev = W
+            (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t), None, length=chunk)
+            eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
+            w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
+            objective = obj.primal_objective(w_cons, X_flat, y_flat, cfg.lam)
+            obj_tr = obj_tr.at[ci].set(objective)
+            it_tr = it_tr.at[ci].set(t - 1)
+            eps_tr = eps_tr.at[ci].set(eps)
+            return W, W_sum, t, ci + 1, eps, obj_tr, it_tr, eps_tr
 
-    return jax.jit(chunk_fn)
+        def cond(carry):
+            _, _, t, ci, eps, _, _, _ = carry
+            return (ci < n_chunks) & (eps >= cfg.epsilon) & (t <= cfg.max_iters)
+
+        init = (W0, W_sum0, jnp.int32(1), jnp.int32(0), jnp.float32(jnp.inf),
+                jnp.full((n_chunks,), jnp.nan, jnp.float32),
+                jnp.zeros((n_chunks,), jnp.int32),
+                jnp.full((n_chunks,), jnp.nan, jnp.float32))
+        W, W_sum, t, ci, eps, obj_tr, it_tr, eps_tr = jax.lax.while_loop(cond, chunk_body, init)
+        w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
+        return W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr
+
+    # Buffer donation is a no-op (with a warning) on CPU — only request it
+    # where the runtime honors it.
+    donate = (6, 7) if jax.default_backend() != "cpu" else ()
+    return jax.jit(train, donate_argnums=donate)
+
+
+def _validate_topology(cfg: GadgetConfig) -> None:
+    if cfg.topology not in topo.TOPOLOGIES:
+        raise ValueError(f"unknown topology {cfg.topology!r}")
+
+
+def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Array):
+    """Build the exact (jitted train fn, argument tuple) pair `gadget_train`
+    executes: resolved config, one stacked-matrix upload, PRNG streams, fresh
+    (donatable) weight buffers. The transfer-guard benchmark calls this too,
+    so the device-residency proof certifies the real path, not a replica.
+    Requires cfg.max_iters > 0."""
+    m, n_i, d = X_parts.shape
+    cfg = _resolve_kernels(cfg)
+    n_counts = _partition_counts(y_parts)
+    data_key, mix_key = _stream_keys(cfg.seed)
+
+    if cfg.topology == "random":
+        B_stack = None
+    else:
+        B_stack = jnp.asarray(topo.build_matrix_stack(cfg.topology, m))
+        transfer_stats["matrix_uploads"] += 1  # the only upload, ever
+
+    chunk = min(cfg.check_every, cfg.max_iters)
+    n_chunks = -(-cfg.max_iters // chunk)
+    train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk)
+    args = (jnp.asarray(X_parts), jnp.asarray(y_parts), B_stack, data_key, mix_key,
+            n_counts, jnp.zeros((m, d), X_parts.dtype), jnp.zeros((m, d), X_parts.dtype))
+    return train, args
 
 
 def gadget_train(
@@ -123,52 +283,124 @@ def gadget_train(
 ) -> GadgetResult:
     """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d), y_parts: (m, n_i).
 
-    Runs in chunks of ``cfg.check_every`` iterations; between chunks the host
-    checks the paper's anytime criterion max_i ‖Δŵ_i‖ < ε and records the
-    consensus primal objective.
+    Thin host wrapper around the jitted device loop: uploads the data and (for
+    deterministic topologies) one stacked mixing-matrix cycle, runs the
+    entire anytime loop on device, then syncs the result and traces once.
     """
     m, n_i, d = X_parts.shape
-    sim = PushSumSim(m, cfg.topology, seed=cfg.seed)
-    n_counts = _partition_counts(y_parts)
-    chunk_fn = _make_sim_chunk(cfg, m, n_i)
-    key = jax.random.PRNGKey(cfg.seed)
+    _validate_topology(cfg)
 
-    X_flat = X_parts.reshape(m * n_i, d)
-    y_flat = y_parts.reshape(m * n_i)
+    empty = np.zeros((0,), np.float32)
+    if cfg.max_iters <= 0:  # zero-iteration call: return the initial state
+        return GadgetResult(W=jnp.zeros((m, d), X_parts.dtype),
+                            w_consensus=jnp.zeros((d,), X_parts.dtype),
+                            iters=0, epsilon=float("inf"),
+                            objective_trace=empty, time_trace=empty.astype(np.int32),
+                            eps_trace=empty, W_avg=jnp.zeros((m, d), X_parts.dtype))
 
-    state = GadgetState(
-        W=jnp.zeros((m, d), X_parts.dtype),
-        W_sum=jnp.zeros((m, d), X_parts.dtype),
-        t=jnp.int32(1),
+    train, args = _prepare_device_train(cfg, X_parts, y_parts)
+    out = train(*args)
+    W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr = jax.block_until_ready(out)
+    transfer_stats["host_syncs"] += 1  # single post-termination sync
+
+    n_done = int(n_done)
+    iters = int(iters)
+    return GadgetResult(
+        W=W,
+        w_consensus=w_cons,
+        iters=iters,
+        epsilon=float(eps),
+        objective_trace=np.asarray(obj_tr)[:n_done],
+        time_trace=np.asarray(it_tr)[:n_done],
+        eps_trace=np.asarray(eps_tr)[:n_done],
+        W_avg=W_sum / max(iters, 1),
     )
-    obj_trace, time_trace = [], []
+
+
+# ---------------------------------------------------------------------------
+# Host-loop reference (seed semantics) — parity oracle and transfer baseline
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _make_reference_step(cfg: GadgetConfig, m: int, n_i: int, d: int):
+    """One jitted GADGET iteration for the host-loop reference, compiled once
+    per (cfg, shape): data/keys are runtime arguments, not baked-in constants.
+    Deterministic topologies receive this iteration's matrices via ``Bs``
+    (the per-iteration host upload being measured); the random protocol draws
+    them in-step like the device path and ignores ``Bs``."""
+
+    def step(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs):
+        if cfg.topology == "random":
+            Bs = _iter_mixing(mix_key, None, t, m, cfg.gossip_rounds, cfg.topology)
+        return _gossip_step(cfg, m, n_i, X, y, n_counts, data_key, W, W_sum, t, Bs)
+
+    return jax.jit(step)
+
+
+def gadget_train_reference(
+    X_parts: jax.Array,
+    y_parts: jax.Array,
+    cfg: GadgetConfig = GadgetConfig(),
+) -> GadgetResult:
+    """Seed-style host chunk loop on the same PRNG streams as `gadget_train`:
+    mixing matrices cross the host boundary every iteration (deterministic
+    topologies) and every ε-check is a blocking ``float(...)`` sync. Kept as
+    the parity/tolerance oracle for the device-resident path and as the
+    baseline for the transfer-counter benchmark.
+    """
+    m, n_i, d = X_parts.shape
+    _validate_topology(cfg)
+    cfg = _resolve_kernels(cfg)
+    n_counts = _partition_counts(y_parts)
+    data_key, mix_key = _stream_keys(cfg.seed)
+    stack = None if cfg.topology == "random" else topo.build_matrix_stack(cfg.topology, m)
+    R = cfg.gossip_rounds
+
+    X = jnp.asarray(X_parts)
+    y = jnp.asarray(y_parts)
+    X_flat = X.reshape(m * n_i, d)
+    y_flat = y.reshape(m * n_i)
+    one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d)
+
+    W = jnp.zeros((m, d), X_parts.dtype)
+    W_sum = jnp.zeros((m, d), X_parts.dtype)
+    obj_trace, time_trace, eps_trace = [], [], []
     eps = float("inf")
     it = 0
     while it < cfg.max_iters:
         chunk = min(cfg.check_every, cfg.max_iters - it)
-        B_stack = np.stack([
-            np.stack([sim.matrix(it + s * cfg.gossip_rounds + r) for r in range(cfg.gossip_rounds)])
-            for s in range(chunk)
-        ]).astype(np.float32)  # (chunk, R, m, m)
-        key, sub = jax.random.split(key)
-        W_prev = state.W
-        state = chunk_fn(state, X_parts, y_parts, jnp.asarray(B_stack), sub, n_counts)
+        W_prev = W
+        for s in range(chunk):
+            t = jnp.int32(it + s + 1)
+            if stack is not None:
+                idx = ((it + s) * R + np.arange(R)) % stack.shape[0]
+                Bs = jnp.asarray(stack[idx])  # host→device upload, every iteration
+                transfer_stats["matrix_uploads"] += 1
+            else:
+                Bs = None  # drawn in-step, same as the device path
+            W, W_sum = one_iter(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs)
         it += chunk
-        eps = float(jnp.max(jnp.linalg.norm(state.W - W_prev, axis=1)))
-        w_cons = jnp.sum(state.W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
+        eps = float(jnp.max(jnp.linalg.norm(W - W_prev, axis=1)))  # blocking sync
+        transfer_stats["host_syncs"] += 1
+        w_cons = jnp.sum(W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
         obj_trace.append(float(obj.primal_objective(w_cons, X_flat, y_flat, cfg.lam)))
+        transfer_stats["host_syncs"] += 1  # objective pull is a second blocking sync
         time_trace.append(it)
+        eps_trace.append(eps)
         if eps < cfg.epsilon:
             break
 
-    w_cons = jnp.sum(state.W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
+    w_cons = jnp.sum(W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
     return GadgetResult(
-        W=state.W,
+        W=W,
         w_consensus=w_cons,
         iters=it,
         epsilon=eps,
         objective_trace=np.asarray(obj_trace),
         time_trace=np.asarray(time_trace),
+        eps_trace=np.asarray(eps_trace),
+        W_avg=W_sum / max(it, 1),
     )
 
 
@@ -181,12 +413,14 @@ def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int]):
     """Build a per-node GADGET step for use inside ``shard_map``.
 
     The returned ``step(w, X_local, y_local, t, key)`` runs the local Pegasos
-    half-step then ``cfg.gossip_rounds`` ppermute Push-Sum rounds over the
-    given mesh axes. ``t`` is a traced scalar; the gossip hop schedule is
-    rotated by the *python-level* step index captured at trace time via
-    closure — callers jit once per schedule offset or (default) keep the full
-    exponential schedule per step so rotation is unnecessary.
+    half-step (kernel-backed when ``cfg.use_kernels``) then
+    ``cfg.gossip_rounds`` ppermute Push-Sum rounds over the given mesh axes.
+    ``t`` is a traced scalar; the gossip hop schedule is rotated by the
+    *python-level* step index captured at trace time via closure — callers jit
+    once per schedule offset or (default) keep the full exponential schedule
+    per step so rotation is unnecessary.
     """
+    cfg = _resolve_kernels(cfg)
     sched = exponential_schedule(axis_sizes)
     R = len(sched) if cfg.gossip_rounds is None else cfg.gossip_rounds
 
@@ -195,7 +429,8 @@ def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int]):
         n_local = X_local.shape[0]
         ids = jax.random.randint(key, (cfg.batch_size,), 0, n_local)
         w_half = _local_half_step(w, X_local, y_local, ids, cfg.lam,
-                                  t.astype(jnp.float32), cfg.project_before_gossip)
+                                  t.astype(jnp.float32), cfg.project_before_gossip,
+                                  cfg.use_kernels)
         state = PushSumState(values=(w_half,), weight=jnp.float32(1.0))
         for k in range(R):
             state = push_sum_round(state, sched[k % len(sched)])

@@ -15,7 +15,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import svm_objective as obj
 from repro.core.gadget import GadgetConfig
 from repro.core.push_sum import PushSumSim
 

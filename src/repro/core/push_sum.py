@@ -21,7 +21,7 @@ ratio v/w at every node converges to the initial network average.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Sequence
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,7 @@ __all__ = [
     "PushSumSim",
     "GossipRound",
     "exponential_schedule",
+    "mix_rounds",
     "push_sum_round",
     "push_sum_mesh",
 ]
@@ -118,6 +119,21 @@ class PushSumSim:
         if not np.isfinite(tau):
             raise ValueError("disconnected topology: infinite mixing time")
         return max(1, int(np.ceil(tau * np.log(1.0 / gamma))))
+
+
+def mix_rounds(values: jax.Array, weight: jax.Array, B_rounds: jax.Array):
+    """Apply R Push-Sum rounds ``x' = B^T x`` to (n, ...) values and (n,) mass
+    weights, entirely on device. ``B_rounds``: (R, n, n) — precomputed stack
+    slices for deterministic topologies or fresh ``jax.random`` draws for the
+    paper's random protocol. Mass-conserving for any row-stochastic B.
+    """
+
+    def body(carry, B):
+        v, w = carry
+        return (B.T @ v, B.T @ w), None
+
+    (v, w), _ = jax.lax.scan(body, (values, weight), B_rounds)
+    return v, w
 
 
 # ---------------------------------------------------------------------------

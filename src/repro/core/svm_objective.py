@@ -8,8 +8,6 @@ Objective (paper Eq. 1):
 """
 from __future__ import annotations
 
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 

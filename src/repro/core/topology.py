@@ -18,18 +18,26 @@ to derive ppermute partner tables for the mesh path.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "ring_matrix",
     "complete_matrix",
+    "torus_matrix",
     "random_neighbor_matrix",
+    "random_neighbor_matrix_device",
     "metropolis_matrix",
     "one_peer_exponential_matrix",
     "exponential_partner",
+    "exponential_cycle_length",
     "is_doubly_stochastic",
     "mixing_time_bound",
+    "matrix_period",
+    "build_matrix_stack",
     "TOPOLOGIES",
+    "DETERMINISTIC_TOPOLOGIES",
 ]
 
 
@@ -58,6 +66,31 @@ def complete_matrix(n: int) -> np.ndarray:
     """Uniform gossip on the complete graph: B = 11^T / n (one-shot mixing)."""
     _check_n(n)
     return np.full((n, n), 1.0 / n)
+
+
+def torus_matrix(n: int, self_weight: float = 0.2) -> np.ndarray:
+    """2-D torus (grid with wraparound): each node averages with its four
+    lattice neighbors. The grid is r × c with r the largest divisor of n not
+    exceeding sqrt(n) — degenerate rows/columns fold duplicate neighbors back
+    onto the same entry, so the matrix stays symmetric doubly stochastic for
+    every n (an r=1 torus is just the ring).
+    """
+    _check_n(n)
+    if n == 1:
+        return np.ones((1, 1))
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    c = n // r
+    share = (1.0 - self_weight) / 4.0
+    B = np.zeros((n, n))
+    idx = np.arange(n)
+    row, col = np.divmod(idx, c)
+    for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        j = ((row + dr) % r) * c + (col + dc) % c
+        np.add.at(B, (idx, j), share)
+    B[idx, idx] += self_weight
+    return B
 
 
 def random_neighbor_matrix(n: int, rng: np.random.Generator, self_share: float = 0.5) -> np.ndarray:
@@ -102,6 +135,13 @@ def metropolis_matrix(adj: np.ndarray) -> np.ndarray:
     return B
 
 
+def exponential_cycle_length(n: int) -> int:
+    """k = ceil(log2 n): hops cycle through 1, 2, ..., 2^(k-1). The single
+    source of truth for the one-peer exponential schedule length — both the
+    per-round partner map and the stacked-matrix period derive from it."""
+    return max(1, int(np.ceil(np.log2(n)))) if n > 1 else 1
+
+
 def exponential_partner(n: int, t: int) -> np.ndarray:
     """Send-partner of every node at round t of the one-peer exponential graph.
 
@@ -112,8 +152,7 @@ def exponential_partner(n: int, t: int) -> np.ndarray:
     _check_n(n)
     if n == 1:
         return np.zeros(1, dtype=np.int64)
-    k = max(1, int(np.ceil(np.log2(n))))
-    hop = 1 << (t % k)
+    hop = 1 << (t % exponential_cycle_length(n))
     return (np.arange(n) + hop) % n
 
 
@@ -150,7 +189,11 @@ def mixing_time_bound(B: np.ndarray) -> float:
     return float(1.0 / np.log(1.0 / lam2))
 
 
-TOPOLOGIES = ("ring", "complete", "random", "exponential")
+TOPOLOGIES = ("ring", "complete", "torus", "random", "exponential")
+
+#: topologies whose round-t matrix is a deterministic function of (n, t) — these
+#: can be precomputed as a stacked (period, n, n) array and kept device-resident.
+DETERMINISTIC_TOPOLOGIES = ("ring", "complete", "torus", "exponential")
 
 
 def build_matrix(topology: str, n: int, t: int = 0, rng: np.random.Generator | None = None) -> np.ndarray:
@@ -159,9 +202,50 @@ def build_matrix(topology: str, n: int, t: int = 0, rng: np.random.Generator | N
         return ring_matrix(n)
     if topology == "complete":
         return complete_matrix(n)
+    if topology == "torus":
+        return torus_matrix(n)
     if topology == "random":
         rng = rng if rng is not None else np.random.default_rng(t)
         return random_neighbor_matrix(n, rng)
     if topology == "exponential":
         return one_peer_exponential_matrix(n, t)
     raise ValueError(f"unknown topology {topology!r}; expected one of {TOPOLOGIES}")
+
+
+def matrix_period(topology: str, n: int) -> int:
+    """Length of the round-t matrix cycle for a deterministic topology.
+
+    ``exponential`` cycles through hops 1, 2, ..., 2^(k-1) with k = ceil(log2 n);
+    the static graphs (ring, clique, torus) have period 1. ``random`` has no
+    period — its matrices are drawn fresh each round (on device, see
+    :func:`random_neighbor_matrix_device`).
+    """
+    if topology not in DETERMINISTIC_TOPOLOGIES:
+        raise ValueError(f"{topology!r} has no deterministic period")
+    return exponential_cycle_length(n) if topology == "exponential" else 1
+
+
+def build_matrix_stack(topology: str, n: int) -> np.ndarray:
+    """Stacked (period, n, n) mixing matrices covering one full cycle of a
+    deterministic topology. Upload once, index with ``t % period`` on device —
+    no per-round host builds remain in the training loop.
+    """
+    T = matrix_period(topology, n)
+    return np.stack([build_matrix(topology, n, t=t) for t in range(T)]).astype(np.float32)
+
+
+def random_neighbor_matrix_device(key, n: int, self_share: float = 0.5):
+    """Device-side draw of the paper's random one-neighbor mixing matrix.
+
+    Same distribution as :func:`random_neighbor_matrix` (each node keeps
+    ``self_share``, pushes the rest to one uniformly-random *other* node) but
+    generated with ``jax.random`` inside the jitted step, so the training loop
+    performs no host draws and no host→device transfers. Row-stochastic, mass
+    conserving under the ``x' = B^T x`` update.
+    """
+    if n == 1:
+        return jnp.ones((1, 1), jnp.float32)
+    targets = jax.random.randint(key, (n,), 0, n - 1)
+    targets = targets + (targets >= jnp.arange(n))  # uniform over others
+    return (self_share * jnp.eye(n, dtype=jnp.float32)
+            + (1.0 - self_share) * jax.nn.one_hot(targets, n, dtype=jnp.float32))

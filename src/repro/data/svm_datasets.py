@@ -15,8 +15,6 @@ while keeping d and sparsity exact.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator
-
 import numpy as np
 
 __all__ = ["SVMDataset", "PAPER_DATASETS", "make_dataset", "partition"]

@@ -1,0 +1,12 @@
+"""Version compatibility for Pallas TPU symbols.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; support
+both so the kernels run on every jaxlib the containers ship.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -1,0 +1,1 @@
+"""Pallas kernel package: flash_attention."""

@@ -18,12 +18,12 @@ needed.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
 
 __all__ = ["margins", "grad_update", "DEFAULT_BLK_B", "DEFAULT_BLK_D"]
 
@@ -63,7 +63,7 @@ def margins(X: jax.Array, w: jax.Array, y: jax.Array, *,
         out_specs=pl.BlockSpec((blk_b,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((blk_b,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(X, w, y)
@@ -109,7 +109,7 @@ def grad_update(X: jax.Array, w: jax.Array, coeff: jax.Array, scal: jax.Array, *
         out_specs=pl.BlockSpec((blk_d,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((blk_d,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(X, w, coeff, scal)

@@ -2,17 +2,43 @@
 
 Handles padding to block multiples, violator-coefficient computation, the
 global-norm ball projection (O(d) in jnp), and the loss scalar.
+
+Also the *dispatch layer* for callers that embed the kernels inside larger
+jitted programs (GADGET's device-resident gossip loop): ``local_half_step`` is
+jit/vmap/scan-safe (no jit of its own) and ``default_interpret`` picks Pallas
+interpret mode automatically off-TPU so CPU CI runs the same code path.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.hinge_subgrad import hinge_subgrad as K
 
-__all__ = ["pegasos_step"]
+__all__ = ["pegasos_step", "local_half_step", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """True when the Pallas kernels should run in interpret mode.
+
+    ``REPRO_PALLAS_INTERPRET=0/1`` overrides; otherwise interpret everywhere
+    except a real TPU backend, so CPU CI exercises the kernel code path.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:  # set-but-empty falls through to the auto default
+        return env.lower() not in ("0", "false", "off", "no")
+    return jax.default_backend() != "tpu"
+
+
+def _project_ball(w: jax.Array, lam: float) -> jax.Array:
+    """Pegasos 1/sqrt(lam)-ball projection. Duplicates obj.project_ball on
+    purpose: core imports kernels, so kernels cannot import core."""
+    norm = jnp.linalg.norm(w)
+    scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norm, 1e-30))
+    return w * scale
 
 
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
@@ -23,6 +49,38 @@ def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
     return jnp.pad(x, widths)
+
+
+def local_half_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
+                    t: jax.Array, project: bool = True,
+                    blk_b: int = K.DEFAULT_BLK_B, blk_d: int = K.DEFAULT_BLK_D,
+                    interpret: bool | None = None) -> jax.Array:
+    """GADGET step (e)+(f): kernel-backed Pegasos half-step, no loss scalar.
+
+    Deliberately NOT jitted — it is traced inside the caller's jit (vmapped
+    over the node axis, scanned over iterations in the gossip loop). Padded
+    rows carry y=0, so they select into the violator set with coefficient 0
+    and contribute nothing to the gradient — no validity mask needed.
+    """
+    B, d = X.shape
+    if interpret is None:
+        interpret = default_interpret()
+    blk_b_, blk_d_ = min(blk_b, B), min(blk_d, d)
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), blk_b_, 0), blk_d_, 1)
+    wp = _pad_to(w.astype(jnp.float32), blk_d_, 0)
+    yp = _pad_to(y.astype(jnp.float32), blk_b_, 0)
+
+    m = K.margins(Xp, wp, yp, blk_b=blk_b_, blk_d=blk_d_, interpret=interpret)
+    coeff = jnp.where(m < 1.0, yp, 0.0)
+
+    tf = jnp.asarray(t, jnp.float32)
+    alpha = 1.0 / (lam * tf)
+    scal = jnp.stack([lam * alpha, alpha / B])
+    w_half = K.grad_update(Xp, wp, coeff, scal, blk_b=blk_b_, blk_d=blk_d_,
+                           interpret=interpret)[:d]
+    if project:
+        w_half = _project_ball(w_half, lam)
+    return w_half.astype(w.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "blk_b", "blk_d", "interpret"))
@@ -47,6 +105,4 @@ def pegasos_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     scal = jnp.stack([lam * alpha, alpha / B])
     w_half = K.grad_update(Xp, wp, coeff, scal, blk_b=blk_b_, blk_d=blk_d_,
                            interpret=interpret)[:d]
-    norm = jnp.linalg.norm(w_half)
-    scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norm, 1e-30))
-    return (w_half * scale).astype(w.dtype), loss
+    return _project_ball(w_half, lam).astype(w.dtype), loss

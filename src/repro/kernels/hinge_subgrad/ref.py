@@ -11,6 +11,22 @@ import jax
 import jax.numpy as jnp
 
 
+def half_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array,
+                  project: bool = True) -> jax.Array:
+    """Oracle for ops.local_half_step: Pegasos half-step, optional projection,
+    no loss scalar — the per-node body of GADGET's device-resident loop."""
+    margins = y * (X @ w)
+    viol = (margins < 1.0).astype(X.dtype)
+    L = (X.T @ (viol * y)) / X.shape[0]
+    alpha = 1.0 / (lam * t)
+    w_half = (1.0 - lam * alpha) * w + alpha * L
+    if project:
+        norm = jnp.linalg.norm(w_half)
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norm, 1e-30))
+        w_half = w_half * scale
+    return w_half
+
+
 def pegasos_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array):
     """Returns (w_new (d,), mean_hinge_loss ()). X: (B, d); y: (B,) in {-1,+1}."""
     margins = y * (X @ w)

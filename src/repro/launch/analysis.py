@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.launch.hlo_parse import cost_analysis_dict
 from repro.models.config import compile_stages
 from repro.models.transformer import Model
 
@@ -50,7 +51,7 @@ class CostTriple(dict):
 
 def _cost_of(lowered, parse_collectives: Callable[[str], dict]) -> CostTriple:
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return CostTriple.of(float(ca.get("flops", 0.0)),
                          float(ca.get("bytes accessed", 0.0)),

@@ -41,7 +41,7 @@ HBM_BW = 819e9           # bytes/s per chip
 LINK_BW = 50e9           # bytes/s per ICI link
 
 from repro.launch.hlo_parse import (  # noqa: F401 — re-exported API
-    _COLL_RE, _GROUPS_RE, _shape_bytes, parse_collectives)
+    _COLL_RE, _GROUPS_RE, _shape_bytes, cost_analysis_dict, parse_collectives)
 
 
 def model_flops(cfg, shape: InputShape, n_params_active: int, n_params_total: int) -> float:
@@ -257,7 +257,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         res.per_device_bytes = (res.arg_bytes + res.temp_bytes
                                 + int(getattr(ma, "output_size_in_bytes", 0))
                                 - int(getattr(ma, "alias_size_in_bytes", 0)))
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         res.rolled_flops = float(ca.get("flops", 0.0))
         res.hlo_flops = res.rolled_flops
         res.hlo_bytes = float(ca.get("bytes accessed", 0.0))

@@ -10,7 +10,19 @@ from __future__ import annotations
 
 import re
 
-__all__ = ["parse_collectives", "_COLL_RE", "_GROUPS_RE", "_shape_bytes"]
+__all__ = ["parse_collectives", "cost_analysis_dict", "_COLL_RE", "_GROUPS_RE", "_shape_bytes"]
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return a one-element list of per-computation dicts; newer
+    ones return the dict directly (or None when analysis is unavailable).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
 
 _COLL_RE = re.compile(
     r"%(?P<name>[\w.\-]+) = (?P<dtype>\w+)\[(?P<dims>[\d,]*)\][^=]*"

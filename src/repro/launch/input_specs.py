@@ -11,8 +11,6 @@ Gossip-mode training batches gain a leading replica axis: (G, B/G, ...).
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -17,7 +17,7 @@ State layout: {"params": pytree, "opt": optimizer state, "step": scalar}.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax

@@ -8,7 +8,7 @@ stacked over repeats, so HLO size is O(pattern) not O(depth).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Sequence
 
 __all__ = ["MoEConfig", "ModelConfig", "compile_stages"]

@@ -6,7 +6,7 @@ a plain pytree so it checkpoints and gossips like any other training state.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Sequence
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,18 @@
 """Shared test fixtures. NOTE: no XLA_FLAGS here by design — tests must see
 the real single CPU device; only launch/dryrun.py forces 512 devices (in its
 own subprocess, exercised by tests/test_dryrun_subprocess.py)."""
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401  — real package wins when installed (CI)
+except ImportError:  # bare container: install the deterministic fallback shim
+    from tests import _hypothesis_fallback as _hf
+
+    sys.modules["hypothesis"] = _hf
+    sys.modules["hypothesis.strategies"] = _hf.strategies
 
 
 @pytest.fixture

@@ -1,0 +1,139 @@
+"""Device-resident GADGET loop: parity with the seed-style host-loop
+reference (same PRNG streams, same math — should agree to well under 1e-5),
+mass conservation of the stacked on-device mixing matrices, and the anytime
+traces coming straight off the device."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import jax
+from repro.core import topology as topo
+from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
+from tests.conftest import make_separable
+
+
+def _partition(X, y, m):
+    n_i = len(y) // m
+    return (jnp.asarray(X[: m * n_i].reshape(m, n_i, -1)),
+            jnp.asarray(y[: m * n_i].reshape(m, n_i)))
+
+
+def _cfg(**kw):
+    base = dict(lam=1e-3, batch_size=4, gossip_rounds=3, topology="exponential",
+                max_iters=200, check_every=100, epsilon=1e-8)
+    base.update(kw)
+    return GadgetConfig(**base)
+
+
+@pytest.mark.parametrize("topology,use_kernels", [
+    ("exponential", True), ("exponential", False),
+    ("random", True), ("random", False),
+])
+def test_device_matches_host_loop_reference(topology, use_kernels):
+    X, y, _ = make_separable(n=1200, d=12, seed=0)
+    Xp, yp = _partition(X, y, 6)
+    cfg = _cfg(topology=topology, use_kernels=use_kernels)
+    dev = gadget_train(Xp, yp, cfg)
+    ref = gadget_train_reference(Xp, yp, cfg)
+    assert dev.iters == ref.iters
+    np.testing.assert_allclose(np.asarray(dev.w_consensus),
+                               np.asarray(ref.w_consensus), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dev.W), np.asarray(ref.W), atol=1e-5)
+    np.testing.assert_allclose(dev.objective_trace, ref.objective_trace, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,d", [(5, 130), (8, 20), (130, 513), (1, 7)])
+@pytest.mark.parametrize("project", [True, False])
+def test_local_half_step_padding_matches_oracle(B, d, project):
+    """ops.local_half_step pads (B, d) to block multiples; padded rows carry
+    y=0 and the d-pad is sliced off — must match the unpadded pure-jnp oracle
+    at non-block-multiple shapes."""
+    from repro.kernels.hinge_subgrad import ops
+    from repro.kernels.hinge_subgrad.ref import half_step_ref
+
+    rng = np.random.default_rng(B * 1000 + d)
+    X = jnp.asarray(rng.normal(size=(B, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=B)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=d).astype(np.float32) * 0.1)
+    t = jnp.float32(7.0)
+    got = ops.local_half_step(w, X, y, lam=1e-3, t=t, project=project, interpret=True)
+    want = half_step_ref(w, X, y, 1e-3, t, project=project)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=1e-5)
+
+
+def test_gadget_exposes_averaged_iterate():
+    X, y, _ = make_separable(n=800, d=8, seed=7)
+    Xp, yp = _partition(X, y, 4)
+    res = gadget_train(Xp, yp, _cfg(max_iters=100, check_every=50))
+    assert res.W_avg.shape == res.W.shape
+    # the averaged iterate stays inside the 1/sqrt(lam) ball like every iterate
+    assert float(jnp.max(jnp.linalg.norm(res.W_avg, axis=1))) <= 1.0 / np.sqrt(1e-3) + 1e-4
+
+
+def test_kernel_and_pure_half_steps_agree():
+    X, y, _ = make_separable(n=800, d=10, seed=4)
+    Xp, yp = _partition(X, y, 4)
+    a = gadget_train(Xp, yp, _cfg(use_kernels=True))
+    b = gadget_train(Xp, yp, _cfg(use_kernels=False))
+    np.testing.assert_allclose(np.asarray(a.w_consensus),
+                               np.asarray(b.w_consensus), atol=1e-4)
+
+
+@pytest.mark.parametrize("topology", topo.DETERMINISTIC_TOPOLOGIES)
+@pytest.mark.parametrize("n", [4, 7, 16])
+def test_stacked_matrices_conserve_mass(topology, n):
+    stack = topo.build_matrix_stack(topology, n)
+    assert stack.shape == (topo.matrix_period(topology, n), n, n)
+    for t, B in enumerate(stack):
+        # x' = B^T x conserves total mass iff rows of B sum to 1
+        np.testing.assert_allclose(B.sum(axis=1), 1.0, atol=1e-6, err_msg=f"t={t}")
+        assert topo.is_doubly_stochastic(B, atol=1e-6), (topology, n, t)
+
+
+def test_exponential_stack_period_covers_all_hops():
+    n = 16
+    stack = topo.build_matrix_stack("exponential", n)
+    assert stack.shape[0] == 4  # log2(16) distinct hop matrices
+    x = np.arange(n, dtype=np.float64)
+    for B in stack:
+        x = B.T @ x
+    np.testing.assert_allclose(x, x.mean())  # full cycle = exact averaging
+
+
+def test_device_random_matrix_mass_conserving():
+    for i in range(5):
+        B = np.asarray(topo.random_neighbor_matrix_device(jax.random.PRNGKey(i), 9))
+        np.testing.assert_allclose(B.sum(axis=1), 1.0, atol=1e-6)
+        np.testing.assert_allclose(np.diag(B), 0.5, atol=1e-6)  # no self-targets
+        assert np.isclose(B.sum(), 9.0, atol=1e-5)
+
+
+def test_torus_matrix_symmetric_doubly_stochastic():
+    for n in (4, 6, 9, 16, 25):
+        B = topo.torus_matrix(n)
+        assert topo.is_doubly_stochastic(B, atol=1e-9)
+        np.testing.assert_allclose(B, B.T)
+        assert np.isfinite(topo.mixing_time_bound(B))
+
+
+def test_traces_with_truncated_final_chunk():
+    X, y, _ = make_separable(n=800, d=8, seed=5)
+    Xp, yp = _partition(X, y, 4)
+    # 130 iterations at check_every=50 → checks at 50, 100, 130
+    res = gadget_train(Xp, yp, _cfg(max_iters=130, check_every=50))
+    assert res.iters == 130
+    assert list(res.time_trace) == [50, 100, 130]
+    assert res.objective_trace.shape == (3,)
+    assert np.all(np.isfinite(res.objective_trace))
+    assert np.all(np.isfinite(res.eps_trace))
+    assert res.epsilon == pytest.approx(float(res.eps_trace[-1]))
+
+
+def test_anytime_stop_happens_on_device():
+    X, y, _ = make_separable(n=800, d=8, seed=6)
+    Xp, yp = _partition(X, y, 4)
+    res = gadget_train(Xp, yp, _cfg(lam=1e-2, epsilon=0.5, max_iters=5000, check_every=100))
+    assert res.iters < 5000
+    assert res.epsilon < 0.5
+    assert len(res.time_trace) == len(res.objective_trace) == len(res.eps_trace)
+    assert res.time_trace[-1] == res.iters

@@ -2,7 +2,6 @@
 loss, and dead nodes — the mass-conservation algebra under each model."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.resilience import FaultySim
 

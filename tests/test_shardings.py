@@ -3,7 +3,6 @@ matching per family, gossip/zero1 axis stripping. Runs on the single CPU
 device (specs are pure metadata; no mesh placement happens here)."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

@@ -38,7 +38,9 @@ def test_pegasos_accuracy_and_objective():
     X, y, _ = make_separable(n=3000, d=20, seed=1)
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     res = pegasos_train(Xj, yj, lam=1e-3, n_iters=1500, batch_size=8, seed=0)
-    acc = float(obj.accuracy(res.w, Xj, yj))
+    # assert on the iterate average — the vector Theorem 2 bounds; the last
+    # iterate is minibatch-noisy and its accuracy varies with the PRNG version
+    acc = float(obj.accuracy(res.w_avg, Xj, yj))
     assert acc > 0.93, acc
     # objective of the trained w beats the zero vector by a wide margin
     f_w = float(obj.primal_objective(res.w, Xj, yj, 1e-3))

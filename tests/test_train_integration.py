@@ -9,7 +9,6 @@ from repro.configs import get_config
 from repro.data.tokens import Batcher, TokenStreamConfig
 from repro.launch import steps as steps_mod
 from repro.models.transformer import Model
-from repro.optim.transforms import global_norm
 
 
 def _run(arch="llama3-8b", consensus="allreduce", n_replicas=4, steps=12,
