@@ -1,0 +1,91 @@
+"""Warn-only diff of fresh --quick benchmark JSON against a committed baseline.
+
+CI runs the --quick benchmark smoke jobs, then compares each fresh JSON
+against the baseline committed at the repo root (BENCH_kernels.json,
+BENCH_gossip_device.json). Wall-clock leaves (``seconds``, anything under
+``us_per_call``) that regress by more than ``--threshold`` (default 1.2 =
++20%) emit a GitHub ``::warning::`` annotation — warn-only, because hosted
+runners vary wildly; the committed baseline records the shape of the numbers,
+not a hard floor. Non-timing leaves (transfer counts, launch counts, guard
+flags, consensus diffs) are structural and still only warn, so a divergence
+is visible in the job log without making CI flaky.
+
+Exit status is non-zero only when a file is missing/unreadable — a broken
+baseline should fail loudly; a slow runner should not.
+
+Usage:
+    python benchmarks/check_regression.py --fresh out.json --baseline BENCH_x.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+WALLCLOCK_LEAVES = {"seconds"}
+WALLCLOCK_PARENTS = {"us_per_call"}
+# leaves that are noisy by construction (ratios of two wall-clocks, diffs of
+# float accumulations) — reported but never compared against the threshold
+SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
+               "consensus_max_abs_diff", "fused_vs_pr1_max_abs_diff"}
+
+
+def _leaves(obj, path=()):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _leaves(v, path + (str(k),))
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield path, float(obj)
+
+
+def compare(fresh: dict, baseline: dict, threshold: float) -> list[str]:
+    """Return warning strings for every regressed/diverged leaf."""
+    warnings = []
+    fresh_map = dict(_leaves(fresh))
+    for path, base_val in _leaves(baseline):
+        name = ".".join(path)
+        leaf = path[-1]
+        if leaf in SKIP_LEAVES:
+            continue
+        if path not in fresh_map:
+            warnings.append(f"{name}: present in baseline but missing from fresh run")
+            continue
+        new_val = fresh_map[path]
+        is_time = leaf in WALLCLOCK_LEAVES or bool(set(path) & WALLCLOCK_PARENTS)
+        if is_time:
+            if base_val > 0 and new_val > base_val * threshold:
+                warnings.append(
+                    f"{name}: wall-clock regression {base_val:.4g} -> {new_val:.4g} "
+                    f"({new_val / base_val:.2f}x, threshold {threshold:.2f}x)")
+        elif new_val != base_val:
+            warnings.append(f"{name}: structural change {base_val:.6g} -> {new_val:.6g}")
+    return warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", required=True, help="JSON emitted by this run")
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.2,
+                    help="wall-clock ratio above which to warn (default 1.2)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+        with open(args.baseline) as fh:
+            baseline = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::error::check_regression: cannot load benchmark JSON: {e}")
+        return 1
+
+    warnings = compare(fresh, baseline, args.threshold)
+    for w in warnings:
+        print(f"::warning::bench {args.baseline}: {w}")
+    if not warnings:
+        print(f"check_regression: {args.fresh} within {args.threshold:.2f}x of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

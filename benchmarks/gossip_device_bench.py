@@ -1,24 +1,30 @@
-"""Device-resident gossip loop vs the seed host-chunk loop.
+"""Fused device-resident gossip loop vs the PR 1 path vs the seed host loop.
 
 Measures, on the 32-node simulator at d=4096 (paper-scale weight dimension):
 
+  * **kernel dispatches per iteration** — the PR 1 path runs the two Pallas
+    half-step kernels for each of the m nodes plus R scanned Push-Sum matmuls
+    (2m + R dispatches); the fused path runs ONE ``fleet_half_step`` launch
+    for the whole fleet plus ONE collapsed mix-and-renormalize matmul (2).
+    Counts are structural (from m and R), reported alongside the ratio.
+  * **wall-clock** — end-to-end training time of the fused path
+    (``cfg.fused=True``, the default), the PR 1 path (``cfg.fused=False``)
+    and the seed-style host-chunk reference, same PRNG streams, same math.
+    Consensus agreement across all three is reported (the parity tests assert
+    ≤1e-5 against the reference oracle).
   * **transfer counter** — host→device mixing-matrix uploads and blocking
-    device→host ε-check syncs performed by each path, via
-    ``repro.core.gadget.transfer_stats``. The device path must do exactly one
-    upload (the stacked matrix cycle) and one sync (final result pull); the
-    host-loop reference pays one upload per iteration and two blocking syncs
-    per chunk (ε-check and objective pull).
-  * **transfer-guard proof** — the jitted device loop is re-run under
+    device→host ε-check syncs per path, via
+    ``repro.core.gadget.transfer_stats``. The device paths must do exactly one
+    upload (the stacked cycle — the collapsed *product* cycle when fused) and
+    one sync; the host-loop reference pays one upload per iteration and two
+    blocking syncs per chunk.
+  * **transfer-guard proof** — the jitted fused loop is re-run under
     ``jax.transfer_guard("disallow")`` with all inputs pre-placed via
     ``jax.device_put``: any implicit host transfer inside the loop would
     raise, so a clean pass certifies the loop is device-resident.
-  * **wall-clock** — end-to-end training time of both paths, same PRNG
-    streams, same math. On a single CPU device the consensus weights come out
-    bit-identical; across backends/fusion choices agreement is to ~1e-5
-    (what the parity tests assert), and the emitted `consensus_diff` field
-    reports the actual gap.
 
-Emits CSV rows via benchmarks.common.emit and optionally a JSON file.
+Emits CSV rows via benchmarks.common.emit and optionally a JSON file
+(CI diffs it against the committed BENCH_gossip_device.json baseline).
 """
 from __future__ import annotations
 
@@ -71,35 +77,58 @@ def run(n_nodes=32, d=4096, n_i=64, n_iters=200, check_every=50,
         topology="exponential", verbose=True, json_path=None):
     cfg = GadgetConfig(lam=1e-3, batch_size=8, gossip_rounds=4, topology=topology,
                        max_iters=n_iters, check_every=check_every, epsilon=0.0)
+    cfg_pr1 = cfg._replace(fused=False)
     Xp, yp = _make_parts(n_nodes, n_i, d)
 
-    # warm-up both paths with the measured config so wall-clock excludes
+    # warm-up every path with the measured config so wall-clock excludes
     # compilation (the device path's jit cache is keyed on the full config)
     _timed_train(gadget_train, Xp, yp, cfg)
+    _timed_train(gadget_train, Xp, yp, cfg_pr1)
     _timed_train(gadget_train_reference, Xp, yp, cfg)
 
-    dev, dev_s, dev_stats = _timed_train(gadget_train, Xp, yp, cfg)
+    fused, fused_s, fused_stats = _timed_train(gadget_train, Xp, yp, cfg)
+    pr1, pr1_s, pr1_stats = _timed_train(gadget_train, Xp, yp, cfg_pr1)
     ref, ref_s, ref_stats = _timed_train(gadget_train_reference, Xp, yp, cfg)
 
-    consensus_diff = float(jnp.max(jnp.abs(dev.w_consensus - ref.w_consensus)))
-    dev_transfers = dev_stats["matrix_uploads"] + dev_stats["host_syncs"]
+    consensus_diff = float(jnp.max(jnp.abs(fused.w_consensus - ref.w_consensus)))
+    fused_vs_pr1 = float(jnp.max(jnp.abs(fused.w_consensus - pr1.w_consensus)))
+    dev_transfers = fused_stats["matrix_uploads"] + fused_stats["host_syncs"]
     ref_transfers = ref_stats["matrix_uploads"] + ref_stats["host_syncs"]
     guard_ok = _transfer_guard_proof(Xp, yp, cfg)
+
+    # structural dispatch counts: PR 1 ran margins + grad_update per node and
+    # R scanned mixing matmuls; fused runs one fleet launch + one mix matmul.
+    # The random protocol has no precomputable product cycle, so its fused
+    # path still folds the R in-step draws with R (m,m)-sized matmuls — tiny
+    # next to the (m,m)@(m,d) mix, but counted honestly here.
+    R = cfg.gossip_rounds
+    fused_per_iter = 2 if topology != "random" else 2 + R
+    launches = {
+        "pr1_per_iter": 2 * n_nodes + R,
+        "fused_per_iter": fused_per_iter,
+        "ratio": (2 * n_nodes + R) / fused_per_iter,
+    }
 
     result = {
         "config": {"n_nodes": n_nodes, "d": d, "n_i": n_i, "n_iters": n_iters,
                    "topology": topology},
-        "device": {"seconds": dev_s, **dev_stats},
+        "device": {"seconds": fused_s, **fused_stats},  # fused path (default)
+        "pr1": {"seconds": pr1_s, **pr1_stats},
         "reference": {"seconds": ref_s, **ref_stats},
+        "launches_per_iter": launches,
         "transfer_ratio": ref_transfers / max(dev_transfers, 1),
-        "speedup": ref_s / dev_s,
+        "speedup": ref_s / fused_s,
+        "fused_speedup_vs_pr1": pr1_s / fused_s,
         "consensus_max_abs_diff": consensus_diff,
+        "fused_vs_pr1_max_abs_diff": fused_vs_pr1,
         "transfer_guard_clean": guard_ok,
     }
     if verbose:
-        emit(f"gossip_device/{topology}(m={n_nodes},d={d})", dev_s * 1e6,
-             f"speedup={result['speedup']:.2f}x;transfers={dev_transfers}v{ref_transfers}"
-             f";ratio={result['transfer_ratio']:.0f}x;guard={'clean' if guard_ok else 'FAIL'}"
+        emit(f"gossip_device/{topology}(m={n_nodes},d={d})", fused_s * 1e6,
+             f"speedup={result['speedup']:.2f}x;fused_vs_pr1={result['fused_speedup_vs_pr1']:.2f}x"
+             f";launches={launches['fused_per_iter']}v{launches['pr1_per_iter']}"
+             f"({launches['ratio']:.0f}x);transfers={dev_transfers}v{ref_transfers}"
+             f";guard={'clean' if guard_ok else 'FAIL'}"
              f";consensus_diff={consensus_diff:.1e}")
     if json_path:
         with open(json_path, "w") as fh:

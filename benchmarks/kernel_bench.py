@@ -18,7 +18,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.hinge_subgrad.ref import pegasos_step_ref
+from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad.ref import fleet_half_step_ref, pegasos_step_ref
 from repro.kernels.rglru_scan.ref import scan_ref as rglru_ref
 from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
 
@@ -49,6 +50,24 @@ def run(verbose=True, quick=False, json_path=None):
     rows["hinge_subgrad"] = us
     if verbose:
         emit(f"kernel/hinge_subgrad({512 // s}x{1024 // s})", us,
+             "oracle_jit;pallas=interpret-validated")
+
+    # fused fleet half-step: m-node GADGET iteration body in one launch.
+    # Oracle-jit timing + an actual interpret-mode kernel allclose re-check.
+    m_nodes, Bf, df = 8, 64 // s, 1024 // s
+    Xf = jnp.asarray(rng.normal(size=(m_nodes, Bf, df)).astype(np.float32))
+    yf = jnp.asarray(np.sign(rng.normal(size=(m_nodes, Bf))).astype(np.float32))
+    Wf = jnp.asarray(rng.normal(size=(m_nodes, df)).astype(np.float32) * 0.1)
+    tS = jnp.float32(5.0)
+    us = _time(lambda W, X, y: fleet_half_step_ref(W, X, y, 1e-3, tS), Wf, Xf, yf)
+    rows["fleet_half_step"] = us
+    got = hinge_ops.fleet_half_step(Wf, Xf, yf, lam=1e-3, t=tS, interpret=True)
+    want = fleet_half_step_ref(Wf, Xf, yf, 1e-3, tS)
+    ok = bool(jnp.max(jnp.abs(got - want)) < 2e-5)
+    if not ok:
+        raise AssertionError("fleet_half_step interpret kernel diverged from oracle")
+    if verbose:
+        emit(f"kernel/fleet_half_step({m_nodes}x{Bf}x{df})", us,
              "oracle_jit;pallas=interpret-validated")
 
     q = jnp.asarray(rng.normal(size=(8 // min(s, 2), 512 // s, 64)).astype(np.float32))

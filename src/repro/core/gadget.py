@@ -11,15 +11,22 @@ Every node i holds a horizontal partition M_i (n_i × d) and a weight vector
   (h)    [optional] project again
 The algorithm is *anytime*: it stops when max_i ‖ŵ_i^(t+1) − ŵ_i^(t)‖ < ε.
 
-The simulator path is **device-resident**: the whole training loop — local
-half-steps (Pallas ``margins``/``grad_update`` kernels, vmapped over nodes),
-Push-Sum mixing, the ε-check and the objective trace — is one jitted
-``lax.while_loop`` with donated weight buffers. Mixing matrices never cross
-the host boundary inside the loop: deterministic topologies (exponential,
-ring, clique/complete, torus) are uploaded once as a stacked (period, m, m)
-array and indexed with ``t % period``; the paper's random one-neighbor
-protocol is drawn with ``jax.random`` inside the step. The host wrapper
-(`gadget_train`) syncs exactly once, after termination, to materialize traces.
+The simulator path is **device-resident and fused** (cfg.fused, the default):
+steps (a)-(e) for all m nodes run as ONE Pallas ``fleet_half_step`` launch per
+iteration (node axis = parallel grid dimension, each X tile read from HBM
+once), and the R Push-Sum rounds of step (g) — a linear map — are collapsed
+into a single precomputed product ``P_t = (B_1 ⋯ B_R)^T`` applied as one
+mix-and-renormalize matmul. ``cfg.fused=False`` keeps the PR 1 path (two
+vmapped kernels per node + an R-round ``lax.scan``) for A/B benchmarking.
+Either way the whole training loop — half-steps, mixing, the ε-check and the
+objective trace — is one jitted ``lax.while_loop`` with donated weight
+buffers. Mixing matrices never cross the host boundary inside the loop:
+deterministic topologies (exponential, ring, clique/complete, torus) are
+uploaded once as a stacked (period, m, m) array — the per-iteration *product*
+cycle when fused, R× smaller — and the paper's random one-neighbor protocol
+is drawn with ``jax.random`` inside the step (R draws folded into one (m, m)
+product on device when fused). The host wrapper (`gadget_train`) syncs
+exactly once, after termination, to materialize traces.
 
 ``gadget_train_reference`` keeps the seed's host-chunk loop (per-iteration
 host matrix builds, per-chunk ``float(...)`` syncs) on the *same* PRNG
@@ -29,7 +36,11 @@ counter in ``benchmarks/gossip_device_bench.py`` measures against.
 Weighted consensus: the paper pushes n_i·ŵ_i so the consensus target is the
 data-weighted network average Σ n_i ŵ_i / N. We implement this by initializing
 the Push-Sum mass weight to n_i — the v/w ratio then converges to exactly that
-weighted mean for free, including under non-uniform partitions.
+weighted mean for free, including under non-uniform partitions. Non-uniform
+partitions are expressed by passing explicit per-node ``n_counts`` to
+`gadget_train` / `gadget_train_reference`: node i's valid rows are the first
+n_counts[i] of its (padded) partition, and sampling, mass weights, consensus
+and the objective trace all respect them.
 """
 from __future__ import annotations
 
@@ -42,8 +53,10 @@ import numpy as np
 
 from repro.core import svm_objective as obj
 from repro.core import topology as topo
-from repro.core.push_sum import PushSumState, exponential_schedule, mix_rounds, push_sum_round
+from repro.core.push_sum import (PushSumState, collapse_rounds, exponential_schedule,
+                                 mix_collapsed, mix_rounds, push_sum_round)
 from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad import ref as hinge_ref
 
 __all__ = [
     "GadgetConfig",
@@ -71,6 +84,10 @@ class GadgetConfig(NamedTuple):
     # pure-jnp where they would only interpret (CPU). True forces the kernel
     # path (interpret-mode off-TPU — what CI's device-path tests exercise).
     use_kernels: bool | None = None
+    # Fused per-iteration path (default): one fleet_half_step launch for all m
+    # nodes + one collapsed mix-and-renormalize matmul. False keeps the PR 1
+    # path (2 vmapped kernels per node + R scanned matmuls) for A/B benches.
+    fused: bool = True
 
 
 class GadgetResult(NamedTuple):
@@ -97,9 +114,26 @@ def reset_transfer_stats() -> None:
     transfer_stats["host_syncs"] = 0
 
 
-def _partition_counts(y_parts: jax.Array) -> jax.Array:
+def _partition_counts(y_parts: jax.Array, n_counts=None) -> jax.Array:
+    """Per-node valid-row counts as f32: uniform n_i unless the caller passes
+    explicit ``n_counts`` (non-uniform partitions, padded to a common n_i)."""
     m, n_i = y_parts.shape
-    return jnp.full((m,), float(n_i), jnp.float32)
+    if n_counts is None:
+        return jnp.full((m,), float(n_i), jnp.float32)
+    counts = np.asarray(n_counts, np.float32)
+    if counts.shape != (m,):
+        raise ValueError(f"n_counts must have shape ({m},), got {counts.shape}")
+    if np.any(counts < 1) or np.any(counts > n_i):
+        raise ValueError(f"n_counts must lie in [1, {n_i}]")
+    return jnp.asarray(counts)
+
+
+def _valid_row_mask(m: int, n_i: int, n_counts: jax.Array) -> jax.Array:
+    """Flat (m*n_i,) mask of real rows — the padded-partition counterpart of
+    ops.padded_row_mask, shared by the device loop and the reference oracle
+    so their objective traces mask identically."""
+    return (jnp.arange(n_i)[None, :]
+            < n_counts.astype(jnp.int32)[:, None]).reshape(m * n_i)
 
 
 def _resolve_kernels(cfg: GadgetConfig) -> GadgetConfig:
@@ -130,20 +164,33 @@ def _stream_keys(seed: int):
     return data_key, mix_key
 
 
-def _batch_ids(data_key: jax.Array, t: jax.Array, m: int, n_i: int, batch_size: int):
-    keys = jax.random.split(jax.random.fold_in(data_key, t), m)
-    return jax.vmap(lambda k: jax.random.randint(k, (batch_size,), 0, n_i))(keys)
+def _batch_ids(data_key: jax.Array, t: jax.Array, n_counts: jax.Array, batch_size: int):
+    """Per-node minibatch row ids, sampled from each node's first n_counts[i]
+    (valid) rows — identical to the old uniform draw when counts are uniform."""
+    keys = jax.random.split(jax.random.fold_in(data_key, t), n_counts.shape[0])
+    bounds = n_counts.astype(jnp.int32)
+    return jax.vmap(
+        lambda k, c: jax.random.randint(k, (batch_size,), 0, c)
+    )(keys, bounds)
 
 
 def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
-                 m: int, R: int, topology: str) -> jax.Array:
-    """(R, m, m) mixing matrices for iteration t (1-based), fully on device."""
+                 m: int, R: int, topology: str, fused: bool) -> jax.Array:
+    """Mixing for iteration t (1-based), fully on device: the (R, m, m)
+    per-round stack, or — when ``fused`` — the single collapsed (m, m) product
+    ``P_t = (B_1 ⋯ B_R)^T``. Deterministic topologies index the precomputed
+    product cycle (``B_stack`` then IS topology.build_product_stack); the
+    random protocol draws the same R matrices either way (same PRNG stream as
+    the sequential path) and folds them on device."""
     if topology == "random":
         kt = jax.random.fold_in(mix_key, t)
-        return jax.vmap(
+        Bs = jax.vmap(
             lambda r: topo.random_neighbor_matrix_device(jax.random.fold_in(kt, r), m)
         )(jnp.arange(R))
+        return collapse_rounds(Bs) if fused else Bs
     T = B_stack.shape[0]
+    if fused:
+        return B_stack[(t - 1) % T]
     idx = ((t - 1) * R + jnp.arange(R)) % T
     return B_stack[idx]
 
@@ -153,36 +200,51 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _gossip_step(cfg: GadgetConfig, m: int, n_i: int,
+def _gossip_step(cfg: GadgetConfig, m: int,
                  X: jax.Array, y: jax.Array, n_counts: jax.Array,
                  data_key: jax.Array, W: jax.Array, W_sum: jax.Array,
                  t: jax.Array, Bs: jax.Array):
-    """Steps (a)-(h) for all m nodes at iteration t, given the (R, m, m)
-    mixing matrices for this iteration. The single shared step body — the
-    device loop and the host-loop reference differ only in orchestration
-    (where Bs comes from, where the ε-check runs)."""
+    """Steps (a)-(h) for all m nodes at iteration t. ``Bs`` is the (R, m, m)
+    per-round stack (sequential path) or the collapsed (m, m) product P_t
+    (``cfg.fused``). The single shared step body — the device loop and the
+    host-loop reference differ only in orchestration (where Bs comes from,
+    where the ε-check runs)."""
     tf = t.astype(jnp.float32)
-    ids = _batch_ids(data_key, t, m, n_i, cfg.batch_size)
-    W_half = jax.vmap(
-        lambda w, Xi, yi, ii: _local_half_step(w, Xi, yi, ii, cfg.lam, tf,
-                                               cfg.project_before_gossip, cfg.use_kernels)
-    )(W, X, y, ids)
-    # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean.
-    vals, wts = mix_rounds(W_half * n_counts[:, None], n_counts, Bs)
+    ids = _batch_ids(data_key, t, n_counts, cfg.batch_size)
+    if cfg.fused:
+        # one gather, then steps (a)-(e) for the whole fleet in one launch
+        Xb = jax.vmap(lambda Xi, ii: Xi[ii])(X, ids)
+        yb = jax.vmap(lambda yi, ii: yi[ii])(y, ids)
+        if cfg.use_kernels:
+            W_half = hinge_ops.fleet_half_step(W, Xb, yb, lam=cfg.lam, t=tf,
+                                               project=cfg.project_before_gossip)
+        else:
+            W_half = hinge_ref.fleet_half_step_ref(W, Xb, yb, cfg.lam, tf,
+                                                   project=cfg.project_before_gossip)
+        # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean;
+        # R rounds collapsed into one fused mix-and-renormalize matmul.
+        vals, wts = mix_collapsed(W_half * n_counts[:, None], n_counts, Bs)
+    else:
+        W_half = jax.vmap(
+            lambda w, Xi, yi, ii: _local_half_step(w, Xi, yi, ii, cfg.lam, tf,
+                                                   cfg.project_before_gossip, cfg.use_kernels)
+        )(W, X, y, ids)
+        vals, wts = mix_rounds(W_half * n_counts[:, None], n_counts, Bs)
     W_new = vals / wts[:, None]
     if cfg.project_after_gossip:
         W_new = jax.vmap(lambda w: obj.project_ball(w, cfg.lam))(W_new)
     return W_new, W_sum + W_new
 
 
-def _one_iteration(cfg: GadgetConfig, m: int, n_i: int,
+def _one_iteration(cfg: GadgetConfig, m: int,
                    X: jax.Array, y: jax.Array, n_counts: jax.Array,
                    data_key: jax.Array, mix_key: jax.Array, B_stack: jax.Array | None,
                    W: jax.Array, W_sum: jax.Array, t: jax.Array):
     """One fully device-resident iteration: derive this iteration's mixing
-    matrices on device (stack slice or in-step draw), then the shared step."""
-    Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology)
-    return _gossip_step(cfg, m, n_i, X, y, n_counts, data_key, W, W_sum, t, Bs)
+    (stack slice, product-cycle slice, or in-step draw), then the shared step."""
+    Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology,
+                      cfg.fused)
+    return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs)
 
 
 def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
@@ -203,13 +265,15 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
         X_flat = X.reshape(m * n_i, d)
         y_flat = y.reshape(m * n_i)
         total_n = jnp.sum(n_counts)
+        # padded rows of non-uniform partitions are masked out of the trace
+        valid_flat = _valid_row_mask(m, n_i, n_counts)
 
         def step(carry, _):
             W, W_sum, t = carry
             active = t <= cfg.max_iters
             W, W_sum = jax.lax.cond(
                 active,
-                lambda a: _one_iteration(cfg, m, n_i, X, y, n_counts,
+                lambda a: _one_iteration(cfg, m, X, y, n_counts,
                                          data_key, mix_key, B_stack, *a),
                 lambda a: (a[0], a[1]),
                 (W, W_sum, t),
@@ -222,7 +286,8 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t), None, length=chunk)
             eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
             w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
-            objective = obj.primal_objective(w_cons, X_flat, y_flat, cfg.lam)
+            objective = obj.primal_objective_masked(w_cons, X_flat, y_flat,
+                                                    cfg.lam, valid_flat, total_n)
             obj_tr = obj_tr.at[ci].set(objective)
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
@@ -251,7 +316,8 @@ def _validate_topology(cfg: GadgetConfig) -> None:
         raise ValueError(f"unknown topology {cfg.topology!r}")
 
 
-def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Array):
+def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Array,
+                          n_counts=None):
     """Build the exact (jitted train fn, argument tuple) pair `gadget_train`
     executes: resolved config, one stacked-matrix upload, PRNG streams, fresh
     (donatable) weight buffers. The transfer-guard benchmark calls this too,
@@ -259,13 +325,17 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     Requires cfg.max_iters > 0."""
     m, n_i, d = X_parts.shape
     cfg = _resolve_kernels(cfg)
-    n_counts = _partition_counts(y_parts)
+    n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
 
     if cfg.topology == "random":
         B_stack = None
     else:
-        B_stack = jnp.asarray(topo.build_matrix_stack(cfg.topology, m))
+        # fused: upload the per-iteration collapsed-product cycle (R× smaller
+        # per iteration consumed) instead of the per-round matrix cycle
+        stack = (topo.build_product_stack(cfg.topology, m, cfg.gossip_rounds)
+                 if cfg.fused else topo.build_matrix_stack(cfg.topology, m))
+        B_stack = jnp.asarray(stack)
         transfer_stats["matrix_uploads"] += 1  # the only upload, ever
 
     chunk = min(cfg.check_every, cfg.max_iters)
@@ -280,12 +350,19 @@ def gadget_train(
     X_parts: jax.Array,
     y_parts: jax.Array,
     cfg: GadgetConfig = GadgetConfig(),
+    *,
+    n_counts=None,
 ) -> GadgetResult:
     """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d), y_parts: (m, n_i).
 
     Thin host wrapper around the jitted device loop: uploads the data and (for
     deterministic topologies) one stacked mixing-matrix cycle, runs the
     entire anytime loop on device, then syncs the result and traces once.
+
+    ``n_counts`` (optional, shape (m,)): per-node valid-row counts for
+    non-uniform partitions padded to a common n_i. Padded rows (beyond
+    n_counts[i]) must carry y=0; they are never sampled, carry no Push-Sum
+    mass, and are excluded from the consensus weighting and objective trace.
     """
     m, n_i, d = X_parts.shape
     _validate_topology(cfg)
@@ -298,7 +375,7 @@ def gadget_train(
                             objective_trace=empty, time_trace=empty.astype(np.int32),
                             eps_trace=empty, W_avg=jnp.zeros((m, d), X_parts.dtype))
 
-    train, args = _prepare_device_train(cfg, X_parts, y_parts)
+    train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts)
     out = train(*args)
     W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr = jax.block_until_ready(out)
     transfer_stats["host_syncs"] += 1  # single post-termination sync
@@ -332,8 +409,9 @@ def _make_reference_step(cfg: GadgetConfig, m: int, n_i: int, d: int):
 
     def step(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs):
         if cfg.topology == "random":
-            Bs = _iter_mixing(mix_key, None, t, m, cfg.gossip_rounds, cfg.topology)
-        return _gossip_step(cfg, m, n_i, X, y, n_counts, data_key, W, W_sum, t, Bs)
+            Bs = _iter_mixing(mix_key, None, t, m, cfg.gossip_rounds,
+                              cfg.topology, cfg.fused)
+        return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs)
 
     return jax.jit(step)
 
@@ -342,17 +420,20 @@ def gadget_train_reference(
     X_parts: jax.Array,
     y_parts: jax.Array,
     cfg: GadgetConfig = GadgetConfig(),
+    *,
+    n_counts=None,
 ) -> GadgetResult:
     """Seed-style host chunk loop on the same PRNG streams as `gadget_train`:
     mixing matrices cross the host boundary every iteration (deterministic
-    topologies) and every ε-check is a blocking ``float(...)`` sync. Kept as
-    the parity/tolerance oracle for the device-resident path and as the
-    baseline for the transfer-counter benchmark.
+    topologies) and every ε-check is a blocking ``float(...)`` sync. Always
+    runs *unfused* (two kernels per node, R sequential Push-Sum rounds) —
+    it is the seed-semantics parity oracle the fused device path is accepted
+    against, and the baseline for the transfer-counter benchmark.
     """
     m, n_i, d = X_parts.shape
     _validate_topology(cfg)
-    cfg = _resolve_kernels(cfg)
-    n_counts = _partition_counts(y_parts)
+    cfg = _resolve_kernels(cfg)._replace(fused=False)
+    n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
     stack = None if cfg.topology == "random" else topo.build_matrix_stack(cfg.topology, m)
     R = cfg.gossip_rounds
@@ -361,6 +442,8 @@ def gadget_train_reference(
     y = jnp.asarray(y_parts)
     X_flat = X.reshape(m * n_i, d)
     y_flat = y.reshape(m * n_i)
+    total_n = jnp.sum(n_counts)
+    valid_flat = _valid_row_mask(m, n_i, n_counts)
     one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d)
 
     W = jnp.zeros((m, d), X_parts.dtype)
@@ -383,8 +466,9 @@ def gadget_train_reference(
         it += chunk
         eps = float(jnp.max(jnp.linalg.norm(W - W_prev, axis=1)))  # blocking sync
         transfer_stats["host_syncs"] += 1
-        w_cons = jnp.sum(W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
-        obj_trace.append(float(obj.primal_objective(w_cons, X_flat, y_flat, cfg.lam)))
+        w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
+        obj_trace.append(float(obj.primal_objective_masked(
+            w_cons, X_flat, y_flat, cfg.lam, valid_flat, total_n)))
         transfer_stats["host_syncs"] += 1  # objective pull is a second blocking sync
         time_trace.append(it)
         eps_trace.append(eps)

@@ -37,6 +37,8 @@ __all__ = [
     "GossipRound",
     "exponential_schedule",
     "mix_rounds",
+    "collapse_rounds",
+    "mix_collapsed",
     "push_sum_round",
     "push_sum_mesh",
 ]
@@ -134,6 +136,33 @@ def mix_rounds(values: jax.Array, weight: jax.Array, B_rounds: jax.Array):
 
     (v, w), _ = jax.lax.scan(body, (values, weight), B_rounds)
     return v, w
+
+
+def collapse_rounds(B_rounds: jax.Array) -> jax.Array:
+    """Fold an (R, n, n) round stack into the single matrix P = B_R^T … B_1^T.
+
+    Push-Sum rounds are linear maps, so R sequential rounds collapse exactly:
+    ``mix_rounds(v, w, Bs) == (P @ v, P @ w)``. The fold runs R-1 small
+    (n, n)×(n, n) products instead of R (n, n)×(n, d) value mixes — the win
+    when d ≫ n, and the device-side counterpart of
+    :func:`repro.core.topology.build_product_stack` for matrices only known
+    inside the jitted step (the paper's random one-neighbor draws).
+    """
+
+    def body(P, B):
+        return B.T @ P, None
+
+    P0 = jnp.eye(B_rounds.shape[-1], dtype=B_rounds.dtype)
+    P, _ = jax.lax.scan(body, P0, B_rounds)
+    return P
+
+
+def mix_collapsed(values: jax.Array, weight: jax.Array, P: jax.Array):
+    """Apply a collapsed round product to (n, ...) values and (n,) mass
+    weights: one matmul per tensor, replacing the R-round ``mix_rounds`` scan.
+    ``P`` comes from :func:`collapse_rounds` or a precomputed
+    ``topology.build_product_stack`` slice."""
+    return P @ values, P @ weight
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 __all__ = [
     "hinge_loss",
     "primal_objective",
+    "primal_objective_masked",
     "hinge_subgradient",
     "pegasos_update",
     "project_ball",
@@ -29,6 +30,21 @@ def hinge_loss(w: jax.Array, X: jax.Array, y: jax.Array) -> jax.Array:
 
 def primal_objective(w: jax.Array, X: jax.Array, y: jax.Array, lam: float) -> jax.Array:
     return 0.5 * lam * jnp.dot(w, w) + hinge_loss(w, X, y)
+
+
+def primal_objective_masked(w: jax.Array, X: jax.Array, y: jax.Array,
+                            lam: float, valid: jax.Array,
+                            total: jax.Array) -> jax.Array:
+    """Primal objective over the ``valid`` rows of a padded sample matrix.
+
+    Non-uniform GADGET partitions pad every node to the same n_i; padded rows
+    carry y=0 and would each contribute a spurious hinge of 1 under the
+    unmasked mean. ``total`` is the true sample count (sum of per-node
+    n_counts), so for an all-true mask this reduces to ``primal_objective``.
+    """
+    margins = y * (X @ w)
+    hinge = jnp.sum(jnp.where(valid, jnp.maximum(0.0, 1.0 - margins), 0.0)) / total
+    return 0.5 * lam * jnp.dot(w, w) + hinge
 
 
 def hinge_subgradient(w: jax.Array, X: jax.Array, y: jax.Array) -> jax.Array:

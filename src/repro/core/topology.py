@@ -36,6 +36,8 @@ __all__ = [
     "mixing_time_bound",
     "matrix_period",
     "build_matrix_stack",
+    "product_period",
+    "build_product_stack",
     "TOPOLOGIES",
     "DETERMINISTIC_TOPOLOGIES",
 ]
@@ -232,6 +234,47 @@ def build_matrix_stack(topology: str, n: int) -> np.ndarray:
     """
     T = matrix_period(topology, n)
     return np.stack([build_matrix(topology, n, t=t) for t in range(T)]).astype(np.float32)
+
+
+def product_period(topology: str, n: int, rounds_per_iter: int) -> int:
+    """Length of the *per-iteration* collapsed-product cycle.
+
+    Iteration t (1-based) consumes rounds ``(t-1)*R .. (t-1)*R + R-1`` of the
+    round-matrix cycle (period T), so its product depends only on the start
+    offset ``s_t = ((t-1)*R) mod T`` — which cycles with period T / gcd(T, R).
+    For the static graphs (T=1) every iteration shares one product; for the
+    exponential graph the cycle is at most T entries, i.e. the uploaded stack
+    shrinks by R× relative to storing the R matrices of each iteration.
+    """
+    if rounds_per_iter < 1:
+        raise ValueError(f"need rounds_per_iter >= 1, got {rounds_per_iter}")
+    T = matrix_period(topology, n)
+    return T // np.gcd(T, rounds_per_iter)
+
+
+def build_product_stack(topology: str, n: int, rounds_per_iter: int) -> np.ndarray:
+    """Stacked (product_period, n, n) collapsed per-iteration mixing products.
+
+    ``mix_rounds`` is linear, so the R sequential Push-Sum rounds of one GADGET
+    iteration fold exactly into a single matrix: applying rounds B_1..B_R as
+    ``x' = B_R^T … B_1^T x`` equals ``x' = P x`` with ``P = (B_1 ⋯ B_R)^T``.
+    Entry k of the stack is the product for start offset ``s = (k*R) mod T``;
+    the device loop indexes it with ``(t-1) % product_period``. Products are
+    accumulated in float64 and cast once, so the collapsed path carries one
+    rounding step where the sequential path carries R.
+    """
+    R = int(rounds_per_iter)
+    T = matrix_period(topology, n)
+    singles = build_matrix_stack(topology, n).astype(np.float64)
+    period = product_period(topology, n, R)
+    out = np.empty((period, n, n), np.float64)
+    for k in range(period):
+        s = (k * R) % T
+        M = np.eye(n)
+        for r in range(R):
+            M = M @ singles[(s + r) % T]
+        out[k] = M.T
+    return out.astype(np.float32)
 
 
 def random_neighbor_matrix_device(key, n: int, self_share: float = 0.5):

@@ -11,6 +11,13 @@ block X. Two kernels, both VMEM-tiled:
     blocks in VMEM scratch and, on the last B block, writes
     w_half = (1 - lam*alpha) w + (alpha/B) g.
 
+``fleet_half_step`` fuses both phases for *all m nodes* in one ``pallas_call``:
+the node axis is a parallel grid dimension (replacing ``jax.vmap`` over the
+two kernels above), each node's (B, d) minibatch tile is read from HBM once
+and stays in VMEM across both phases, and margins → violator coefficients →
+gradient → the Pegasos axpy never touch HBM — only w_half is written back.
+One kernel launch per GADGET iteration instead of 2m.
+
 The ball projection needs a global ||w_half|| reduction and lives in the
 ops.py wrapper (O(d), bandwidth-trivial). Block shapes default to MXU/VREG
 friendly multiples of (8, 128); d and B are padded by the wrapper when
@@ -25,7 +32,8 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["margins", "grad_update", "DEFAULT_BLK_B", "DEFAULT_BLK_D"]
+__all__ = ["margins", "grad_update", "fleet_half_step",
+           "DEFAULT_BLK_B", "DEFAULT_BLK_D"]
 
 DEFAULT_BLK_B = 128
 DEFAULT_BLK_D = 512
@@ -67,6 +75,49 @@ def margins(X: jax.Array, w: jax.Array, y: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(X, w, y)
+
+
+def _fleet_kernel(x_ref, w_ref, y_ref, mask_ref, scal_ref, o_ref):
+    x = x_ref[0]       # (B, d) — the node's minibatch tile, resident in VMEM
+    w = w_ref[0]       # (d,)
+    yv = y_ref[0]      # (B,)
+    m = yv * (x @ w)                                   # phase 1: margins
+    coeff = jnp.where(m < 1.0, yv, 0.0) * mask_ref[...]  # violator selection
+    g = coeff @ x                                      # phase 2: X^T c, same tile
+    o_ref[0] = (1.0 - scal_ref[0]) * w + scal_ref[1] * g
+
+
+def fleet_half_step(X: jax.Array, W: jax.Array, y: jax.Array,
+                    row_mask: jax.Array, scal: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """Fused GADGET steps (a)-(e) for all m nodes in one launch.
+
+    X: (m, B, d) per-node minibatch tiles; W: (m, d); y: (m, B);
+    row_mask: (B,) validity of padded rows (shared across nodes —
+    ops.padded_row_mask); scal: (2,) = [lam*alpha, alpha/B] in SMEM.
+    Returns W_half (m, d) = (1 - scal[0]) W + scal[1] * (coeff @ X).
+
+    Grid is the node axis only (fully parallel); each program keeps its whole
+    (B, d) tile in VMEM across the margins and gradient phases, so X is read
+    from HBM exactly once and no intermediate (margins, coefficients) ever
+    round-trips through HBM. The wrapper bounds B*d so the tile fits VMEM.
+    """
+    m, B, d = X.shape
+    return pl.pallas_call(
+        _fleet_kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, B, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, B), lambda i: (i, 0)),
+            pl.BlockSpec((B,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(X, W, y, row_mask, scal)
 
 
 def _update_kernel(x_ref, w_ref, c_ref, scal_ref, o_ref, gacc):

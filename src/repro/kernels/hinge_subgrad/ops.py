@@ -4,9 +4,12 @@ Handles padding to block multiples, violator-coefficient computation, the
 global-norm ball projection (O(d) in jnp), and the loss scalar.
 
 Also the *dispatch layer* for callers that embed the kernels inside larger
-jitted programs (GADGET's device-resident gossip loop): ``local_half_step`` is
-jit/vmap/scan-safe (no jit of its own) and ``default_interpret`` picks Pallas
-interpret mode automatically off-TPU so CPU CI runs the same code path.
+jitted programs (GADGET's device-resident gossip loop): ``local_half_step``
+(one node) and ``fleet_half_step`` (all m nodes, one fused launch) are
+jit/vmap/scan-safe (no jit of their own) and ``default_interpret`` picks
+Pallas interpret mode automatically off-TPU so CPU CI runs the same code path.
+``padded_row_mask`` is the single statement of the padded-row convention all
+three wrappers share.
 """
 from __future__ import annotations
 
@@ -18,7 +21,13 @@ import jax.numpy as jnp
 
 from repro.kernels.hinge_subgrad import hinge_subgrad as K
 
-__all__ = ["pegasos_step", "local_half_step", "default_interpret"]
+__all__ = ["pegasos_step", "local_half_step", "fleet_half_step",
+           "padded_row_mask", "default_interpret", "FLEET_TILE_BUDGET_BYTES"]
+
+# Largest per-node (B_pad, d_pad) f32 minibatch tile the fused fleet kernel
+# will keep resident in VMEM (per grid program). Above this, fleet_half_step
+# falls back to the two-kernel vmapped path, which streams X in blocks.
+FLEET_TILE_BUDGET_BYTES = 4 * 1024 * 1024
 
 
 def default_interpret() -> bool:
@@ -41,6 +50,22 @@ def _project_ball(w: jax.Array, lam: float) -> jax.Array:
     return w * scale
 
 
+def padded_row_mask(n_padded: int, n_valid: int) -> jax.Array:
+    """Validity mask for minibatch rows introduced by block padding.
+
+    The single statement of the padded-row invariant all hinge_subgrad
+    wrappers share: X/y/w are zero-padded to block multiples, so padded rows
+    carry **y = 0**. A padded row therefore selects into the violator set
+    (margin 0 < 1) but with coefficient ``1[m<1]·y = 0`` — consumers that only
+    need the violator *coefficients* (``local_half_step``) are correct with no
+    mask at all. Anything that counts, sums, or re-weights rows — the hinge
+    loss in ``pegasos_step``, the explicit coefficient masking in the fused
+    fleet kernel — must AND/multiply with this mask instead of re-deriving
+    its own convention.
+    """
+    return jnp.arange(n_padded) < n_valid
+
+
 def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
     n = x.shape[axis]
     pad = (-n) % mult
@@ -58,9 +83,9 @@ def local_half_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     """GADGET step (e)+(f): kernel-backed Pegasos half-step, no loss scalar.
 
     Deliberately NOT jitted — it is traced inside the caller's jit (vmapped
-    over the node axis, scanned over iterations in the gossip loop). Padded
-    rows carry y=0, so they select into the violator set with coefficient 0
-    and contribute nothing to the gradient — no validity mask needed.
+    over the node axis, scanned over iterations in the gossip loop). Needs no
+    validity mask: per the ``padded_row_mask`` invariant, padded rows carry
+    y=0 and so contribute coefficient 0 to the gradient.
     """
     B, d = X.shape
     if interpret is None:
@@ -83,6 +108,47 @@ def local_half_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     return w_half.astype(w.dtype)
 
 
+def fleet_half_step(W: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
+                    t: jax.Array, project: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """GADGET steps (a)-(e) for the whole node fleet in ONE kernel launch.
+
+    W: (m, d) per-node weights, X: (m, B, d) gathered minibatch tiles,
+    y: (m, B). Replaces ``vmap(local_half_step)`` — the node axis becomes the
+    kernel's parallel grid dimension, so one ``pallas_call`` does the work of
+    2m launches and each X tile crosses HBM once instead of twice.
+
+    Like ``local_half_step`` this is trace-safe (no jit of its own) for use
+    inside the device-resident gossip loop. Tiles larger than
+    ``FLEET_TILE_BUDGET_BYTES`` fall back to the blocked two-kernel path,
+    which never needs the whole tile resident.
+    """
+    m, B, d = X.shape
+    if interpret is None:
+        interpret = default_interpret()
+
+    Bp = -(-B // 8) * 8        # f32 sublane multiple
+    dp = -(-d // 128) * 128    # lane multiple
+    if Bp * dp * 4 > FLEET_TILE_BUDGET_BYTES:
+        return jax.vmap(
+            lambda w, Xi, yi: local_half_step(w, Xi, yi, lam=lam, t=t,
+                                              project=project, interpret=interpret)
+        )(W, X, y)
+
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), 8, 1), 128, 2)
+    Wp = _pad_to(W.astype(jnp.float32), 128, 1)
+    yp = _pad_to(y.astype(jnp.float32), 8, 1)
+    mask = padded_row_mask(Bp, B).astype(jnp.float32)
+
+    tf = jnp.asarray(t, jnp.float32)
+    alpha = 1.0 / (lam * tf)
+    scal = jnp.stack([lam * alpha, alpha / B])
+    W_half = K.fleet_half_step(Xp, Wp, yp, mask, scal, interpret=interpret)[:, :d]
+    if project:
+        W_half = jax.vmap(lambda w: _project_ball(w, lam))(W_half)
+    return W_half.astype(W.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("lam", "blk_b", "blk_d", "interpret"))
 def pegasos_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
                  t: jax.Array, blk_b: int = K.DEFAULT_BLK_B,
@@ -95,8 +161,9 @@ def pegasos_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     yp = _pad_to(y.astype(jnp.float32), blk_b_, 0)
 
     m = K.margins(Xp, wp, yp, blk_b=blk_b_, blk_d=blk_d_, interpret=interpret)
-    # padded rows have y=0 => margin 0 < 1: mask them out of the violator set
-    row_valid = (jnp.arange(Xp.shape[0]) < B)
+    # the loss sums rows, so it needs the shared padded-row mask (see
+    # padded_row_mask: y=0 padding alone only protects the coefficients)
+    row_valid = padded_row_mask(Xp.shape[0], B)
     viol = (m < 1.0) & row_valid
     coeff = jnp.where(viol, yp, 0.0)
     loss = jnp.sum(jnp.where(row_valid, jnp.maximum(0.0, 1.0 - m), 0.0)) / B

@@ -27,6 +27,26 @@ def half_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.A
     return w_half
 
 
+def fleet_half_step_ref(W: jax.Array, X: jax.Array, y: jax.Array, lam: float,
+                        t: jax.Array, project: bool = True) -> jax.Array:
+    """Oracle for the fused fleet kernel: steps (a)-(e) for all m nodes at
+    once. X: (m, B, d) minibatch tiles, W: (m, d), y: (m, B) with padded rows
+    carrying y=0. Same per-node math as half_step_ref, batched over the node
+    axis — this is also the fused jnp path GADGET uses where the Pallas
+    kernels would only interpret (CPU)."""
+    B = X.shape[1]
+    margins = y * jnp.einsum("mbd,md->mb", X, W)
+    coeff = jnp.where(margins < 1.0, y, 0.0)
+    L = jnp.einsum("mb,mbd->md", coeff, X) / B
+    alpha = 1.0 / (lam * t)
+    W_half = (1.0 - lam * alpha) * W + alpha * L
+    if project:
+        norms = jnp.linalg.norm(W_half, axis=1, keepdims=True)
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norms, 1e-30))
+        W_half = W_half * scale
+    return W_half
+
+
 def pegasos_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array):
     """Returns (w_new (d,), mean_hinge_loss ()). X: (B, d); y: (B,) in {-1,+1}."""
     margins = y * (X @ w)

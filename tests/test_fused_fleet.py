@@ -1,0 +1,238 @@
+"""Fused fleet half-step kernel + collapsed gossip mixing.
+
+Three acceptance surfaces:
+  * collapsed mixing products are exactly the linear fold of the sequential
+    per-round scan (property-tested over every topology, node count, round
+    count and iteration offset),
+  * the fused fleet kernel matches the pure-jnp oracle at non-block-multiple
+    (B, d) shapes, padded rows and all,
+  * the fused GADGET path end-to-end (gadget_train, cfg.fused=True — the
+    default) agrees with both the unfused PR 1 path and the host-loop
+    reference oracle, including under non-uniform ``n_counts`` partitions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
+from repro.core.push_sum import collapse_rounds, mix_collapsed, mix_rounds
+from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad.ref import fleet_half_step_ref
+from tests.conftest import make_separable
+
+
+# ---------------------------------------------------------------------------
+# Collapsed mixing == sequential mix_rounds (property test, shim-compatible)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=16, deadline=None)
+@given(st.sampled_from(list(topo.DETERMINISTIC_TOPOLOGIES)),
+       st.integers(2, 13), st.integers(1, 6), st.integers(1, 9))
+def test_collapsed_products_match_sequential_deterministic(topology, n, R, t):
+    """build_product_stack entry (t-1) % period must act exactly like the R
+    scanned rounds of iteration t for every deterministic topology."""
+    rng = np.random.default_rng(n * 100 + R * 10 + t)
+    v = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+
+    stack = topo.build_matrix_stack(topology, n)
+    idx = ((t - 1) * R + np.arange(R)) % stack.shape[0]
+    v_seq, w_seq = mix_rounds(v, w, jnp.asarray(stack[idx]))
+
+    pstack = topo.build_product_stack(topology, n, R)
+    assert pstack.shape == (topo.product_period(topology, n, R), n, n)
+    P = jnp.asarray(pstack[(t - 1) % pstack.shape[0]])
+    v_col, w_col = mix_collapsed(v, w, P)
+
+    np.testing.assert_allclose(np.asarray(v_seq), np.asarray(v_col), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w_seq), np.asarray(w_col), atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(2, 13), st.integers(1, 6), st.integers(0, 99))
+def test_collapse_rounds_matches_sequential_random_protocol(n, R, seed):
+    """collapse_rounds folds the paper's random one-neighbor draws into one
+    matrix with the same action as the R-round scan (mass conserved too)."""
+    key = jax.random.PRNGKey(seed)
+    Bs = jax.vmap(
+        lambda r: topo.random_neighbor_matrix_device(jax.random.fold_in(key, r), n)
+    )(jnp.arange(R))
+    rng = np.random.default_rng(seed + 7)
+    v = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, size=n).astype(np.float32))
+
+    v_seq, w_seq = mix_rounds(v, w, Bs)
+    P = collapse_rounds(Bs)
+    v_col, w_col = mix_collapsed(v, w, P)
+
+    np.testing.assert_allclose(np.asarray(v_seq), np.asarray(v_col), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w_seq), np.asarray(w_col), atol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(w_col)), float(jnp.sum(w)), rtol=1e-5)
+
+
+def test_product_stack_period_shrinks_stack():
+    # exponential at n=16 has round period 4; R=4 folds a whole cycle into ONE
+    # uploaded matrix per iteration (period 1) — exact averaging, 4x smaller.
+    pstack = topo.build_product_stack("exponential", 16, 4)
+    assert pstack.shape[0] == 1
+    x = np.arange(16, dtype=np.float32)
+    np.testing.assert_allclose(pstack[0] @ x, np.full(16, x.mean()), atol=1e-5)
+    # co-prime R walks every offset: period stays T
+    assert topo.build_product_stack("exponential", 16, 3).shape[0] == 4
+    # static graphs always collapse to a single product
+    assert topo.build_product_stack("ring", 7, 5).shape[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# Fused fleet kernel vs jnp oracle (padding sweep)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,B,d", [
+    (4, 8, 128),     # exact block multiples
+    (3, 5, 130),     # both axes padded
+    (6, 1, 7),       # single-row batch, tiny d
+    (2, 13, 513),    # odd everything
+    (1, 8, 96),      # single node
+])
+@pytest.mark.parametrize("project", [True, False])
+def test_fleet_half_step_padding_matches_oracle(m, B, d, project):
+    """The fused kernel pads B to sublane and d to lane multiples; padded rows
+    are masked via the shared padded_row_mask helper and the d-pad is sliced
+    off — must match the unpadded oracle at non-multiple shapes."""
+    rng = np.random.default_rng(m * 10000 + B * 100 + d)
+    X = jnp.asarray(rng.normal(size=(m, B, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=(m, B))).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 0.1)
+    t = jnp.float32(7.0)
+    got = hinge_ops.fleet_half_step(W, X, y, lam=1e-3, t=t, project=project,
+                                    interpret=True)
+    want = fleet_half_step_ref(W, X, y, 1e-3, t, project=project)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-5)
+
+
+def test_fleet_half_step_nonzero_pad_rows_are_masked():
+    """Unlike local_half_step, the fleet kernel masks explicitly — a padded
+    row is dropped even if the caller's padding carried garbage y. Feed a
+    shape where padding exists and check the oracle on the valid prefix."""
+    rng = np.random.default_rng(3)
+    m, B, d = 2, 3, 40  # B pads 3 -> 8, d pads 40 -> 128
+    X = jnp.asarray(rng.normal(size=(m, B, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=(m, B))).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 0.1)
+    got = hinge_ops.fleet_half_step(W, X, y, lam=1e-2, t=jnp.float32(3.0),
+                                    interpret=True)
+    want = fleet_half_step_ref(W, X, y, 1e-2, jnp.float32(3.0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_fleet_half_step_tile_budget_fallback(monkeypatch):
+    """Tiles above FLEET_TILE_BUDGET_BYTES take the blocked two-kernel path —
+    same math, no whole-tile VMEM residency."""
+    rng = np.random.default_rng(9)
+    m, B, d = 2, 9, 260
+    X = jnp.asarray(rng.normal(size=(m, B, d)).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.normal(size=(m, B))).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 0.1)
+    monkeypatch.setattr(hinge_ops, "FLEET_TILE_BUDGET_BYTES", 1024)
+    got = hinge_ops.fleet_half_step(W, X, y, lam=1e-3, t=jnp.float32(5.0),
+                                    interpret=True)
+    want = fleet_half_step_ref(W, X, y, 1e-3, jnp.float32(5.0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_padded_row_mask_invariant():
+    mask = hinge_ops.padded_row_mask(8, 5)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True] * 5 + [False] * 3)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: fused path vs PR 1 path vs reference; non-uniform n_counts
+# ---------------------------------------------------------------------------
+
+
+def _partition(X, y, m):
+    n_i = len(y) // m
+    return (jnp.asarray(X[: m * n_i].reshape(m, n_i, -1)),
+            jnp.asarray(y[: m * n_i].reshape(m, n_i)))
+
+
+def _cfg(**kw):
+    base = dict(lam=1e-3, batch_size=4, gossip_rounds=3, topology="exponential",
+                max_iters=150, check_every=75, epsilon=1e-8)
+    base.update(kw)
+    return GadgetConfig(**base)
+
+
+@pytest.mark.parametrize("topology", ["exponential", "torus", "random"])
+def test_fused_path_matches_unfused_path(topology):
+    X, y, _ = make_separable(n=1000, d=10, seed=2)
+    Xp, yp = _partition(X, y, 5)
+    fused = gadget_train(Xp, yp, _cfg(topology=topology, fused=True))
+    seq = gadget_train(Xp, yp, _cfg(topology=topology, fused=False))
+    assert fused.iters == seq.iters
+    np.testing.assert_allclose(np.asarray(fused.w_consensus),
+                               np.asarray(seq.w_consensus), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused.W), np.asarray(seq.W), atol=1e-5)
+
+
+def _nonuniform_parts(seed=1, m=4, n_max=50, d=8):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    counts = rng.integers(n_max // 3, n_max + 1, size=m)
+    counts[0] = n_max  # keep the padded width tight against one full node
+    X = np.zeros((m, n_max, d), np.float32)
+    y = np.zeros((m, n_max), np.float32)
+    for i, c in enumerate(counts):
+        Xi = rng.normal(size=(c, d)).astype(np.float32)
+        X[i, :c] = Xi
+        y[i, :c] = np.sign(Xi @ w_true)
+    return jnp.asarray(X), jnp.asarray(y), counts
+
+
+def test_nonuniform_counts_device_matches_reference():
+    Xp, yp, counts = _nonuniform_parts()
+    cfg = _cfg(max_iters=100, check_every=50)
+    dev = gadget_train(Xp, yp, cfg, n_counts=counts)
+    ref = gadget_train_reference(Xp, yp, cfg, n_counts=counts)
+    assert dev.iters == ref.iters
+    np.testing.assert_allclose(np.asarray(dev.w_consensus),
+                               np.asarray(ref.w_consensus), atol=1e-5)
+    np.testing.assert_allclose(dev.objective_trace, ref.objective_trace, rtol=1e-5)
+
+
+def test_nonuniform_counts_weight_the_consensus():
+    Xp, yp, counts = _nonuniform_parts(seed=5)
+    res = gadget_train(Xp, yp, _cfg(max_iters=60, check_every=30),
+                       n_counts=counts)
+    want = (np.asarray(res.W) * counts[:, None]).sum(0) / counts.sum()
+    np.testing.assert_allclose(np.asarray(res.w_consensus), want, atol=1e-5)
+    assert np.all(np.isfinite(res.objective_trace))
+
+
+def test_uniform_counts_match_default_api():
+    X, y, _ = make_separable(n=600, d=8, seed=3)
+    Xp, yp = _partition(X, y, 4)
+    cfg = _cfg(max_iters=80, check_every=40)
+    a = gadget_train(Xp, yp, cfg)
+    b = gadget_train(Xp, yp, cfg, n_counts=[Xp.shape[1]] * 4)
+    np.testing.assert_allclose(np.asarray(a.w_consensus),
+                               np.asarray(b.w_consensus), atol=1e-6)
+    np.testing.assert_allclose(a.objective_trace, b.objective_trace, rtol=1e-6)
+
+
+def test_n_counts_validation():
+    Xp, yp, _ = _nonuniform_parts()
+    cfg = _cfg(max_iters=10, check_every=10)
+    with pytest.raises(ValueError, match="n_counts"):
+        gadget_train(Xp, yp, cfg, n_counts=[1, 2])
+    with pytest.raises(ValueError, match="n_counts"):
+        gadget_train(Xp, yp, cfg, n_counts=[0, 10, 10, 10])
+    with pytest.raises(ValueError, match="n_counts"):
+        gadget_train_reference(Xp, yp, cfg, n_counts=[999] * 4)
