@@ -17,7 +17,7 @@ def run(dataset="reuters", n_iters=1600, verbose=True, csv_path=None):
     runcfg = PAPER_RUNS[dataset]
     ds = bench_dataset(dataset)
     Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
-    Xp, yp = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
+    Xp, yp, nc = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
     Xpj, ypj = jnp.asarray(Xp), jnp.asarray(yp)
 
     # check cadence = curve resolution: traces are recorded on device every
@@ -25,7 +25,7 @@ def run(dataset="reuters", n_iters=1600, verbose=True, csv_path=None):
     seg = max(100, n_iters // 12)
     cfg = runcfg.gadget._replace(max_iters=n_iters, check_every=seg, batch_size=8,
                                  epsilon=0.0)  # disable early stop for full curve
-    res = gadget_train(Xpj, ypj, cfg)
+    res = gadget_train(Xpj, ypj, cfg, n_counts=nc)
 
     # the objective AND the anytime ε-curve (max_i ‖Δŵ_i‖ per check) come
     # straight off the device traces — no extra host-side recomputation

@@ -19,7 +19,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hinge_subgrad import ops as hinge_ops
-from repro.kernels.hinge_subgrad.ref import fleet_half_step_ref, pegasos_step_ref
+from repro.kernels.hinge_subgrad.ref import (ell_fleet_half_step_ref,
+                                             fleet_half_step_ref, pegasos_step_ref)
 from repro.kernels.rglru_scan.ref import scan_ref as rglru_ref
 from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
 
@@ -68,6 +69,24 @@ def run(verbose=True, quick=False, json_path=None):
         raise AssertionError("fleet_half_step interpret kernel diverged from oracle")
     if verbose:
         emit(f"kernel/fleet_half_step({m_nodes}x{Bf}x{df})", us,
+             "oracle_jit;pallas=interpret-validated")
+
+    # sparse (padded-ELL) fleet half-step at reuters-like density: gather-dot
+    # margins + scatter-add grad, same m-node one-iteration body as above but
+    # touching k instead of d feature entries per row.
+    kS = max(8, df // 64)
+    colsS = jnp.asarray(rng.integers(0, df, size=(m_nodes, Bf, kS)).astype(np.int32))
+    valsS = jnp.asarray(np.abs(rng.normal(size=(m_nodes, Bf, kS))).astype(np.float32))
+    us = _time(lambda W, c, v, y: ell_fleet_half_step_ref(W, c, v, y, 1e-3, tS),
+               Wf, colsS, valsS, yf)
+    rows["ell_fleet_half_step"] = us
+    got = hinge_ops.ell_fleet_half_step(Wf, colsS, valsS, yf, lam=1e-3, t=tS,
+                                        interpret=True)
+    want = ell_fleet_half_step_ref(Wf, colsS, valsS, yf, 1e-3, tS)
+    if not bool(jnp.max(jnp.abs(got - want)) < 2e-5):
+        raise AssertionError("ell_fleet_half_step interpret kernel diverged from oracle")
+    if verbose:
+        emit(f"kernel/ell_fleet_half_step({m_nodes}x{Bf}x{df}@k={kS})", us,
              "oracle_jit;pallas=interpret-validated")
 
     q = jnp.asarray(rng.normal(size=(8 // min(s, 2), 512 // s, 64)).astype(np.float32))

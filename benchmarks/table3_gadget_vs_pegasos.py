@@ -34,11 +34,11 @@ def run(datasets=None, n_iters=1200, verbose=True):
         t_cen = time.time() - t0
         acc_cen = float(obj.accuracy(cen.w, Xte, yte))
 
-        Xp, yp = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
+        Xp, yp, nc = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
         gcfg = runcfg.gadget._replace(max_iters=n_iters, batch_size=8,
                                       check_every=max(200, n_iters // 4))
         t0 = time.time()
-        res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp), gcfg)
+        res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp), gcfg, n_counts=nc)
         t_gad = time.time() - t0
         acc_gad = float(obj.accuracy(res.w_consensus, Xte, yte))
         # per-node accuracy spread (the paper reports node-averaged accuracy)

@@ -28,11 +28,12 @@ def run(datasets=("reuters", "usps", "adult"), n_iters=1200, verbose=True):
         runcfg = PAPER_RUNS[name]
         ds = bench_dataset(name)
         Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
-        Xp, yp = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
+        Xp, yp, nc = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
 
         t0 = time.time()
         res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp),
-                           runcfg.gadget._replace(max_iters=n_iters, batch_size=8))
+                           runcfg.gadget._replace(max_iters=n_iters, batch_size=8),
+                           n_counts=nc)
         t_gad = time.time() - t0
         acc_gad = float(obj.accuracy(res.w_consensus, Xte, yte))
 

@@ -44,11 +44,12 @@ def run(datasets=("adult", "mnist", "usps", "webspam"), n_iters=1000, verbose=Tr
         jnp.asarray(cen.w).block_until_ready()
         t_cen = t_load_full + (time.time() - t0)
 
-        Xp, yp = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
+        Xp, yp, nc = partition(ds.X_train, ds.y_train, runcfg.n_nodes)
         t_load_node = _load_proxy(np.asarray(Xp[0]))  # per-node load (parallel)
         t0 = time.time()
         res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp),
-                           runcfg.gadget._replace(max_iters=n_iters, batch_size=8))
+                           runcfg.gadget._replace(max_iters=n_iters, batch_size=8),
+                           n_counts=nc)
         t_gad = t_load_node + (time.time() - t0)
 
         rows.append({

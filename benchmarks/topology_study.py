@@ -20,11 +20,11 @@ from repro.data.svm_datasets import partition
 def run(dataset="usps", n_iters=900, n_nodes=10, verbose=True):
     ds = bench_dataset(dataset)
     Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
-    Xp, yp = partition(ds.X_train, ds.y_train, n_nodes)
+    Xp, yp, nc = partition(ds.X_train, ds.y_train, n_nodes)
     Xpj, ypj = jnp.asarray(Xp), jnp.asarray(yp)
     rows = []
     for topology in ("complete", "exponential", "random", "ring"):
-        res = gadget_train(Xpj, ypj, GadgetConfig(
+        res = gadget_train(Xpj, ypj, n_counts=nc, cfg=GadgetConfig(
             lam=ds.lam, batch_size=8, gossip_rounds=2, topology=topology,
             max_iters=n_iters, check_every=300, epsilon=0.0))
         acc = float(obj.accuracy(res.w_consensus, Xte, yte))

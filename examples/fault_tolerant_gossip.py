@@ -43,7 +43,7 @@ def gadget_with_faults(Xp, yp, lam, sim: FaultySim, n_iters=1200, batch=8, seed=
 def main():
     ds = make_dataset("usps", scale=0.4, seed=0)
     Xte, yte = jnp.asarray(ds.X_test), jnp.asarray(ds.y_test)
-    Xp, yp = partition(ds.X_train, ds.y_train, 10)
+    Xp, yp, _nc = partition(ds.X_train, ds.y_train, 10)
     Xp, yp = jnp.asarray(Xp), jnp.asarray(yp)
 
     for name, sim in [

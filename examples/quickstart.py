@@ -26,9 +26,9 @@ def main():
     cen = pegasos_train(Xtr, ytr, lam=ds.lam, n_iters=1500, batch_size=8)
     print(f"centralized Pegasos   acc={float(obj.accuracy(cen.w, Xte, yte)):.3f}")
 
-    Xp, yp = partition(ds.X_train, ds.y_train, m=10)
-    res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp),
-                       GadgetConfig(lam=ds.lam, batch_size=8, gossip_rounds=4,
+    Xp, yp, nc = partition(ds.X_train, ds.y_train, m=10)
+    res = gadget_train(jnp.asarray(Xp), jnp.asarray(yp), n_counts=nc,
+                       cfg=GadgetConfig(lam=ds.lam, batch_size=8, gossip_rounds=4,
                                     topology="random", epsilon=1e-3,
                                     max_iters=1500, check_every=300))
     acc = float(obj.accuracy(res.w_consensus, Xte, yte))

@@ -33,6 +33,19 @@ host matrix builds, per-chunk ``float(...)`` syncs) on the *same* PRNG
 streams — it is the parity oracle for tests and the baseline the transfer
 counter in ``benchmarks/gossip_device_bench.py`` measures against.
 
+Sparse partitions: ``gadget_train`` / ``gadget_train_reference`` also accept
+``repro.sparse.EllPartitions`` — stacked (m, n_i, k) padded-ELL column/value
+planes — in place of the dense (m, n_i, d) array. The local half-step then
+runs over the ELL planes (``ell_fleet_half_step`` kernels, or the jnp gather/
+scatter oracle off-kernel) touching O(B·k) feature bytes per iteration instead
+of O(B·d), and the objective trace does its full-data pass as a gather-dot.
+Gossip/Push-Sum are over the *dense* resident weights and are untouched —
+mixing is linear in w, so the PR 2 collapsed-product path applies verbatim.
+The sparse half-step is inherently fleet-wide (one launch for all m nodes);
+``cfg.fused`` therefore only selects collapsed vs sequential mixing in sparse
+mode. At CCAT sparsity (0.16%) this is the difference between a ~147 GB dense
+train split and ~0.5 GB of planes — the full-shape paper scenario fits.
+
 Weighted consensus: the paper pushes n_i·ŵ_i so the consensus target is the
 data-weighted network average Σ n_i ŵ_i / N. We implement this by initializing
 the Push-Sum mass weight to n_i — the v/w ratio then converges to exactly that
@@ -136,6 +149,21 @@ def _valid_row_mask(m: int, n_i: int, n_counts: jax.Array) -> jax.Array:
             < n_counts.astype(jnp.int32)[:, None]).reshape(m * n_i)
 
 
+def _unpack_partitions(X_parts):
+    """Normalize the data argument: returns ``(X, m, n_i, d, dtype)`` where X
+    is the dense (m, n_i, d) device array, or the ``(cols, vals)`` tuple of
+    stacked padded-ELL planes when the caller passed
+    ``repro.sparse.EllPartitions`` (duck-typed on ``.cols``/``.vals``/``.d``)."""
+    if hasattr(X_parts, "cols") and hasattr(X_parts, "vals"):
+        cols = jnp.asarray(X_parts.cols, jnp.int32)
+        vals = jnp.asarray(X_parts.vals, jnp.float32)
+        m, n_i, _ = cols.shape
+        return (cols, vals), m, n_i, int(X_parts.d), vals.dtype
+    X = jnp.asarray(X_parts)
+    m, n_i, d = X.shape
+    return X, m, n_i, d, X.dtype
+
+
 def _resolve_kernels(cfg: GadgetConfig) -> GadgetConfig:
     """Pin cfg.use_kernels to a concrete bool (it keys the jit cache)."""
     if cfg.use_kernels is None:
@@ -206,30 +234,46 @@ def _gossip_step(cfg: GadgetConfig, m: int,
                  t: jax.Array, Bs: jax.Array):
     """Steps (a)-(h) for all m nodes at iteration t. ``Bs`` is the (R, m, m)
     per-round stack (sequential path) or the collapsed (m, m) product P_t
-    (``cfg.fused``). The single shared step body — the device loop and the
-    host-loop reference differ only in orchestration (where Bs comes from,
-    where the ε-check runs)."""
+    (``cfg.fused``). ``X`` is the dense (m, n_i, d) array or the (cols, vals)
+    tuple of stacked ELL planes. The single shared step body — the device
+    loop and the host-loop reference differ only in orchestration (where Bs
+    comes from, where the ε-check runs)."""
     tf = t.astype(jnp.float32)
     ids = _batch_ids(data_key, t, n_counts, cfg.batch_size)
-    if cfg.fused:
+
+    def gather(a):
+        return jax.vmap(lambda ai, ii: ai[ii])(a, ids)
+
+    if isinstance(X, tuple):
+        # sparse: per-node ELL minibatch planes; the half-step is fleet-wide
+        # either way (the sparse kernels take the whole node axis), so fused
+        # vs unfused only selects the mixing path below.
+        Cb, Vb, yb = gather(X[0]), gather(X[1]), gather(y)
+        if cfg.use_kernels:
+            W_half = hinge_ops.ell_fleet_half_step(W, Cb, Vb, yb, lam=cfg.lam,
+                                                   t=tf,
+                                                   project=cfg.project_before_gossip)
+        else:
+            W_half = hinge_ref.ell_fleet_half_step_ref(W, Cb, Vb, yb, cfg.lam, tf,
+                                                       project=cfg.project_before_gossip)
+    elif cfg.fused:
         # one gather, then steps (a)-(e) for the whole fleet in one launch
-        Xb = jax.vmap(lambda Xi, ii: Xi[ii])(X, ids)
-        yb = jax.vmap(lambda yi, ii: yi[ii])(y, ids)
+        Xb, yb = gather(X), gather(y)
         if cfg.use_kernels:
             W_half = hinge_ops.fleet_half_step(W, Xb, yb, lam=cfg.lam, t=tf,
                                                project=cfg.project_before_gossip)
         else:
             W_half = hinge_ref.fleet_half_step_ref(W, Xb, yb, cfg.lam, tf,
                                                    project=cfg.project_before_gossip)
-        # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean;
-        # R rounds collapsed into one fused mix-and-renormalize matmul.
-        vals, wts = mix_collapsed(W_half * n_counts[:, None], n_counts, Bs)
     else:
         W_half = jax.vmap(
             lambda w, Xi, yi, ii: _local_half_step(w, Xi, yi, ii, cfg.lam, tf,
                                                    cfg.project_before_gossip, cfg.use_kernels)
         )(W, X, y, ids)
-        vals, wts = mix_rounds(W_half * n_counts[:, None], n_counts, Bs)
+    # Push-Sum: values n_i·w̃_i with mass weights n_i ⇒ weighted mean; R
+    # rounds collapsed into one fused mix-and-renormalize matmul when fused.
+    mix = mix_collapsed if cfg.fused else mix_rounds
+    vals, wts = mix(W_half * n_counts[:, None], n_counts, Bs)
     W_new = vals / wts[:, None]
     if cfg.project_after_gossip:
         W_new = jax.vmap(lambda w: obj.project_ball(w, cfg.lam))(W_new)
@@ -262,11 +306,23 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
     objective/ε traces. Returns arrays only — the caller syncs once."""
 
     def train(X, y, B_stack, data_key, mix_key, n_counts, W0, W_sum0):
-        X_flat = X.reshape(m * n_i, d)
         y_flat = y.reshape(m * n_i)
         total_n = jnp.sum(n_counts)
         # padded rows of non-uniform partitions are masked out of the trace
         valid_flat = _valid_row_mask(m, n_i, n_counts)
+        if isinstance(X, tuple):  # ELL planes: full-data pass as a gather-dot
+            cols_flat = X[0].reshape(m * n_i, -1)
+            vals_flat = X[1].reshape(m * n_i, -1)
+
+            def objective_of(w):
+                return obj.primal_objective_masked_ell(
+                    w, cols_flat, vals_flat, y_flat, cfg.lam, valid_flat, total_n)
+        else:
+            X_flat = X.reshape(m * n_i, d)
+
+            def objective_of(w):
+                return obj.primal_objective_masked(
+                    w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
 
         def step(carry, _):
             W, W_sum, t = carry
@@ -286,9 +342,7 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t), None, length=chunk)
             eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
             w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
-            objective = obj.primal_objective_masked(w_cons, X_flat, y_flat,
-                                                    cfg.lam, valid_flat, total_n)
-            obj_tr = obj_tr.at[ci].set(objective)
+            obj_tr = obj_tr.at[ci].set(objective_of(w_cons))
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
             return W, W_sum, t, ci + 1, eps, obj_tr, it_tr, eps_tr
@@ -323,7 +377,7 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     (donatable) weight buffers. The transfer-guard benchmark calls this too,
     so the device-residency proof certifies the real path, not a replica.
     Requires cfg.max_iters > 0."""
-    m, n_i, d = X_parts.shape
+    X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     cfg = _resolve_kernels(cfg)
     n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
@@ -341,8 +395,8 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     chunk = min(cfg.check_every, cfg.max_iters)
     n_chunks = -(-cfg.max_iters // chunk)
     train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk)
-    args = (jnp.asarray(X_parts), jnp.asarray(y_parts), B_stack, data_key, mix_key,
-            n_counts, jnp.zeros((m, d), X_parts.dtype), jnp.zeros((m, d), X_parts.dtype))
+    args = (X, jnp.asarray(y_parts), B_stack, data_key, mix_key,
+            n_counts, jnp.zeros((m, d), dtype), jnp.zeros((m, d), dtype))
     return train, args
 
 
@@ -353,7 +407,9 @@ def gadget_train(
     *,
     n_counts=None,
 ) -> GadgetResult:
-    """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d), y_parts: (m, n_i).
+    """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d) dense, or a
+    ``repro.sparse.EllPartitions`` of stacked padded-ELL planes (sparse local
+    half-steps; gossip stays dense in w). y_parts: (m, n_i).
 
     Thin host wrapper around the jitted device loop: uploads the data and (for
     deterministic topologies) one stacked mixing-matrix cycle, runs the
@@ -363,17 +419,18 @@ def gadget_train(
     non-uniform partitions padded to a common n_i. Padded rows (beyond
     n_counts[i]) must carry y=0; they are never sampled, carry no Push-Sum
     mass, and are excluded from the consensus weighting and objective trace.
+    ``repro.data.svm_datasets.partition`` returns exactly these counts.
     """
-    m, n_i, d = X_parts.shape
     _validate_topology(cfg)
 
     empty = np.zeros((0,), np.float32)
     if cfg.max_iters <= 0:  # zero-iteration call: return the initial state
-        return GadgetResult(W=jnp.zeros((m, d), X_parts.dtype),
-                            w_consensus=jnp.zeros((d,), X_parts.dtype),
+        _, m, n_i, d, dtype = _unpack_partitions(X_parts)
+        return GadgetResult(W=jnp.zeros((m, d), dtype),
+                            w_consensus=jnp.zeros((d,), dtype),
                             iters=0, epsilon=float("inf"),
                             objective_trace=empty, time_trace=empty.astype(np.int32),
-                            eps_trace=empty, W_avg=jnp.zeros((m, d), X_parts.dtype))
+                            eps_trace=empty, W_avg=jnp.zeros((m, d), dtype))
 
     train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts)
     out = train(*args)
@@ -430,7 +487,7 @@ def gadget_train_reference(
     it is the seed-semantics parity oracle the fused device path is accepted
     against, and the baseline for the transfer-counter benchmark.
     """
-    m, n_i, d = X_parts.shape
+    X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     _validate_topology(cfg)
     cfg = _resolve_kernels(cfg)._replace(fused=False)
     n_counts = _partition_counts(y_parts, n_counts)
@@ -438,16 +495,27 @@ def gadget_train_reference(
     stack = None if cfg.topology == "random" else topo.build_matrix_stack(cfg.topology, m)
     R = cfg.gossip_rounds
 
-    X = jnp.asarray(X_parts)
     y = jnp.asarray(y_parts)
-    X_flat = X.reshape(m * n_i, d)
     y_flat = y.reshape(m * n_i)
     total_n = jnp.sum(n_counts)
     valid_flat = _valid_row_mask(m, n_i, n_counts)
+    if isinstance(X, tuple):
+        cols_flat = X[0].reshape(m * n_i, -1)
+        vals_flat = X[1].reshape(m * n_i, -1)
+
+        def objective_of(w):
+            return obj.primal_objective_masked_ell(
+                w, cols_flat, vals_flat, y_flat, cfg.lam, valid_flat, total_n)
+    else:
+        X_flat = X.reshape(m * n_i, d)
+
+        def objective_of(w):
+            return obj.primal_objective_masked(
+                w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
     one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d)
 
-    W = jnp.zeros((m, d), X_parts.dtype)
-    W_sum = jnp.zeros((m, d), X_parts.dtype)
+    W = jnp.zeros((m, d), dtype)
+    W_sum = jnp.zeros((m, d), dtype)
     obj_trace, time_trace, eps_trace = [], [], []
     eps = float("inf")
     it = 0
@@ -467,8 +535,7 @@ def gadget_train_reference(
         eps = float(jnp.max(jnp.linalg.norm(W - W_prev, axis=1)))  # blocking sync
         transfer_stats["host_syncs"] += 1
         w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
-        obj_trace.append(float(obj.primal_objective_masked(
-            w_cons, X_flat, y_flat, cfg.lam, valid_flat, total_n)))
+        obj_trace.append(float(objective_of(w_cons)))
         transfer_stats["host_syncs"] += 1  # objective pull is a second blocking sync
         time_trace.append(it)
         eps_trace.append(eps)

@@ -15,6 +15,7 @@ __all__ = [
     "hinge_loss",
     "primal_objective",
     "primal_objective_masked",
+    "primal_objective_masked_ell",
     "hinge_subgradient",
     "pegasos_update",
     "project_ball",
@@ -43,6 +44,17 @@ def primal_objective_masked(w: jax.Array, X: jax.Array, y: jax.Array,
     n_counts), so for an all-true mask this reduces to ``primal_objective``.
     """
     margins = y * (X @ w)
+    hinge = jnp.sum(jnp.where(valid, jnp.maximum(0.0, 1.0 - margins), 0.0)) / total
+    return 0.5 * lam * jnp.dot(w, w) + hinge
+
+
+def primal_objective_masked_ell(w: jax.Array, cols: jax.Array, vals: jax.Array,
+                                y: jax.Array, lam: float, valid: jax.Array,
+                                total: jax.Array) -> jax.Array:
+    """``primal_objective_masked`` over padded-ELL planes (N, k) — margins as
+    a gather-dot against w, never materializing dense X. Pad entries
+    (col=0, val=0) are inert; pad *rows* are excluded via ``valid``."""
+    margins = y * jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1)
     hinge = jnp.sum(jnp.where(valid, jnp.maximum(0.0, 1.0 - margins), 0.0)) / total
     return 0.5 * lam * jnp.dot(w, w) + hinge
 

@@ -1,5 +1,6 @@
-"""Data substrate: synthetic SVM datasets (paper signatures), LibSVM loader,
-and the deterministic token pipeline for the LM architectures."""
+"""Data substrate: synthetic SVM datasets (paper signatures, dense or ELL),
+LibSVM loaders (dense + streaming CSR), and the deterministic token pipeline
+for the LM architectures."""
 from repro.data.svm_datasets import PAPER_DATASETS, SVMDataset, make_dataset, partition  # noqa: F401
-from repro.data.libsvm import load_libsvm  # noqa: F401
+from repro.data.libsvm import iter_libsvm_chunks, load_libsvm, load_libsvm_csr  # noqa: F401
 from repro.data.tokens import Batcher, TokenStreamConfig, synthetic_tokens  # noqa: F401

@@ -11,11 +11,20 @@ task (dimensionality, sparsity, class balance) so that the paper's structural
 claims (GADGET ≈ centralized Pegasos; convergence/consensus behaviour) are
 exercised at the same operating points. ``scale`` shrinks N for CI-speed runs
 while keeping d and sparsity exact.
+
+``sparse=True`` emits :class:`repro.sparse.ELL` planes **directly** — column
+indices and values are drawn per row, never a dense (N, d) matrix — which is
+what makes the paper's flagship scenario generable at full shape: CCAT at
+scale=1.0 is ~0.5 GB of planes vs ~147 GB dense. Nonzero columns are sampled
+*without replacement* (exactly ``round(sparsity·d)`` per row), on the dense
+path too.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 import numpy as np
+
+from repro.sparse.formats import ELL, EllPartitions, partition_rows
 
 __all__ = ["SVMDataset", "PAPER_DATASETS", "make_dataset", "partition"]
 
@@ -47,9 +56,9 @@ PAPER_DATASETS: dict[str, DatasetSpec] = {
 @dataclass
 class SVMDataset:
     name: str
-    X_train: np.ndarray  # (n_train, d) float32
-    y_train: np.ndarray  # (n_train,)  float32 in {-1, +1}
-    X_test: np.ndarray
+    X_train: "np.ndarray | ELL"  # (n_train, d) float32, dense or ELL planes
+    y_train: np.ndarray          # (n_train,)  float32 in {-1, +1}
+    X_test: "np.ndarray | ELL"
     y_test: np.ndarray
     lam: float
 
@@ -57,49 +66,148 @@ class SVMDataset:
     def d(self) -> int:
         return self.X_train.shape[1]
 
+    @property
+    def sparse(self) -> bool:
+        return isinstance(self.X_train, ELL)
+
+
+def _sample_cols(rng: np.random.Generator, n: int, nnz: int, d: int) -> np.ndarray:
+    """(n, nnz) nonzero column ids, **without replacement** within each row —
+    realized per-row nnz is exact, where the old with-replacement draw
+    undershot the spec increasingly with density.
+
+    Two regimes: when collisions are rare (nnz² ≤ d — all the text-like
+    specs), rejection-resample colliding rows (exactly uniform, O(n·nnz)
+    memory); otherwise chunked Gumbel-top-k via argpartition, bounding the
+    (chunk, d) scratch so full-shape generation never goes dense-scale.
+    """
+    if nnz >= d:
+        return np.tile(np.arange(d, dtype=np.int64), (n, 1))
+    if nnz * nnz <= d:
+        cols = rng.integers(0, d, size=(n, nnz))
+        bad = np.arange(n)
+        for _ in range(200):
+            s = np.sort(cols[bad], axis=1)
+            bad = bad[(s[:, 1:] == s[:, :-1]).any(axis=1)]
+            if bad.size == 0:
+                break
+            cols[bad] = rng.integers(0, d, size=(bad.size, nnz))
+        else:  # pathological tail: per-row exact draw for the few left
+            for r in bad:
+                cols[r] = rng.choice(d, nnz, replace=False)
+        return cols
+    chunk = max(1, (1 << 25) // d)
+    out = np.empty((n, nnz), np.int64)
+    for s in range(0, n, chunk):
+        e = min(n, s + chunk)
+        r = rng.random((e - s, d), dtype=np.float32)
+        out[s:e] = np.argpartition(r, nnz, axis=1)[:, :nnz]
+    return out
+
+
+def _labels_for(margin: np.ndarray, spec: DatasetSpec,
+                rng: np.random.Generator) -> np.ndarray:
+    """Threshold margins at the class-balance quantile, then flip with the
+    spec's label noise — shared by the dense and ELL generators."""
+    thr = np.quantile(margin, 1.0 - spec.class_balance)
+    y = np.where(margin > thr, 1.0, -1.0).astype(np.float32)
+    flip = rng.random(len(margin)) < spec.label_noise
+    return np.where(flip, -y, y)
+
 
 def _gen_split(spec: DatasetSpec, n: int, w_star: np.ndarray, rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
     d = spec.d
     X = rng.normal(0.0, 1.0, size=(n, d)).astype(np.float32)
     if spec.sparsity < 1.0:
         nnz = max(1, int(round(spec.sparsity * d)))
-        # sparse nonnegative "text-like" features: top-|nnz| mask per row
+        # sparse nonnegative "text-like" features; exact nnz per row
         mask = np.zeros((n, d), dtype=bool)
-        cols = rng.integers(0, d, size=(n, nnz))
+        cols = _sample_cols(rng, n, nnz, d)
         mask[np.arange(n)[:, None], cols] = True
         X = np.where(mask, np.abs(X), 0.0).astype(np.float32)
     # normalize rows (the paper's text sets are tf-idf normalized)
     norms = np.linalg.norm(X, axis=1, keepdims=True)
     X = X / np.maximum(norms, 1e-8)
-    margin = X @ w_star
-    # shift threshold to match class balance
-    thr = np.quantile(margin, 1.0 - spec.class_balance)
-    y = np.where(margin > thr, 1.0, -1.0).astype(np.float32)
-    flip = rng.random(n) < spec.label_noise
-    y = np.where(flip, -y, y)
-    return X, y
+    return X, _labels_for(X @ w_star, spec, rng)
 
 
-def make_dataset(name: str, scale: float = 1.0, seed: int = 0) -> SVMDataset:
-    """Build a paper-signature dataset. ``scale`` < 1 shrinks row counts."""
+def _gen_split_ell(spec: DatasetSpec, n: int, w_star: np.ndarray,
+                   rng: np.random.Generator) -> tuple[ELL, np.ndarray]:
+    """ELL twin of :func:`_gen_split`: same feature model (nonneg text-like
+    values, unit rows, quantile-thresholded labels) drawn directly as
+    (n, nnz) column/value planes — the dense matrix never exists."""
+    d = spec.d
+    nnz = max(1, int(round(spec.sparsity * d)))
+    cols = np.sort(_sample_cols(rng, n, nnz, d), axis=1).astype(np.int32)
+    vals = np.abs(rng.normal(0.0, 1.0, size=(n, nnz)).astype(np.float32))
+    vals /= np.maximum(np.linalg.norm(vals, axis=1, keepdims=True), 1e-8)
+    # chunked gather-dot keeps the transient at (chunk, nnz)
+    margin = np.empty(n, np.float32)
+    step = max(1, (1 << 24) // max(nnz, 1))
+    for s in range(0, n, step):
+        e = min(n, s + step)
+        margin[s:e] = np.einsum("rk,rk->r", vals[s:e], w_star[cols[s:e]])
+    return ELL(cols, vals, (n, d)), _labels_for(margin, spec, rng)
+
+
+def make_dataset(name: str, scale: float = 1.0, seed: int = 0,
+                 sparse: bool = False) -> SVMDataset:
+    """Build a paper-signature dataset. ``scale`` < 1 shrinks row counts.
+
+    ``sparse=True`` (sparse specs only) returns :class:`repro.sparse.ELL`
+    feature planes generated without ever materializing the dense matrix —
+    the path that makes full-shape CCAT (781,265 × 47,236 at 0.16% nonzeros)
+    feasible in container memory. Feed through :func:`partition` straight
+    into ``gadget_train``.
+    """
     spec = PAPER_DATASETS[name]
+    if sparse and spec.sparsity >= 1.0:
+        raise ValueError(f"dataset {name!r} is dense (sparsity=1.0); "
+                         "sparse=True only applies to sparse specs")
     rng = np.random.default_rng((seed, hash(name) & 0xFFFF))
     w_star = rng.normal(size=spec.d).astype(np.float32)
     if spec.sparsity < 1.0:
         w_star = np.abs(w_star)  # nonneg features need signed-balance via threshold
+    gen = _gen_split_ell if sparse else _gen_split
     n_tr = max(64, int(spec.n_train * scale))
     n_te = max(64, int(spec.n_test * scale))
-    X_tr, y_tr = _gen_split(spec, n_tr, w_star, rng)
-    X_te, y_te = _gen_split(spec, n_te, w_star, rng)
+    X_tr, y_tr = gen(spec, n_tr, w_star, rng)
+    X_te, y_te = gen(spec, n_te, w_star, rng)
     return SVMDataset(name, X_tr, y_tr, X_te, y_te, spec.lam)
 
 
-def partition(X: np.ndarray, y: np.ndarray, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
-    """Horizontal partition over m nodes (paper §3): shuffle then split into
-    equal chunks, returning (m, n_i, d) and (m, n_i). Rows beyond m*n_i are
-    dropped (at most m-1 rows)."""
-    rng = np.random.default_rng(seed)
-    idx = rng.permutation(len(y))
-    n_i = len(y) // m
-    idx = idx[: m * n_i]
-    return X[idx].reshape(m, n_i, X.shape[1]), y[idx].reshape(m, n_i)
+def partition(X, y: np.ndarray, m: int, seed: int = 0):
+    """Horizontal partition over m nodes (paper §3): shuffle, split into
+    near-equal chunks, and **pad** the last chunks instead of dropping tail
+    rows (the seed dropped up to m-1 of them silently).
+
+    Returns ``(X_parts, y_parts, n_counts)``: for dense X an (m, n_i, d)
+    array, for :class:`repro.sparse.ELL` (or CSR) input an
+    :class:`repro.sparse.EllPartitions` of stacked planes — both with
+    (m, n_i) labels and the real per-node valid-row counts. Padded rows carry
+    X=0/y=0 and n_counts wires straight into ``gadget_train(n_counts=...)``
+    (they are never sampled, carry no Push-Sum mass, and are excluded from
+    the objective). Row permutation depends only on ``(len(y), m, seed)``, so
+    a dense matrix and its ELL conversion partition identically.
+    """
+    y = np.asarray(y)
+    idx, counts, n_i = partition_rows(len(y), m, seed)
+
+    def zero_pads(parts):
+        # fancy-indexed gathers above are fresh arrays: zero the ≤ m-1 pad
+        # slots in place rather than np.where-copying the whole dataset
+        for i in range(m):
+            parts[i, counts[i]:] = 0
+        return parts
+
+    y_parts = zero_pads(y[idx].reshape(m, n_i).copy())
+
+    if hasattr(X, "to_ell"):  # CSR input: convert once, partition as ELL
+        X = X.to_ell()
+    if isinstance(X, ELL):
+        return (EllPartitions(zero_pads(X.cols[idx].reshape(m, n_i, -1)),
+                              zero_pads(X.vals[idx].reshape(m, n_i, -1)),
+                              X.shape[1]),
+                y_parts, counts)
+    X = np.asarray(X)
+    return zero_pads(X[idx].reshape(m, n_i, X.shape[1])), y_parts, counts

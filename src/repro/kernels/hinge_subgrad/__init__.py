@@ -1,1 +1,7 @@
-"""Pallas kernel package: hinge_subgrad."""
+"""Pallas kernel package: hinge_subgrad.
+
+Dense kernels in ``hinge_subgrad.py`` (blocked margins / grad_update and the
+fused ``fleet_half_step``), padded-ELL sparse kernels in ``sparse.py``
+(gather-dot margins, scatter-add grad), jnp oracles in ``ref.py``, and the
+padding/dispatch layer in ``ops.py``.
+"""

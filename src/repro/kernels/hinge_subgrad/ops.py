@@ -20,9 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.hinge_subgrad import hinge_subgrad as K
+from repro.kernels.hinge_subgrad import sparse as S
 
 __all__ = ["pegasos_step", "local_half_step", "fleet_half_step",
-           "padded_row_mask", "default_interpret", "FLEET_TILE_BUDGET_BYTES"]
+           "ell_fleet_half_step", "padded_row_mask", "default_interpret",
+           "FLEET_TILE_BUDGET_BYTES", "ELL_ONEHOT_BUDGET"]
 
 # Largest per-node (B_pad, d_pad) f32 minibatch tile the fused fleet kernel
 # will keep resident in VMEM (per grid program). Above this, fleet_half_step
@@ -144,6 +146,63 @@ def fleet_half_step(W: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     alpha = 1.0 / (lam * tf)
     scal = jnp.stack([lam * alpha, alpha / B])
     W_half = K.fleet_half_step(Xp, Wp, yp, mask, scal, interpret=interpret)[:, :d]
+    if project:
+        W_half = jax.vmap(lambda w: _project_ball(w, lam))(W_half)
+    return W_half.astype(W.dtype)
+
+
+# Cap on the (B·k, blk_d) f32 one-hot each sparse-kernel program materializes
+# in VMEM; the wrapper shrinks blk_d (lane-multiple floor) to stay under it.
+ELL_ONEHOT_BUDGET = 4 * 1024 * 1024
+
+
+def _ell_blk_d(d_pad: int, Bk: int) -> int:
+    blk = min(S.DEFAULT_BLK_D_SPARSE, d_pad)
+    while blk > 128 and Bk * blk * 4 > ELL_ONEHOT_BUDGET:
+        # shrink in 128-lane multiples only — Mosaic block shapes require it
+        blk = max(128, blk // 2 // 128 * 128)
+    return blk
+
+
+def ell_fleet_half_step(W: jax.Array, cols: jax.Array, vals: jax.Array,
+                        y: jax.Array, *, lam: float, t: jax.Array,
+                        project: bool = True,
+                        interpret: bool | None = None) -> jax.Array:
+    """Sparse GADGET steps (a)-(e) for the whole fleet over ELL planes.
+
+    W: (m, d) per-node weights; cols/vals: (m, B, k) gathered ELL minibatch
+    planes (repro.sparse.formats pad convention: pad entries (col=0, val=0),
+    pad rows y=0); y: (m, B). Sparse counterpart of ``fleet_half_step`` — two
+    kernel launches (gather-dot margins, scatter-add grad fused with the
+    Pegasos axpy) touching O(B·k) feature bytes instead of O(B·d).
+
+    Trace-safe (no jit of its own) for use inside the device-resident gossip
+    loop. Padding: k → 128-lane multiple, B → 8-sublane multiple, d → blk_d
+    multiple; all pads are inert under the ELL convention.
+    """
+    m, B, k = cols.shape
+    d = W.shape[1]
+    if interpret is None:
+        interpret = default_interpret()
+
+    kp = -(-k // 128) * 128
+    Bp = -(-B // 8) * 8
+    colsP = _pad_to(_pad_to(cols.astype(jnp.int32), 8, 1), 128, 2)
+    valsP = _pad_to(_pad_to(vals.astype(jnp.float32), 8, 1), 128, 2)
+    yp = _pad_to(y.astype(jnp.float32), 8, 1)
+    blk_d = _ell_blk_d(-(-d // 128) * 128, Bp * kp)
+    Wp = _pad_to(W.astype(jnp.float32), blk_d, 1)
+
+    margins = S.ell_margins(colsP, valsP, Wp, yp, blk_d=blk_d, interpret=interpret)
+    # pad rows carry y=0 ⇒ coefficient 0 (padded_row_mask invariant): inert in
+    # the scatter even though their margin 0 selects into the violator set
+    coeff = jnp.where(margins < 1.0, yp, 0.0)
+
+    tf = jnp.asarray(t, jnp.float32)
+    alpha = 1.0 / (lam * tf)
+    scal = jnp.stack([lam * alpha, alpha / B])
+    W_half = S.ell_grad_update(colsP, valsP, Wp, coeff, scal, blk_d=blk_d,
+                               interpret=interpret)[:, :d]
     if project:
         W_half = jax.vmap(lambda w: _project_ball(w, lam))(W_half)
     return W_half.astype(W.dtype)

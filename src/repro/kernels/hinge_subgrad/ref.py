@@ -47,6 +47,51 @@ def fleet_half_step_ref(W: jax.Array, X: jax.Array, y: jax.Array, lam: float,
     return W_half
 
 
+# --------------------------------------------------------------------- sparse
+# Padded-ELL oracles (repro.sparse.formats layout: pad entries (col=0, val=0),
+# pad rows y=0 — inert in every gather-dot / scatter-add below).
+
+
+def ell_margins_ref(w: jax.Array, cols: jax.Array, vals: jax.Array,
+                    y: jax.Array) -> jax.Array:
+    """y * (X @ w) over one node's ELL minibatch planes: (B, k) cols/vals."""
+    return y * jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1)
+
+
+def ell_matvec_flat(w: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """X @ w for flat (N, k) ELL planes — the full-data pass the objective
+    trace uses (never materializes dense X)."""
+    return jnp.sum(vals * jnp.take(w, cols, axis=0), axis=-1)
+
+
+def ell_fleet_half_step_ref(W: jax.Array, cols: jax.Array, vals: jax.Array,
+                            y: jax.Array, lam: float, t: jax.Array,
+                            project: bool = True) -> jax.Array:
+    """Oracle for the sparse fleet half-step: GADGET steps (a)-(e) for all m
+    nodes over ELL minibatch planes. cols/vals: (m, B, k), W: (m, d),
+    y: (m, B). Margins are a gather-dot against each node's resident w; the
+    subgradient is a scatter-add of the violator-weighted values — same math
+    as fleet_half_step_ref with X = dense(cols, vals). Also the fused jnp path
+    GADGET's sparse mode uses where Pallas would only interpret (CPU)."""
+    B = cols.shape[1]
+    d = W.shape[1]
+    margins = y * jax.vmap(
+        lambda w, c, v: jnp.sum(v * jnp.take(w, c, axis=0), axis=-1)
+    )(W, cols, vals)
+    coeff = jnp.where(margins < 1.0, y, 0.0)
+    L = jax.vmap(
+        lambda c, v, cf: jnp.zeros(d, jnp.float32)
+        .at[c.reshape(-1)].add((cf[:, None] * v).reshape(-1))
+    )(cols, vals, coeff) / B
+    alpha = 1.0 / (lam * t)
+    W_half = (1.0 - lam * alpha) * W + alpha * L
+    if project:
+        norms = jnp.linalg.norm(W_half, axis=1, keepdims=True)
+        scale = jnp.minimum(1.0, (1.0 / jnp.sqrt(lam)) / jnp.maximum(norms, 1e-30))
+        W_half = W_half * scale
+    return W_half
+
+
 def pegasos_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array):
     """Returns (w_new (d,), mean_hinge_loss ()). X: (B, d); y: (B,) in {-1,+1}."""
     margins = y * (X @ w)

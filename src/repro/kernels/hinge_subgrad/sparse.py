@@ -1,0 +1,133 @@
+"""Pallas TPU kernels for the hinge-subgradient step over padded-ELL planes.
+
+Sparse counterpart of ``hinge_subgrad.py``: the minibatch is two (m, B, k)
+planes — column indices and values — instead of an (m, B, d) dense tile, so
+at CCAT sparsity (0.16%) the per-iteration bytes drop ~600×. The dense weight
+vector w stays resident; only the feature matrix is sparse (mixing/Push-Sum
+are over weights and never see the ELL planes).
+
+Both kernels run over grid (m, d/blk_d) and express the irregular access as
+an on-the-fly one-hot contraction against the current d-block — the
+MXU-friendly form of gather/scatter on TPU (compare iota, then matmul):
+
+  * ``ell_margins``    — margins m_b = y_b · Σ_k vals[b,k] · w[cols[b,k]].
+    Per d-block: one-hot(cols - block_base) @ w_blk gathers the in-block
+    weight entries (out-of-block indices match no lane and contribute 0 — no
+    explicit mask needed), accumulated over blocks in VMEM scratch.
+  * ``ell_grad_update`` — the scatter-add g += Σ_b coeff_b · vals[b,:] onto
+    the violator columns, fused with the Pegasos axpy
+    w_half = (1 - lam·alpha) w + (alpha/B) g. Each d-block owns its output
+    slice, so the grid is embarrassingly parallel — no cross-block scratch.
+
+Pad convention (repro.sparse.formats.ELL): pad entries carry (col=0, val=0),
+pad *rows* carry y=0 — both are inert in the contraction, so the kernels take
+no validity plane. VMEM per program is the (B·k, blk_d) one-hot plus the
+planes: callers bound B·k·blk_d (ops.ell_fleet_half_step picks blk_d).
+Interpret mode off-TPU as everywhere else in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+__all__ = ["ell_margins", "ell_grad_update", "DEFAULT_BLK_D_SPARSE"]
+
+DEFAULT_BLK_D_SPARSE = 512
+
+
+def _onehot_gather(cols, vals, blk_d: int):
+    """(B, k) in-block entry selectors: returns the (B·k, blk_d) one-hot and
+    the flattened (B·k,) values. ``cols`` are already rebased to the block."""
+    Bk = cols.shape[0] * cols.shape[1]
+    local = cols.reshape(Bk, 1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (Bk, blk_d), 1)
+    onehot = (local == lanes).astype(jnp.float32)  # out-of-block rows: all 0
+    return onehot, vals.reshape(Bk)
+
+
+def _ell_margins_kernel(cols_ref, vals_ref, w_ref, y_ref, m_ref, acc, *, blk_d):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    B, k = cols_ref.shape[1], cols_ref.shape[2]
+    onehot, v = _onehot_gather(cols_ref[0] - j * blk_d, vals_ref[0], blk_d)
+    gathered = onehot @ w_ref[0]                      # (B·k,) w[cols] | in-block
+    acc[...] += jnp.sum((v * gathered).reshape(B, k), axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        m_ref[0] = y_ref[0] * acc[...]
+
+
+def ell_margins(cols: jax.Array, vals: jax.Array, W: jax.Array, y: jax.Array, *,
+                blk_d: int = DEFAULT_BLK_D_SPARSE,
+                interpret: bool = False) -> jax.Array:
+    """y * (X @ w) per node over ELL planes. cols/vals: (m, B, k) int32/f32,
+    W: (m, d), y: (m, B) → (m, B) margins. d must be a blk_d multiple."""
+    m, B, k = cols.shape
+    d = W.shape[1]
+    assert d % blk_d == 0, "wrapper must pad d"
+    kern = functools.partial(_ell_margins_kernel, blk_d=blk_d)
+    return pl.pallas_call(
+        kern,
+        grid=(m, d // blk_d),
+        in_specs=[
+            pl.BlockSpec((1, B, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, B, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, blk_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, B), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, B), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((B,), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cols, vals, W, y)
+
+
+def _ell_grad_kernel(cols_ref, vals_ref, w_ref, c_ref, scal_ref, o_ref, *, blk_d):
+    j = pl.program_id(1)
+    coeff = c_ref[0]                                   # (B,) violator coeffs
+    onehot, v = _onehot_gather(cols_ref[0] - j * blk_d, vals_ref[0], blk_d)
+    contrib = (coeff[:, None] * vals_ref[0]).reshape(v.shape)
+    g = contrib @ onehot                               # (blk_d,) scatter-add
+    o_ref[0] = (1.0 - scal_ref[0]) * w_ref[0] + scal_ref[1] * g
+
+
+def ell_grad_update(cols: jax.Array, vals: jax.Array, W: jax.Array,
+                    coeff: jax.Array, scal: jax.Array, *,
+                    blk_d: int = DEFAULT_BLK_D_SPARSE,
+                    interpret: bool = False) -> jax.Array:
+    """W_half = (1 - scal[0]) W + scal[1] * scatter(coeff · vals → cols), per
+    node. coeff: (m, B) = 1[margin<1]·y; scal: (2,) = [lam·alpha, alpha/B] in
+    SMEM. Each (node, d-block) program writes its own output slice."""
+    m, B, k = cols.shape
+    d = W.shape[1]
+    assert d % blk_d == 0, "wrapper must pad d"
+    kern = functools.partial(_ell_grad_kernel, blk_d=blk_d)
+    return pl.pallas_call(
+        kern,
+        grid=(m, d // blk_d),
+        in_specs=[
+            pl.BlockSpec((1, B, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, B, k), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, blk_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, B), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, blk_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cols, vals, W, coeff, scal)

@@ -1,0 +1,219 @@
+"""Sparse feature containers: CSR (host/streaming) and padded ELL (device).
+
+The paper's flagship large-scale result is CCAT — 781,265 rows at d = 47,236
+with 0.16% nonzeros. Dense, the train split is ~147 GB; as index/value planes
+it is ~0.5 GB. Two layouts, two jobs:
+
+  * :class:`CSR` — the classic compressed-sparse-row triplet
+    (data/indices/indptr), the natural container for *streaming ingest*
+    (LibSVM chunk readers append rows for free) and host-side row surgery.
+  * :class:`ELL` — a padded "ELLPACK" layout: every row stores exactly
+    ``k_max`` (column-index, value) pairs as two dense (rows, k_max) planes.
+    Ragged rows are padded with the inert entry ``(col=0, val=0.0)`` — a zero
+    value contributes nothing to a gather-dot or a scatter-add, so kernels
+    need no per-entry mask. Rectangular planes are what TPUs (and XLA on any
+    backend) want: fixed shapes, contiguous lanes, one validity convention.
+
+``partition_ell`` produces the stacked per-node planes GADGET's device loop
+consumes; it composes with the PR 2 ``n_counts`` API (padded tail rows carry
+all-zero vals and are excluded from sampling/mass/objective by the caller's
+counts). This module is NumPy-only on purpose — it is the host substrate; the
+jnp/Pallas consumers live in ``repro.kernels.hinge_subgrad``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["CSR", "ELL", "EllPartitions", "partition_rows"]
+
+
+@dataclass
+class CSR:
+    """Compressed sparse row matrix: ``data[indptr[r]:indptr[r+1]]`` are the
+    nonzero values of row r at columns ``indices[indptr[r]:indptr[r+1]]``."""
+
+    data: np.ndarray     # (nnz,) float
+    indices: np.ndarray  # (nnz,) int32, 0-based column ids, < shape[1]
+    indptr: np.ndarray   # (rows+1,) int64, monotone, indptr[0] == 0
+    shape: tuple[int, int]
+
+    def __post_init__(self):
+        self.data = np.asarray(self.data)
+        self.indices = np.asarray(self.indices, np.int32)
+        self.indptr = np.asarray(self.indptr, np.int64)
+        n, d = self.shape
+        if self.indptr.shape != (n + 1,) or self.indptr[0] != 0:
+            raise ValueError(f"bad indptr for {n} rows")
+        if self.indptr[-1] != len(self.data) or len(self.data) != len(self.indices):
+            raise ValueError("indptr/data/indices lengths disagree")
+        if len(self.indices) and (self.indices.min() < 0 or self.indices.max() >= d):
+            raise ValueError(f"column index out of range for d={d}")
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.nbytes + self.indices.nbytes + self.indptr.nbytes
+
+    def row_nnz(self) -> np.ndarray:
+        return np.diff(self.indptr).astype(np.int64)
+
+    @classmethod
+    def from_dense(cls, X: np.ndarray) -> "CSR":
+        X = np.asarray(X)
+        n, d = X.shape
+        mask = X != 0
+        indptr = np.zeros(n + 1, np.int64)
+        np.cumsum(mask.sum(axis=1), out=indptr[1:])
+        cols = np.nonzero(mask)[1].astype(np.int32)
+        return cls(X[mask].astype(X.dtype), cols, indptr, (n, d))
+
+    def to_dense(self, dtype=None) -> np.ndarray:
+        n, d = self.shape
+        X = np.zeros((n, d), dtype or self.data.dtype)
+        rows = np.repeat(np.arange(n), self.row_nnz())
+        X[rows, self.indices] = self.data
+        return X
+
+    def take_rows(self, idx: np.ndarray) -> "CSR":
+        """New CSR holding rows ``idx`` (in that order) — partition shuffles."""
+        idx = np.asarray(idx, np.int64)
+        counts = self.row_nnz()[idx]
+        indptr = np.zeros(len(idx) + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        starts = self.indptr[idx]
+        # gather each selected row's span: offset-within-row + row start
+        flat = (np.repeat(starts - indptr[:-1], counts)
+                + np.arange(int(indptr[-1]), dtype=np.int64))
+        return CSR(self.data[flat], self.indices[flat], indptr,
+                   (len(idx), self.shape[1]))
+
+    def to_ell(self, k_max: int | None = None) -> "ELL":
+        counts = self.row_nnz()
+        widest = int(counts.max()) if len(counts) else 0
+        if k_max is None:
+            k_max = max(widest, 1)
+        elif widest > k_max:
+            raise ValueError(f"k_max={k_max} < widest row nnz {widest}")
+        n, d = self.shape
+        cols = np.zeros((n, k_max), np.int32)
+        vals = np.zeros((n, k_max), np.float32)
+        within = np.arange(self.nnz, dtype=np.int64) - np.repeat(self.indptr[:-1], counts)
+        rows = np.repeat(np.arange(n), counts)
+        cols[rows, within] = self.indices
+        vals[rows, within] = self.data
+        return ELL(cols, vals, (n, d))
+
+
+@dataclass
+class ELL:
+    """Padded ELLPACK planes. Pad entries are ``(col=0, val=0.0)`` — inert in
+    every gather-dot and scatter-add, so no mask plane is stored; anything
+    that must *count* entries uses ``row_nnz()`` (vals != 0)."""
+
+    cols: np.ndarray  # (n, k_max) int32
+    vals: np.ndarray  # (n, k_max) float32
+    shape: tuple[int, int]
+
+    def __post_init__(self):
+        self.cols = np.asarray(self.cols, np.int32)
+        self.vals = np.asarray(self.vals, np.float32)
+        if self.cols.shape != self.vals.shape or self.cols.ndim != 2:
+            raise ValueError("cols/vals must be equal-shape (n, k_max) planes")
+        if self.cols.shape[0] != self.shape[0]:
+            raise ValueError("plane row count disagrees with shape")
+        if self.cols.size and (self.cols.min() < 0 or self.cols.max() >= self.shape[1]):
+            raise ValueError(f"column index out of range for d={self.shape[1]}")
+
+    @property
+    def k_max(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        return int((self.vals != 0).sum())
+
+    @property
+    def nbytes(self) -> int:
+        return self.cols.nbytes + self.vals.nbytes
+
+    def row_nnz(self) -> np.ndarray:
+        return (self.vals != 0).sum(axis=1).astype(np.int64)
+
+    @classmethod
+    def from_dense(cls, X: np.ndarray, k_max: int | None = None) -> "ELL":
+        return CSR.from_dense(X).to_ell(k_max)
+
+    def to_dense(self, dtype=np.float32) -> np.ndarray:
+        n, d = self.shape
+        X = np.zeros((n, d), dtype)
+        rows = np.repeat(np.arange(n), self.k_max).reshape(n, self.k_max)
+        # += so the shared pad slot (0,0) accumulates only zeros
+        np.add.at(X, (rows, self.cols), self.vals)
+        return X
+
+    def to_csr(self) -> CSR:
+        live = self.vals != 0
+        counts = live.sum(axis=1)
+        indptr = np.zeros(self.shape[0] + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return CSR(self.vals[live], self.cols[live], indptr, self.shape)
+
+    def take_rows(self, idx: np.ndarray) -> "ELL":
+        idx = np.asarray(idx, np.int64)
+        return ELL(self.cols[idx], self.vals[idx], (len(idx), self.shape[1]))
+
+    def matvec(self, w: np.ndarray) -> np.ndarray:
+        """X @ w as a gather-dot — the host-side oracle for the kernels."""
+        return (self.vals * np.asarray(w)[self.cols]).sum(axis=1)
+
+
+@dataclass
+class EllPartitions:
+    """Per-node stacked ELL planes for GADGET: node i's rows are
+    ``cols[i], vals[i], y-padded`` with the first ``n_counts[i]`` valid.
+    Produced by :func:`repro.data.svm_datasets.partition`; consumed by
+    ``gadget_train(..., n_counts=...)`` in place of a dense (m, n_i, d)."""
+
+    cols: np.ndarray  # (m, n_i, k_max) int32
+    vals: np.ndarray  # (m, n_i, k_max) float32
+    d: int            # feature dimension (planes don't carry it)
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        m, n_i, _ = self.cols.shape
+        return (m, n_i, self.d)
+
+    @property
+    def nbytes(self) -> int:
+        return self.cols.nbytes + self.vals.nbytes
+
+
+def partition_rows(n: int, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray, int]:
+    """Shuffled near-equal split of n rows over m nodes — the one statement of
+    the padded-partition convention.
+
+    Returns ``(idx, counts, n_i)``: a permutation of ``arange(n)`` laid out so
+    node i owns ``idx[i*n_i : i*n_i + counts[i]]``, per-node valid counts
+    summing to exactly n (no dropped tail rows), and the common padded length
+    ``n_i = ceil(n/m)``. The first ``n % m`` nodes hold one extra row.
+    """
+    if n < m:
+        raise ValueError(f"cannot partition {n} rows over {m} nodes")
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    q, r = divmod(n, m)
+    counts = np.full(m, q, np.int64)
+    counts[:r] += 1
+    n_i = q + (1 if r else 0)
+    # scatter each node's slice to its padded offset; pad slots point at row
+    # perm[0] but carry count-masked semantics (callers zero them out)
+    idx = np.zeros(m * n_i, np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    for i in range(m):
+        idx[i * n_i: i * n_i + counts[i]] = perm[offsets[i]: offsets[i] + counts[i]]
+    return idx, counts, n_i

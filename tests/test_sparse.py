@@ -1,0 +1,306 @@
+"""Sparse subsystem: ELL/CSR round-trips, sparse kernel parity vs the dense
+oracles, streaming LibSVM ingest, generator sparsity guarantees, and
+end-to-end sparse-vs-dense GADGET consensus agreement."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
+from repro.data import libsvm, svm_datasets
+from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad import ref as hinge_ref
+from repro.kernels.hinge_subgrad import sparse as hinge_sparse
+from repro.sparse import CSR, ELL, EllPartitions, partition_rows
+
+RNG = np.random.default_rng(0)
+
+
+def _random_sparse(n, d, nnz_max, rng=RNG):
+    """Dense matrix with ≤ nnz_max nonzeros per row (ragged on purpose)."""
+    X = np.zeros((n, d), np.float32)
+    for r in range(n):
+        k = int(rng.integers(0, nnz_max + 1))
+        cols = rng.choice(d, size=k, replace=False)
+        X[r, cols] = rng.normal(size=k).astype(np.float32)
+    return X
+
+
+# ------------------------------------------------------------- containers
+
+class TestFormats:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 12), st.integers(2, 40), st.integers(0, 6))
+    def test_roundtrip_property(self, n, d, nnz_max):
+        X = _random_sparse(n, d, min(nnz_max, d))
+        csr = CSR.from_dense(X)
+        ell = ELL.from_dense(X)
+        np.testing.assert_array_equal(csr.to_dense(), X)
+        np.testing.assert_array_equal(ell.to_dense(), X)
+        np.testing.assert_array_equal(csr.to_ell().to_dense(), X)
+        np.testing.assert_array_equal(ell.to_csr().to_dense(), X)
+        assert csr.nnz == (X != 0).sum() == ell.nnz
+
+    def test_take_rows_and_matvec(self):
+        X = _random_sparse(20, 30, 5)
+        w = RNG.normal(size=30).astype(np.float32)
+        idx = RNG.permutation(20)[:7]
+        csr, ell = CSR.from_dense(X), ELL.from_dense(X)
+        np.testing.assert_array_equal(csr.take_rows(idx).to_dense(), X[idx])
+        np.testing.assert_array_equal(ell.take_rows(idx).to_dense(), X[idx])
+        np.testing.assert_allclose(ell.matvec(w), X @ w, atol=1e-5)
+
+    def test_ell_k_max_validation(self):
+        X = _random_sparse(5, 10, 4)
+        widest = int((X != 0).sum(axis=1).max())
+        if widest > 1:
+            with pytest.raises(ValueError):
+                CSR.from_dense(X).to_ell(k_max=widest - 1)
+        padded = CSR.from_dense(X).to_ell(k_max=widest + 3)
+        assert padded.k_max == widest + 3
+        np.testing.assert_array_equal(padded.to_dense(), X)
+
+    def test_bad_indices_rejected(self):
+        with pytest.raises(ValueError):
+            ELL(np.array([[5]], np.int32), np.array([[1.0]], np.float32), (1, 3))
+        with pytest.raises(ValueError):
+            CSR(np.ones(1), np.array([7], np.int32), np.array([0, 1]), (1, 4))
+
+    def test_partition_rows_covers_everything(self):
+        idx, counts, n_i = partition_rows(101, 10, seed=0)
+        assert counts.sum() == 101 and n_i == 11
+        valid = np.concatenate([idx[i * n_i: i * n_i + counts[i]] for i in range(10)])
+        assert np.array_equal(np.sort(valid), np.arange(101))
+        with pytest.raises(ValueError):
+            partition_rows(3, 5)
+
+
+# ------------------------------------------------------- kernels vs oracles
+
+class TestSparseKernels:
+    @pytest.mark.parametrize("m,B,d,k", [(1, 1, 64, 1), (3, 5, 300, 7),
+                                         (4, 8, 1024, 40), (2, 3, 130, 129)])
+    def test_fleet_parity_dense_oracle(self, m, B, d, k):
+        """Sparse kernel == sparse ref == dense fleet ref on the same data."""
+        X = _random_sparse(m * B, d, k).reshape(m, B, d)
+        ell = ELL.from_dense(X.reshape(m * B, d))
+        kw = ell.k_max
+        cols = jnp.asarray(ell.cols.reshape(m, B, kw))
+        vals = jnp.asarray(ell.vals.reshape(m, B, kw))
+        y = jnp.asarray(np.sign(RNG.normal(size=(m, B)) + 0.1).astype(np.float32))
+        W = jnp.asarray(RNG.normal(size=(m, d)).astype(np.float32) * 0.1)
+        t = jnp.float32(3.0)
+
+        want = hinge_ref.fleet_half_step_ref(W, jnp.asarray(X), y, 1e-3, t)
+        got_ref = hinge_ref.ell_fleet_half_step_ref(W, cols, vals, y, 1e-3, t)
+        got_kern = hinge_ops.ell_fleet_half_step(W, cols, vals, y, lam=1e-3,
+                                                 t=t, interpret=True)
+        np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(got_kern), np.asarray(want), atol=2e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 9), st.integers(2, 200),
+           st.integers(1, 12))
+    def test_fleet_parity_property(self, m, B, d, k):
+        self.test_fleet_parity_dense_oracle(m, B, d, min(k, d))
+
+    def test_margins_kernel_matches_ref(self):
+        m, B, d, k = 3, 6, 500, 11
+        X = _random_sparse(m * B, d, k)
+        ell = ELL.from_dense(X)
+        kw = ell.k_max
+        cols = jnp.asarray(ell.cols.reshape(m, B, kw))
+        vals = jnp.asarray(ell.vals.reshape(m, B, kw))
+        y = jnp.asarray(np.sign(RNG.normal(size=(m, B))).astype(np.float32))
+        W = jnp.asarray(RNG.normal(size=(m, d)).astype(np.float32) * 0.2)
+        # kernel needs lane/sublane padding — go through a hand-padded call
+        colsP = jnp.pad(cols, ((0, 0), (0, 2), (0, 128 - kw)))
+        valsP = jnp.pad(vals, ((0, 0), (0, 2), (0, 128 - kw)))
+        yP = jnp.pad(y, ((0, 0), (0, 2)))
+        WP = jnp.pad(W, ((0, 0), (0, 512 - d)))
+        got = hinge_sparse.ell_margins(colsP, valsP, WP, yP, blk_d=256,
+                                       interpret=True)[:, :B]
+        want = jnp.stack([
+            hinge_ref.ell_margins_ref(W[i], cols[i], vals[i], y[i])
+            for i in range(m)])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+    def test_pad_entries_inert(self):
+        """Extra (col=0, val=0) ELL entries change nothing — the pad
+        convention the kernels rely on instead of a validity plane. (Row
+        padding is NOT free: B is the batch-mean denominator, which is why
+        only the wrapper pads rows, before computing scal.)"""
+        m, B, d, k = 2, 4, 100, 5
+        X = _random_sparse(m * B, d, k)
+        ell = ELL.from_dense(X)
+        kw = ell.k_max
+        cols = jnp.asarray(ell.cols.reshape(m, B, kw))
+        vals = jnp.asarray(ell.vals.reshape(m, B, kw))
+        y = jnp.asarray(np.sign(RNG.normal(size=(m, B))).astype(np.float32))
+        W = jnp.asarray(RNG.normal(size=(m, d)).astype(np.float32) * 0.1)
+        t = jnp.float32(2.0)
+        base = hinge_ops.ell_fleet_half_step(W, cols, vals, y, lam=1e-2, t=t,
+                                             interpret=True)
+        wide = hinge_ops.ell_fleet_half_step(
+            W, jnp.pad(cols, ((0, 0), (0, 0), (0, 9))),
+            jnp.pad(vals, ((0, 0), (0, 0), (0, 9))),
+            y, lam=1e-2, t=t, interpret=True)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(wide), atol=1e-6)
+
+
+# ----------------------------------------------------------------- libsvm
+
+class TestLibsvmStreaming:
+    CONTENT = "+1 1:0.5 3:2.0\n-1 2:1.5\n# comment\n+1 3:1.0 4:-0.5\n-1 1:0.25 4:1.0\n"
+
+    def test_csr_loader_matches_dense(self, tmp_path):
+        p = tmp_path / "toy.svm"
+        p.write_text(self.CONTENT)
+        Xd, yd = libsvm.load_libsvm(str(p))
+        csr, ys = libsvm.load_libsvm_csr(str(p))
+        assert csr.shape == Xd.shape
+        np.testing.assert_array_equal(csr.to_dense(), Xd)
+        np.testing.assert_array_equal(ys, yd)
+
+    def test_chunked_iter_concatenates(self, tmp_path):
+        p = tmp_path / "toy.svm"
+        p.write_text(self.CONTENT)
+        chunks = list(libsvm.iter_libsvm_chunks(str(p), n_features=4, chunk_rows=2))
+        assert len(chunks) == 2 and chunks[0][0].shape == (2, 4)
+        X = np.concatenate([c.to_dense() for c, _ in chunks])
+        Xd, _ = libsvm.load_libsvm(str(p), n_features=4)
+        np.testing.assert_array_equal(X, Xd)
+        # streaming loader with explicit d matches too
+        csr, _ = libsvm.load_libsvm_csr(str(p), n_features=4, chunk_rows=2)
+        np.testing.assert_array_equal(csr.to_dense(), Xd)
+
+    def test_out_of_range_strict_raises(self, tmp_path):
+        p = tmp_path / "toy.svm"
+        p.write_text("+1 1:1.0 9:2.0\n-1 2:1.0 8:3.0\n")
+        for loader in (libsvm.load_libsvm, libsvm.load_libsvm_csr):
+            with pytest.raises(ValueError, match="exceeds"):
+                loader(str(p), n_features=4, strict=True)
+
+    def test_out_of_range_warns_once_with_count(self, tmp_path):
+        p = tmp_path / "toy.svm"
+        p.write_text("+1 1:1.0 9:2.0\n-1 2:1.0 8:3.0\n")
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            X, _ = libsvm.load_libsvm(str(p), n_features=4)
+        assert X.shape == (2, 4)
+        assert len(caught) == 1 and "dropped 2" in str(caught[0].message)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            csr, _ = libsvm.load_libsvm_csr(str(p), n_features=4)
+        assert csr.shape == (2, 4) and csr.nnz == 2
+        assert len(caught) == 1 and "dropped 2" in str(caught[0].message)
+
+
+# ------------------------------------------------------ generator / dataset
+
+class TestSparseDatasets:
+    def test_generator_realized_nnz_exact(self):
+        """Without-replacement sampling: realized nnz hits the spec exactly
+        (the with-replacement draw undershot at higher densities)."""
+        for name in ("reuters", "mnist"):
+            spec = svm_datasets.PAPER_DATASETS[name]
+            ds = svm_datasets.make_dataset(name, scale=0.003, seed=1)
+            nnz_target = max(1, int(round(spec.sparsity * spec.d)))
+            row_nnz = (np.asarray(ds.X_train) != 0).sum(axis=1)
+            assert np.all(row_nnz == nnz_target), (name, row_nnz[:5], nnz_target)
+
+    def test_sparse_dataset_emits_ell(self):
+        spec = svm_datasets.PAPER_DATASETS["reuters"]
+        ds = svm_datasets.make_dataset("reuters", scale=0.02, seed=0, sparse=True)
+        assert ds.sparse and isinstance(ds.X_train, ELL)
+        assert ds.d == spec.d
+        nnz_target = max(1, int(round(spec.sparsity * spec.d)))
+        assert ds.X_train.k_max == nnz_target
+        assert np.all(ds.X_train.row_nnz() == nnz_target)
+        assert set(np.unique(ds.y_train)) <= {-1.0, 1.0}
+        norms = np.linalg.norm(ds.X_train.vals, axis=1)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-4)
+
+    def test_sparse_rejected_for_dense_spec(self):
+        with pytest.raises(ValueError, match="dense"):
+            svm_datasets.make_dataset("usps", sparse=True)
+
+    def test_partition_ell_matches_dense(self):
+        ds = svm_datasets.make_dataset("reuters", scale=0.02, seed=0, sparse=True)
+        Xd = ds.X_train.to_dense()
+        Pe, yps, ncs = svm_datasets.partition(ds.X_train, ds.y_train, 4, seed=7)
+        Xp, ypd, ncd = svm_datasets.partition(Xd, ds.y_train, 4, seed=7)
+        assert isinstance(Pe, EllPartitions) and Pe.shape == Xp.shape
+        np.testing.assert_array_equal(yps, ypd)
+        np.testing.assert_array_equal(ncs, ncd)
+        dense_again = np.stack([
+            ELL(Pe.cols[i], Pe.vals[i], (Pe.cols.shape[1], Pe.d)).to_dense()
+            for i in range(4)])
+        np.testing.assert_array_equal(dense_again, Xp)
+
+    def test_partition_csr_input(self):
+        X = _random_sparse(33, 40, 6)
+        y = np.sign(RNG.normal(size=33)).astype(np.float32)
+        Pe, yp, nc = svm_datasets.partition(CSR.from_dense(X), y, 5, seed=1)
+        assert isinstance(Pe, EllPartitions)
+        assert nc.sum() == 33
+
+
+# ------------------------------------------------------------- end-to-end
+
+class TestSparseGadget:
+    def _reuters_shaped(self, m=5, seed=0):
+        ds = svm_datasets.make_dataset("reuters", scale=0.05, seed=seed, sparse=True)
+        Pe, yp, nc = svm_datasets.partition(ds.X_train, ds.y_train, m, seed=3)
+        Xp, ypd, ncd = svm_datasets.partition(ds.X_train.to_dense(), ds.y_train,
+                                              m, seed=3)
+        return ds, Pe, Xp, yp, nc
+
+    @pytest.mark.parametrize("topology", ["exponential", "random"])
+    def test_sparse_vs_dense_consensus(self, topology):
+        """The acceptance bar: same data, same PRNG streams — the sparse path
+        must land on the dense path's consensus weights to ≤ 1e-5."""
+        ds, Pe, Xp, yp, nc = self._reuters_shaped()
+        cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=3,
+                           topology=topology, max_iters=200, check_every=50,
+                           epsilon=0.0)
+        rs = gadget_train(Pe, jnp.asarray(yp), cfg, n_counts=nc)
+        rd = gadget_train(jnp.asarray(Xp), jnp.asarray(yp), cfg, n_counts=nc)
+        diff = float(jnp.max(jnp.abs(rs.w_consensus - rd.w_consensus)))
+        assert diff <= 1e-5, diff
+        np.testing.assert_allclose(rs.objective_trace, rd.objective_trace,
+                                   atol=1e-5)
+
+    def test_sparse_kernel_path_matches_jnp_path(self):
+        ds, Pe, Xp, yp, nc = self._reuters_shaped(m=4)
+        cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=2,
+                           max_iters=60, check_every=30, epsilon=0.0)
+        rk = gadget_train(Pe, jnp.asarray(yp), cfg._replace(use_kernels=True),
+                          n_counts=nc)
+        rj = gadget_train(Pe, jnp.asarray(yp), cfg._replace(use_kernels=False),
+                          n_counts=nc)
+        assert float(jnp.max(jnp.abs(rk.w_consensus - rj.w_consensus))) < 1e-4
+
+    def test_sparse_reference_oracle_agrees(self):
+        ds, Pe, Xp, yp, nc = self._reuters_shaped(m=4)
+        cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=2,
+                           max_iters=80, check_every=40, epsilon=0.0)
+        dev = gadget_train(Pe, jnp.asarray(yp), cfg._replace(fused=False),
+                           n_counts=nc)
+        ref = gadget_train_reference(Pe, jnp.asarray(yp), cfg, n_counts=nc)
+        assert float(jnp.max(jnp.abs(dev.W - ref.W))) < 1e-5
+
+    def test_sparse_training_learns(self):
+        """Sanity: the sparse path actually fits the training data (at this
+        tiny scale d >> n, so held-out accuracy is not meaningful)."""
+        from repro.core import svm_objective as obj
+        ds, Pe, Xp, yp, nc = self._reuters_shaped()
+        cfg = GadgetConfig(lam=ds.lam, batch_size=8, gossip_rounds=3,
+                           max_iters=500, check_every=100, epsilon=0.0)
+        res = gadget_train(Pe, jnp.asarray(yp), cfg, n_counts=nc)
+        Xtr = jnp.asarray(ds.X_train.to_dense())
+        acc = float(obj.accuracy(res.w_consensus, Xtr, jnp.asarray(ds.y_train)))
+        assert acc > 0.9, acc
+        assert res.objective_trace[-1] < res.objective_trace[0]

@@ -108,10 +108,20 @@ def test_svm_dataset_signatures():
 
 
 def test_partition_shapes():
-    X = np.arange(101 * 3, dtype=np.float32).reshape(101, 3)
+    # 101 rows over 10 nodes: padded to n_i=11, NO tail rows dropped — the
+    # real counts come back for gadget_train's n_counts API
+    X = np.arange(101 * 3, dtype=np.float32).reshape(101, 3) + 1.0
     y = np.ones(101, np.float32)
-    Xp, yp = svm_datasets.partition(X, y, 10)
-    assert Xp.shape == (10, 10, 3) and yp.shape == (10, 10)
+    Xp, yp, nc = svm_datasets.partition(X, y, 10)
+    assert Xp.shape == (10, 11, 3) and yp.shape == (10, 11)
+    assert nc.sum() == 101 and nc.max() == 11 and nc.min() == 10
+    # padded rows carry X=0 / y=0 (the gadget padded-row convention)
+    for i in range(10):
+        assert np.all(Xp[i, nc[i]:] == 0) and np.all(yp[i, nc[i]:] == 0)
+        assert np.all(Xp[i, :nc[i]] != 0)
+    # every original row appears exactly once
+    got = np.sort(np.concatenate([Xp[i, :nc[i], 0] for i in range(10)]))
+    assert np.array_equal(got, np.sort(X[:, 0]))
 
 
 @settings(max_examples=10, deadline=None)
