@@ -2,13 +2,21 @@
 
 CI runs the --quick benchmark smoke jobs, then compares each fresh JSON
 against the baseline committed at the repo root (BENCH_kernels.json,
-BENCH_gossip_device.json). Wall-clock leaves (``seconds``, anything under
-``us_per_call``) that regress by more than ``--threshold`` (default 1.2 =
-+20%) emit a GitHub ``::warning::`` annotation — warn-only, because hosted
-runners vary wildly; the committed baseline records the shape of the numbers,
-not a hard floor. Non-timing leaves (transfer counts, launch counts, guard
-flags, consensus diffs) are structural and still only warn, so a divergence
-is visible in the job log without making CI flaky.
+BENCH_gossip_device.json, BENCH_sparse.json). Wall-clock leaves (``seconds``,
+anything under ``us_per_call``) that regress by more than ``--threshold``
+(default 1.2 = +20%) emit a GitHub ``::warning::`` annotation — warn-only,
+because hosted runners vary wildly; the committed baseline records the shape
+of the numbers, not a hard floor. Non-timing leaves (transfer counts, launch
+counts, guard flags, consensus diffs) are structural and still only warn, so
+a divergence is visible in the job log without making CI flaky.
+
+Every benchmark JSON carries a ``runner`` fingerprint (platform, backend,
+cpu count — benchmarks.common.runner_fingerprint). Wall-clock leaves are
+compared **only like-vs-like**: when the fresh fingerprint differs from the
+baseline's, timing comparisons are skipped with a note and only structural
+leaves are diffed. This is the first step toward the hard-gate goal — a
+baseline recorded on one runner class can never produce timing noise on
+another, so a matching-fingerprint regression is meaningful signal.
 
 Exit status is non-zero only when a file is missing/unreadable — a broken
 baseline should fail loudly; a slow runner should not.
@@ -27,7 +35,11 @@ WALLCLOCK_PARENTS = {"us_per_call"}
 # leaves that are noisy by construction (ratios of two wall-clocks, diffs of
 # float accumulations) — reported but never compared against the threshold
 SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
-               "consensus_max_abs_diff", "fused_vs_pr1_max_abs_diff"}
+               "consensus_max_abs_diff", "fused_vs_pr1_max_abs_diff",
+               "prefetch_vs_sweep_max_abs_diff"}
+# the fingerprint subtree identifies the runner; it is compared as a whole,
+# never leaf-by-leaf (a different cpu_count is not a "structural change")
+RUNNER_KEY = "runner"
 
 
 def _leaves(obj, path=()):
@@ -39,21 +51,32 @@ def _leaves(obj, path=()):
 
 
 def compare(fresh: dict, baseline: dict, threshold: float) -> list[str]:
-    """Return warning strings for every regressed/diverged leaf."""
+    """Return warning strings for every regressed/diverged leaf. Wall-clock
+    leaves are compared only when both fingerprints exist and match."""
     warnings = []
+    fresh_fp = fresh.get(RUNNER_KEY)
+    base_fp = baseline.get(RUNNER_KEY)
+    like_for_like = fresh_fp is not None and fresh_fp == base_fp
+    if not like_for_like:
+        # ::notice:: surfaces in the CI annotations: the timing gate is
+        # intentionally inert until baselines are recorded on this runner
+        # class (ROADMAP hard-gate item) — structural leaves still compare.
+        print(f"::notice::check_regression: runner fingerprints differ "
+              f"(fresh={fresh_fp}, baseline={base_fp}) — "
+              f"skipping wall-clock comparison, structural leaves only")
     fresh_map = dict(_leaves(fresh))
     for path, base_val in _leaves(baseline):
         name = ".".join(path)
         leaf = path[-1]
-        if leaf in SKIP_LEAVES:
+        if leaf in SKIP_LEAVES or path[0] == RUNNER_KEY:
             continue
+        is_time = leaf in WALLCLOCK_LEAVES or bool(set(path) & WALLCLOCK_PARENTS)
         if path not in fresh_map:
             warnings.append(f"{name}: present in baseline but missing from fresh run")
             continue
         new_val = fresh_map[path]
-        is_time = leaf in WALLCLOCK_LEAVES or bool(set(path) & WALLCLOCK_PARENTS)
         if is_time:
-            if base_val > 0 and new_val > base_val * threshold:
+            if like_for_like and base_val > 0 and new_val > base_val * threshold:
                 warnings.append(
                     f"{name}: wall-clock regression {base_val:.4g} -> {new_val:.4g} "
                     f"({new_val / base_val:.2f}x, threshold {threshold:.2f}x)")

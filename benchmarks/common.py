@@ -1,11 +1,15 @@
-"""Shared benchmark helpers: timing, CSV emit, dataset prep at bench scale."""
+"""Shared benchmark helpers: timing, CSV emit, runner fingerprinting, dataset
+prep at bench scale."""
 from __future__ import annotations
 
+import os
+import platform
 import time
 
 import jax
 
 from repro.data.svm_datasets import SVMDataset, make_dataset
+from repro.kernels.hinge_subgrad.ops import default_interpret
 
 # scale factors keep wall time sane on one CPU core while preserving each
 # dataset's (d, sparsity, lambda) signature; row counts stay in the thousands.
@@ -28,3 +32,21 @@ def timed(fn, *args, **kw):
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def runner_fingerprint() -> dict:
+    """Identity of the machine/backend a benchmark JSON was recorded on.
+
+    check_regression.py compares wall-clock leaves only between runs whose
+    fingerprints match (like-vs-like) — the first step toward hard perf
+    gates: a committed baseline from one runner class never produces timing
+    warnings on a different one. Structural leaves are always compared.
+    """
+    return {
+        "os": platform.system().lower(),
+        "machine": platform.machine(),
+        "python": ".".join(platform.python_version_tuple()[:2]),
+        "backend": jax.default_backend(),
+        "pallas_interpret": int(default_interpret()),
+        "cpu_count": os.cpu_count() or 0,
+    }

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, runner_fingerprint
 from repro.core import gadget
 from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
 
@@ -110,6 +110,7 @@ def run(n_nodes=32, d=4096, n_i=64, n_iters=200, check_every=50,
     }
 
     result = {
+        "runner": runner_fingerprint(),
         "config": {"n_nodes": n_nodes, "d": d, "n_i": n_i, "n_iters": n_iters,
                    "topology": topology},
         "device": {"seconds": fused_s, **fused_stats},  # fused path (default)

@@ -16,13 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, runner_fingerprint
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hinge_subgrad import ops as hinge_ops
 from repro.kernels.hinge_subgrad.ref import (ell_fleet_half_step_ref,
                                              fleet_half_step_ref, pegasos_step_ref)
 from repro.kernels.rglru_scan.ref import scan_ref as rglru_ref
 from repro.kernels.rwkv6_scan.ref import scan_ref as wkv_ref
+from repro.sparse.formats import minibatch_block_bound
 
 
 def _time(fn, *args, iters=5):
@@ -81,13 +82,38 @@ def run(verbose=True, quick=False, json_path=None):
                Wf, colsS, valsS, yf)
     rows["ell_fleet_half_step"] = us
     got = hinge_ops.ell_fleet_half_step(Wf, colsS, valsS, yf, lam=1e-3, t=tS,
-                                        interpret=True)
+                                        interpret=True, schedule="sweep")
     want = ell_fleet_half_step_ref(Wf, colsS, valsS, yf, 1e-3, tS)
     if not bool(jnp.max(jnp.abs(got - want)) < 2e-5):
         raise AssertionError("ell_fleet_half_step interpret kernel diverged from oracle")
     if verbose:
         emit(f"kernel/ell_fleet_half_step({m_nodes}x{Bf}x{df}@k={kS})", us,
              "oracle_jit;pallas=interpret-validated")
+
+    # touched-block (scalar-prefetch) schedule: same one-iteration body over
+    # block-localized planes (each node's entries inside a narrow column
+    # band, the frequency-remapped text shape) — oracle-jit timing plus an
+    # interpret-mode allclose of the prefetch kernels against both oracles.
+    base = (np.arange(m_nodes) * 256) % max(1, df - 256)
+    colsL = jnp.asarray((base[:, None, None]
+                         + rng.integers(0, 256, size=(m_nodes, Bf, kS))).astype(np.int32))
+    bound = minibatch_block_bound(np.asarray(colsL), np.asarray(valsS), Bf, d=df)
+    us = _time(lambda W, c, v, y: ell_fleet_half_step_ref(W, c, v, y, 1e-3, tS),
+               Wf, colsL, valsS, yf)
+    rows["ell_fleet_half_step_prefetch"] = us
+    got = hinge_ops.ell_fleet_half_step(Wf, colsL, valsS, yf, lam=1e-3, t=tS,
+                                        interpret=True, schedule="prefetch",
+                                        n_blocks_max=bound)
+    want = ell_fleet_half_step_ref(Wf, colsL, valsS, yf, 1e-3, tS)
+    sweep = hinge_ops.ell_fleet_half_step(Wf, colsL, valsS, yf, lam=1e-3, t=tS,
+                                          interpret=True, schedule="sweep")
+    if not bool(jnp.max(jnp.abs(got - want)) < 2e-5):
+        raise AssertionError("prefetch kernels diverged from the jnp oracle")
+    if not bool(jnp.max(jnp.abs(got - sweep)) < 2e-5):
+        raise AssertionError("prefetch kernels diverged from the sweep kernels")
+    if verbose:
+        emit(f"kernel/ell_fleet_half_step_prefetch({m_nodes}x{Bf}x{df}@k={kS})",
+             us, f"oracle_jit;pallas=interpret-validated;n_blocks_max={bound}")
 
     q = jnp.asarray(rng.normal(size=(8 // min(s, 2), 512 // s, 64)).astype(np.float32))
     us = _time(lambda q: attention_ref(q, q, q, causal=True), q)
@@ -115,7 +141,8 @@ def run(verbose=True, quick=False, json_path=None):
 
     if json_path:
         with open(json_path, "w") as fh:
-            json.dump({"quick": quick, "us_per_call": rows}, fh, indent=2)
+            json.dump({"quick": quick, "runner": runner_fingerprint(),
+                       "us_per_call": rows}, fh, indent=2)
     return rows
 
 

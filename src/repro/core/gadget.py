@@ -39,6 +39,10 @@ planes — in place of the dense (m, n_i, d) array. The local half-step then
 runs over the ELL planes (``ell_fleet_half_step`` kernels, or the jnp gather/
 scatter oracle off-kernel) touching O(B·k) feature bytes per iteration instead
 of O(B·d), and the objective trace does its full-data pass as a gather-dot.
+``cfg.sparse_schedule`` picks how those kernels walk w: the data-oblivious
+sweep over all d-blocks, or the scalar-prefetch touched-block schedule whose
+per-node cost scales with the blocks its own minibatch actually hits (the
+static grid cap is derived on host from the partition planes before tracing).
 Gossip/Push-Sum are over the *dense* resident weights and are untouched —
 mixing is linear in w, so the PR 2 collapsed-product path applies verbatim.
 The sparse half-step is inherently fleet-wide (one launch for all m nodes);
@@ -101,6 +105,12 @@ class GadgetConfig(NamedTuple):
     # nodes + one collapsed mix-and-renormalize matmul. False keeps the PR 1
     # path (2 vmapped kernels per node + R scanned matmuls) for A/B benches.
     fused: bool = True
+    # How the sparse half-step kernels walk w's d-blocks: "sweep" visits every
+    # block (PR 3 one-hot grid), "prefetch" visits only the blocks the
+    # minibatch touches (scalar-prefetch schedule), "auto" picks prefetch
+    # exactly when the data-derived block bound makes it cheaper in w-lanes.
+    # Ignored on the dense path and on the jnp (use_kernels=False) path.
+    sparse_schedule: str = "auto"
 
 
 class GadgetResult(NamedTuple):
@@ -162,6 +172,22 @@ def _unpack_partitions(X_parts):
     X = jnp.asarray(X_parts)
     m, n_i, d = X.shape
     return X, m, n_i, d, X.dtype
+
+
+def _sparse_block_bound(cfg: GadgetConfig, X_parts, X) -> int | None:
+    """Static n_blocks_max cap for the prefetch kernel schedule, derived on
+    host from the partition planes before tracing (the traced loop needs a
+    concrete grid bound). None for dense data / the jnp path / the sweep
+    schedule, where no bound is consumed."""
+    if not isinstance(X, tuple) or not cfg.use_kernels or cfg.sparse_schedule == "sweep":
+        return None
+    if hasattr(X_parts, "block_bound"):  # EllPartitions caches row counts
+        return X_parts.block_bound(cfg.batch_size)
+    from repro.sparse.formats import minibatch_block_bound
+    cols, vals = np.asarray(X_parts.cols), np.asarray(X_parts.vals)
+    return minibatch_block_bound(
+        cols.reshape(cols.shape[0], -1, cols.shape[-1]), vals,
+        cfg.batch_size, d=int(X_parts.d))
 
 
 def _resolve_kernels(cfg: GadgetConfig) -> GadgetConfig:
@@ -231,13 +257,15 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
 def _gossip_step(cfg: GadgetConfig, m: int,
                  X: jax.Array, y: jax.Array, n_counts: jax.Array,
                  data_key: jax.Array, W: jax.Array, W_sum: jax.Array,
-                 t: jax.Array, Bs: jax.Array):
+                 t: jax.Array, Bs: jax.Array, sparse_block_bound: int | None = None):
     """Steps (a)-(h) for all m nodes at iteration t. ``Bs`` is the (R, m, m)
     per-round stack (sequential path) or the collapsed (m, m) product P_t
     (``cfg.fused``). ``X`` is the dense (m, n_i, d) array or the (cols, vals)
-    tuple of stacked ELL planes. The single shared step body — the device
-    loop and the host-loop reference differ only in orchestration (where Bs
-    comes from, where the ε-check runs)."""
+    tuple of stacked ELL planes; ``sparse_block_bound`` is the static
+    n_blocks_max cap for the prefetch kernel schedule (host-derived from the
+    partition planes — formats.minibatch_block_bound). The single shared step
+    body — the device loop and the host-loop reference differ only in
+    orchestration (where Bs comes from, where the ε-check runs)."""
     tf = t.astype(jnp.float32)
     ids = _batch_ids(data_key, t, n_counts, cfg.batch_size)
 
@@ -252,7 +280,9 @@ def _gossip_step(cfg: GadgetConfig, m: int,
         if cfg.use_kernels:
             W_half = hinge_ops.ell_fleet_half_step(W, Cb, Vb, yb, lam=cfg.lam,
                                                    t=tf,
-                                                   project=cfg.project_before_gossip)
+                                                   project=cfg.project_before_gossip,
+                                                   schedule=cfg.sparse_schedule,
+                                                   n_blocks_max=sparse_block_bound)
         else:
             W_half = hinge_ref.ell_fleet_half_step_ref(W, Cb, Vb, yb, cfg.lam, tf,
                                                        project=cfg.project_before_gossip)
@@ -283,12 +313,14 @@ def _gossip_step(cfg: GadgetConfig, m: int,
 def _one_iteration(cfg: GadgetConfig, m: int,
                    X: jax.Array, y: jax.Array, n_counts: jax.Array,
                    data_key: jax.Array, mix_key: jax.Array, B_stack: jax.Array | None,
-                   W: jax.Array, W_sum: jax.Array, t: jax.Array):
+                   W: jax.Array, W_sum: jax.Array, t: jax.Array,
+                   sparse_block_bound: int | None = None):
     """One fully device-resident iteration: derive this iteration's mixing
     (stack slice, product-cycle slice, or in-step draw), then the shared step."""
     Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology,
                       cfg.fused)
-    return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs)
+    return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs,
+                        sparse_block_bound)
 
 
 def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
@@ -300,7 +332,8 @@ def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
 
 @functools.lru_cache(maxsize=32)
 def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
-                       n_chunks: int, chunk: int):
+                       n_chunks: int, chunk: int,
+                       sparse_block_bound: int | None = None):
     """Jitted whole-training function: while_loop over ε-check chunks, scan
     over iterations inside each chunk, donated weight buffers, on-device
     objective/ε traces. Returns arrays only — the caller syncs once."""
@@ -330,7 +363,8 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             W, W_sum = jax.lax.cond(
                 active,
                 lambda a: _one_iteration(cfg, m, X, y, n_counts,
-                                         data_key, mix_key, B_stack, *a),
+                                         data_key, mix_key, B_stack, *a,
+                                         sparse_block_bound=sparse_block_bound),
                 lambda a: (a[0], a[1]),
                 (W, W_sum, t),
             )
@@ -381,6 +415,7 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     cfg = _resolve_kernels(cfg)
     n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
+    sparse_block_bound = _sparse_block_bound(cfg, X_parts, X)
 
     if cfg.topology == "random":
         B_stack = None
@@ -394,7 +429,8 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
 
     chunk = min(cfg.check_every, cfg.max_iters)
     n_chunks = -(-cfg.max_iters // chunk)
-    train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk)
+    train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk,
+                               sparse_block_bound)
     args = (X, jnp.asarray(y_parts), B_stack, data_key, mix_key,
             n_counts, jnp.zeros((m, d), dtype), jnp.zeros((m, d), dtype))
     return train, args
@@ -457,18 +493,24 @@ def gadget_train(
 
 
 @functools.lru_cache(maxsize=32)
-def _make_reference_step(cfg: GadgetConfig, m: int, n_i: int, d: int):
+def _make_reference_step(cfg: GadgetConfig, m: int, n_i: int, d: int,
+                         sparse_block_bound: int | None = None):
     """One jitted GADGET iteration for the host-loop reference, compiled once
     per (cfg, shape): data/keys are runtime arguments, not baked-in constants.
     Deterministic topologies receive this iteration's matrices via ``Bs``
     (the per-iteration host upload being measured); the random protocol draws
-    them in-step like the device path and ignores ``Bs``."""
+    them in-step like the device path and ignores ``Bs``. The sparse block
+    bound rides along so the oracle resolves the *same* kernel schedule as
+    the device loop — otherwise ``sparse_schedule="auto"`` could pick prefetch
+    on one side and sweep on the other and the trajectories would differ in
+    float rounding."""
 
     def step(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs):
         if cfg.topology == "random":
             Bs = _iter_mixing(mix_key, None, t, m, cfg.gossip_rounds,
                               cfg.topology, cfg.fused)
-        return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs)
+        return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs,
+                            sparse_block_bound)
 
     return jax.jit(step)
 
@@ -512,7 +554,8 @@ def gadget_train_reference(
         def objective_of(w):
             return obj.primal_objective_masked(
                 w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
-    one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d)
+    one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d,
+                                    _sparse_block_bound(cfg, X_parts, X))
 
     W = jnp.zeros((m, d), dtype)
     W_sum = jnp.zeros((m, d), dtype)
@@ -560,7 +603,8 @@ def gadget_train_reference(
 # ---------------------------------------------------------------------------
 
 
-def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int]):
+def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int],
+                          sparse_block_bound: int | None = None):
     """Build a per-node GADGET step for use inside ``shard_map``.
 
     The returned ``step(w, X_local, y_local, t, key)`` runs the local Pegasos
@@ -570,18 +614,48 @@ def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int]):
     *python-level* step index captured at trace time via closure — callers jit
     once per schedule offset or (default) keep the full exponential schedule
     per step so rotation is unnecessary.
+
+    ``X_local`` is the node's dense (n_local, d) shard **or** a
+    ``(cols_local, vals_local)`` tuple of its (n_local, k) padded-ELL planes —
+    the node-sharded sparse layout: each shard of the mesh holds only its own
+    rows' planes, the half-step runs the ELL kernels on them
+    (``cfg.sparse_schedule`` picks sweep vs touched-block, with
+    ``sparse_block_bound`` as the prefetch grid cap — derive it on host with
+    ``formats.minibatch_block_bound`` over the full planes so every shard
+    traces the same grid), and only the dense w crosses the mesh in gossip.
+    Kernel-backed steps need ``shard_map(..., check_rep=False)`` — jax has no
+    replication rule for ``pallas_call`` yet (tests pin this).
     """
     cfg = _resolve_kernels(cfg)
     sched = exponential_schedule(axis_sizes)
     R = len(sched) if cfg.gossip_rounds is None else cfg.gossip_rounds
+    if not sched:
+        R = 0  # single-node mesh: no neighbors to gossip with
 
-    def step(w: jax.Array, X_local: jax.Array, y_local: jax.Array,
+    def step(w: jax.Array, X_local, y_local: jax.Array,
              t: jax.Array, key: jax.Array) -> jax.Array:
-        n_local = X_local.shape[0]
+        sparse = isinstance(X_local, tuple)
+        n_local = (X_local[0] if sparse else X_local).shape[0]
         ids = jax.random.randint(key, (cfg.batch_size,), 0, n_local)
-        w_half = _local_half_step(w, X_local, y_local, ids, cfg.lam,
-                                  t.astype(jnp.float32), cfg.project_before_gossip,
-                                  cfg.use_kernels)
+        tf = t.astype(jnp.float32)
+        if sparse:
+            cols_l, vals_l = X_local
+            Cb, Vb, yb = cols_l[ids], vals_l[ids], y_local[ids]
+            # the sparse kernels are fleet-shaped: one-node fleet per shard
+            if cfg.use_kernels:
+                w_half = hinge_ops.ell_fleet_half_step(
+                    w[None], Cb[None], Vb[None], yb[None], lam=cfg.lam, t=tf,
+                    project=cfg.project_before_gossip,
+                    schedule=cfg.sparse_schedule,
+                    n_blocks_max=sparse_block_bound)[0]
+            else:
+                w_half = hinge_ref.ell_fleet_half_step_ref(
+                    w[None], Cb[None], Vb[None], yb[None], cfg.lam, tf,
+                    project=cfg.project_before_gossip)[0]
+        else:
+            w_half = _local_half_step(w, X_local, y_local, ids, cfg.lam,
+                                      tf, cfg.project_before_gossip,
+                                      cfg.use_kernels)
         state = PushSumState(values=(w_half,), weight=jnp.float32(1.0))
         for k in range(R):
             state = push_sum_round(state, sched[k % len(sched)])

@@ -210,7 +210,11 @@ def push_sum_round(
 ) -> PushSumState:
     """One Push-Sum round inside ``shard_map``: keep ``self_share`` of the
     local mass, ppermute the rest ``hop`` steps along ``rnd.axis``."""
-    n = jax.lax.axis_size(rnd.axis)
+    # jax.lax.axis_size only exists on newer jax; psum of 1 is the portable
+    # spelling (constant-folded at trace time, no collective is emitted)
+    axis_size = getattr(jax.lax, "axis_size", None)
+    n = int(axis_size(rnd.axis) if axis_size is not None
+            else jax.lax.psum(1, rnd.axis))
     if n == 1:
         return state
     pairs = _ring_perm(n, rnd.hop)

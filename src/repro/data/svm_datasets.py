@@ -39,13 +39,22 @@ class DatasetSpec:
     lam: float           # paper's lambda for this dataset (Table 2)
     label_noise: float = 0.05
     class_balance: float = 0.5
+    # Zipf exponent of the column-popularity profile (0 = uniform). Real
+    # tf-idf text draws its terms from a Zipf-distributed vocabulary, so with
+    # frequency-ranked column ids a document's nonzeros concentrate in the
+    # leading columns — the locality that makes touched-block kernel
+    # scheduling (repro.sparse.formats block bucketing) pay off. Uniform
+    # column draws would erase that structure and misrepresent the workload.
+    col_skew: float = 0.0
 
 
 # Table 2 of the paper. Sparsity "NA" in the paper => dense here, except CCAT
-# which the paper reports at 0.16% nonzeros.
+# which the paper reports at 0.16% nonzeros. CCAT (RCV1 tf-idf) additionally
+# carries a Zipf column-popularity profile with frequency-ranked ids — see
+# DatasetSpec.col_skew.
 PAPER_DATASETS: dict[str, DatasetSpec] = {
     "adult":   DatasetSpec("adult",   32561,  16281,   123, 1.0,    3.07e-5, label_noise=0.15, class_balance=0.24),
-    "ccat":    DatasetSpec("ccat",    781265, 23149, 47236, 0.0016, 1e-4,    label_noise=0.05, class_balance=0.47),
+    "ccat":    DatasetSpec("ccat",    781265, 23149, 47236, 0.0016, 1e-4,    label_noise=0.05, class_balance=0.47, col_skew=1.25),
     "mnist":   DatasetSpec("mnist",   60000,  10000,   784, 0.19,   1.67e-5, label_noise=0.02, class_balance=0.099),
     "reuters": DatasetSpec("reuters", 7770,   3299,   8315, 0.01,   1.29e-4, label_noise=0.03, class_balance=0.3),
     "usps":    DatasetSpec("usps",    7329,   1969,    256, 1.0,    1.36e-4, label_noise=0.02, class_balance=0.167),
@@ -71,18 +80,37 @@ class SVMDataset:
         return isinstance(self.X_train, ELL)
 
 
-def _sample_cols(rng: np.random.Generator, n: int, nnz: int, d: int) -> np.ndarray:
+def _sample_cols(rng: np.random.Generator, n: int, nnz: int, d: int,
+                 skew: float = 0.0) -> np.ndarray:
     """(n, nnz) nonzero column ids, **without replacement** within each row —
     realized per-row nnz is exact, where the old with-replacement draw
     undershot the spec increasingly with density.
 
-    Two regimes: when collisions are rare (nnz² ≤ d — all the text-like
+    ``skew`` > 0 draws each row's columns with Zipf popularity
+    P(col = r) ∝ (r+1)^-skew (frequency-ranked ids: column 0 is the hottest
+    term). Implemented as a chunked exponential race — ``key_r = E_r / w_r``
+    with E ~ Exp(1), keep the nnz smallest keys — which is exact weighted
+    sampling without replacement, vectorized with an O(chunk·d) transient.
+
+    Uniform regimes: when collisions are rare (nnz² ≤ d — all the text-like
     specs), rejection-resample colliding rows (exactly uniform, O(n·nnz)
     memory); otherwise chunked Gumbel-top-k via argpartition, bounding the
     (chunk, d) scratch so full-shape generation never goes dense-scale.
     """
     if nnz >= d:
         return np.tile(np.arange(d, dtype=np.int64), (n, 1))
+    if skew > 0.0:
+        inv_w = np.arange(1, d + 1, dtype=np.float32) ** np.float32(skew)
+        chunk = max(1, (1 << 25) // d)
+        out = np.empty((n, nnz), np.int64)
+        for s in range(0, n, chunk):
+            e = min(n, s + chunk)
+            u = rng.random((e - s, d), dtype=np.float32)
+            with np.errstate(divide="ignore"):  # u=0 → -inf: never selected
+                np.log(u, out=u)   # -E ~ -Exp(1)
+            u *= inv_w             # key = -E/w: keep the nnz *largest* -keys
+            out[s:e] = np.argpartition(u, d - nnz, axis=1)[:, d - nnz:]
+        return out
     if nnz * nnz <= d:
         cols = rng.integers(0, d, size=(n, nnz))
         bad = np.arange(n)
@@ -122,7 +150,7 @@ def _gen_split(spec: DatasetSpec, n: int, w_star: np.ndarray, rng: np.random.Gen
         nnz = max(1, int(round(spec.sparsity * d)))
         # sparse nonnegative "text-like" features; exact nnz per row
         mask = np.zeros((n, d), dtype=bool)
-        cols = _sample_cols(rng, n, nnz, d)
+        cols = _sample_cols(rng, n, nnz, d, spec.col_skew)
         mask[np.arange(n)[:, None], cols] = True
         X = np.where(mask, np.abs(X), 0.0).astype(np.float32)
     # normalize rows (the paper's text sets are tf-idf normalized)
@@ -138,7 +166,7 @@ def _gen_split_ell(spec: DatasetSpec, n: int, w_star: np.ndarray,
     (n, nnz) column/value planes — the dense matrix never exists."""
     d = spec.d
     nnz = max(1, int(round(spec.sparsity * d)))
-    cols = np.sort(_sample_cols(rng, n, nnz, d), axis=1).astype(np.int32)
+    cols = np.sort(_sample_cols(rng, n, nnz, d, spec.col_skew), axis=1).astype(np.int32)
     vals = np.abs(rng.normal(0.0, 1.0, size=(n, nnz)).astype(np.float32))
     vals /= np.maximum(np.linalg.norm(vals, axis=1, keepdims=True), 1e-8)
     # chunked gather-dot keeps the transient at (chunk, nnz)
@@ -205,6 +233,9 @@ def partition(X, y: np.ndarray, m: int, seed: int = 0):
     if hasattr(X, "to_ell"):  # CSR input: convert once, partition as ELL
         X = X.to_ell()
     if isinstance(X, ELL):
+        # the partitions object carries the touched-block schedule metadata:
+        # .row_block_counts()/.block_bound() compute lazily (cached per
+        # blk_d) so only prefetch-schedule consumers pay the O(nnz) pass
         return (EllPartitions(zero_pads(X.cols[idx].reshape(m, n_i, -1)),
                               zero_pads(X.vals[idx].reshape(m, n_i, -1)),
                               X.shape[1]),

@@ -21,10 +21,13 @@ import jax.numpy as jnp
 
 from repro.kernels.hinge_subgrad import hinge_subgrad as K
 from repro.kernels.hinge_subgrad import sparse as S
+from repro.sparse.formats import DEFAULT_BUCKET_BLK_D
 
 __all__ = ["pegasos_step", "local_half_step", "fleet_half_step",
-           "ell_fleet_half_step", "padded_row_mask", "default_interpret",
-           "FLEET_TILE_BUDGET_BYTES", "ELL_ONEHOT_BUDGET"]
+           "ell_fleet_half_step", "ell_block_map", "resolve_ell_schedule",
+           "padded_row_mask", "default_interpret",
+           "FLEET_TILE_BUDGET_BYTES", "ELL_ONEHOT_BUDGET",
+           "ELL_PREFETCH_BLK_D"]
 
 # Largest per-node (B_pad, d_pad) f32 minibatch tile the fused fleet kernel
 # will keep resident in VMEM (per grid program). Above this, fleet_half_step
@@ -155,6 +158,12 @@ def fleet_half_step(W: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
 # in VMEM; the wrapper shrinks blk_d (lane-multiple floor) to stay under it.
 ELL_ONEHOT_BUDGET = 4 * 1024 * 1024
 
+# Touched-block (scalar-prefetch) schedule block width: the 128-lane minimum,
+# single-sourced from the formats layer so host bounds and kernel grids agree.
+# Fine blocks over-fetch the least per live block; the sweep schedule makes
+# the opposite trade (coarse blocks, short data-oblivious grid).
+ELL_PREFETCH_BLK_D = DEFAULT_BUCKET_BLK_D
+
 
 def _ell_blk_d(d_pad: int, Bk: int) -> int:
     blk = min(S.DEFAULT_BLK_D_SPARSE, d_pad)
@@ -164,45 +173,153 @@ def _ell_blk_d(d_pad: int, Bk: int) -> int:
     return blk
 
 
+def ell_block_map(cols: jax.Array, vals: jax.Array, *, blk_d: int,
+                  n_d_blocks: int, n_blocks_max: int) -> jax.Array:
+    """Compact per-node touched-block-id map, on device and trace-safe: the
+    twin of ``repro.sparse.formats.block_map`` (tests pin them together).
+
+    cols/vals: (m, B, k) minibatch planes → (m, n_blocks_max) int32 with each
+    node's distinct live d-block ids ascending, then the inert sentinel
+    ``n_d_blocks``. Pad entries (val = 0) mark nothing. Cost is one O(B·k)
+    scatter plus an O(n_d_blocks log n_d_blocks) sort per node — noise next to
+    the half-step itself.
+
+    **Caller contract**: ``n_blocks_max`` must be ≥ the realized live count —
+    use ``formats.minibatch_block_bound`` (sound for every drawable
+    minibatch). Traced code cannot raise, so an undersized cap silently drops
+    the highest live block ids (margins and gradients lose their
+    contributions); the host twin ``formats.block_map`` raises ``ValueError``
+    on the same input and is the debugging tool for suspect schedules.
+    """
+    m = cols.shape[0]
+    blk = jnp.where(vals != 0, cols // blk_d, n_d_blocks).reshape(m, -1)
+    touched = jax.vmap(
+        lambda b: jnp.zeros((n_d_blocks,), jnp.bool_).at[b].set(True, mode="drop")
+    )(blk)
+    ids = jnp.where(touched, jnp.arange(n_d_blocks, dtype=jnp.int32)[None, :],
+                    n_d_blocks)
+    ids = jnp.sort(ids, axis=1).astype(jnp.int32)
+    if n_d_blocks < n_blocks_max:  # fewer real blocks than map slots: all live
+        pad = jnp.full((m, n_blocks_max - n_d_blocks), n_d_blocks, jnp.int32)
+        return jnp.concatenate([ids, pad], axis=1)
+    return ids[:, :n_blocks_max]
+
+
+def resolve_ell_schedule(schedule: str, *, B: int, k: int, d: int,
+                         n_blocks_max: int | None = None,
+                         blk_d: int | None = None) -> tuple[str, int, int]:
+    """Pin an ELL schedule request to concrete ``(schedule, blk_d, n_blocks_max)``.
+
+    ``schedule``: "sweep", "prefetch", or "auto". Auto picks prefetch exactly
+    when its worst-case w-lane footprint beats the sweep's —
+    ``n_blocks_max · ELL_PREFETCH_BLK_D < d_pad`` — which needs a data-derived
+    ``n_blocks_max`` (formats.minibatch_block_bound) to ever fire: the
+    structural fallback cap ``min(B·k, n_d_blocks)`` is the no-information
+    bound. n_blocks_max is clamped to the structural cap either way.
+    """
+    if schedule not in ("auto", "prefetch", "sweep"):
+        raise ValueError(f"unknown ELL schedule {schedule!r}")
+    kp = -(-max(k, 1) // 128) * 128
+    Bp = -(-B // 8) * 8
+    sweep_blk = _ell_blk_d(-(-d // 128) * 128, Bp * kp)
+    if schedule == "sweep":
+        return "sweep", (blk_d or sweep_blk), 0
+    pref_blk = blk_d or ELL_PREFETCH_BLK_D
+    n_d_blocks = -(-d // pref_blk)
+    cap = max(1, min(n_blocks_max or B * max(k, 1), B * max(k, 1), n_d_blocks))
+    if schedule == "prefetch":
+        return "prefetch", pref_blk, cap
+    sweep_lanes = (-(-d // sweep_blk)) * sweep_blk
+    if cap * pref_blk < sweep_lanes:
+        return "prefetch", pref_blk, cap
+    return "sweep", sweep_blk, 0
+
+
 def ell_fleet_half_step(W: jax.Array, cols: jax.Array, vals: jax.Array,
                         y: jax.Array, *, lam: float, t: jax.Array,
                         project: bool = True,
-                        interpret: bool | None = None) -> jax.Array:
+                        interpret: bool | None = None,
+                        schedule: str = "auto",
+                        n_blocks_max: int | None = None,
+                        blk_d: int | None = None) -> jax.Array:
     """Sparse GADGET steps (a)-(e) for the whole fleet over ELL planes.
 
     W: (m, d) per-node weights; cols/vals: (m, B, k) gathered ELL minibatch
     planes (repro.sparse.formats pad convention: pad entries (col=0, val=0),
     pad rows y=0); y: (m, B). Sparse counterpart of ``fleet_half_step`` — two
-    kernel launches (gather-dot margins, scatter-add grad fused with the
-    Pegasos axpy) touching O(B·k) feature bytes instead of O(B·d).
+    kernel launches (gather-dot margins, scatter-add grad) touching O(B·k)
+    feature bytes instead of O(B·d).
+
+    ``schedule`` selects how the kernels walk w's d-blocks:
+
+    * ``"sweep"`` — the data-oblivious grid (m, d/blk_d): every node visits
+      every block (the PR 3 one-hot kernels; parity oracle).
+    * ``"prefetch"`` — grid (m, n_blocks_max) over the per-minibatch compact
+      touched-block-id map (computed here on device, scalar-prefetched into
+      the kernels' index_map): each program DMAs one live w block, so cost
+      scales with the blocks this minibatch actually touches. ``n_blocks_max``
+      is the static grid bound — pass the data-derived cap from
+      ``formats.minibatch_block_bound`` (falls back to min(B·k, n_d_blocks),
+      correct but saving-free). The grad kernel emits raw per-bucket
+      scatter-adds; the Pegasos axpy is folded here as one elementwise decay
+      plus a masked scatter (untouched blocks only decay — same math).
+    * ``"auto"`` — prefetch iff its worst-case w-lane footprint beats the
+      sweep's (see ``resolve_ell_schedule``).
 
     Trace-safe (no jit of its own) for use inside the device-resident gossip
     loop. Padding: k → 128-lane multiple, B → 8-sublane multiple, d → blk_d
-    multiple; all pads are inert under the ELL convention.
+    multiple (+ one all-zero block, the prefetch sentinel's landing pad); all
+    pads are inert under the ELL convention.
     """
     m, B, k = cols.shape
     d = W.shape[1]
+    if k == 0:  # k_max=0 planes (e.g. all rows empty after bucketing): widen
+        cols = jnp.zeros((m, B, 1), jnp.int32)  # to one inert (0, 0) entry so
+        vals = jnp.zeros((m, B, 1), jnp.float32)  # block shapes stay nonzero
+        k = 1
     if interpret is None:
         interpret = default_interpret()
+    schedule, blk_d, n_blocks_max = resolve_ell_schedule(
+        schedule, B=B, k=k, d=d, n_blocks_max=n_blocks_max, blk_d=blk_d)
 
-    kp = -(-k // 128) * 128
-    Bp = -(-B // 8) * 8
     colsP = _pad_to(_pad_to(cols.astype(jnp.int32), 8, 1), 128, 2)
     valsP = _pad_to(_pad_to(vals.astype(jnp.float32), 8, 1), 128, 2)
     yp = _pad_to(y.astype(jnp.float32), 8, 1)
-    blk_d = _ell_blk_d(-(-d // 128) * 128, Bp * kp)
-    Wp = _pad_to(W.astype(jnp.float32), blk_d, 1)
-
-    margins = S.ell_margins(colsP, valsP, Wp, yp, blk_d=blk_d, interpret=interpret)
-    # pad rows carry y=0 ⇒ coefficient 0 (padded_row_mask invariant): inert in
-    # the scatter even though their margin 0 selects into the violator set
-    coeff = jnp.where(margins < 1.0, yp, 0.0)
 
     tf = jnp.asarray(t, jnp.float32)
     alpha = 1.0 / (lam * tf)
     scal = jnp.stack([lam * alpha, alpha / B])
-    W_half = S.ell_grad_update(colsP, valsP, Wp, coeff, scal, blk_d=blk_d,
-                               interpret=interpret)[:, :d]
+
+    if schedule == "prefetch":
+        n_d_blocks = -(-d // blk_d)
+        d_pad = n_d_blocks * blk_d
+        bids = ell_block_map(colsP, valsP, blk_d=blk_d, n_d_blocks=n_d_blocks,
+                             n_blocks_max=n_blocks_max)
+        # one extra zero block after the last real one: the sentinel's DMA pad
+        Wp = _pad_to(W.astype(jnp.float32), (n_d_blocks + 1) * blk_d, 1)
+        margins = S.ell_margins_prefetch(colsP, valsP, Wp, yp, bids,
+                                         blk_d=blk_d, n_d_blocks=n_d_blocks,
+                                         interpret=interpret)
+        coeff = jnp.where(margins < 1.0, yp, 0.0)
+        G = S.ell_grad_update_prefetch(colsP, valsP, coeff, bids, blk_d=blk_d,
+                                       n_d_blocks=n_d_blocks, interpret=interpret)
+        # fold buckets into the axpy: decay everywhere, scatter-add the live
+        # buckets (sentinel buckets index past d_pad → dropped, and are zero)
+        flat = (bids[:, :, None] * blk_d
+                + jnp.arange(blk_d, dtype=jnp.int32)[None, None, :]).reshape(m, -1)
+        W_half = jax.vmap(
+            lambda w_row, g, fi: ((1.0 - scal[0]) * w_row)
+            .at[fi].add(scal[1] * g, mode="drop")
+        )(Wp[:, :d_pad], G.reshape(m, -1), flat)[:, :d]
+    else:
+        Wp = _pad_to(W.astype(jnp.float32), blk_d, 1)
+        margins = S.ell_margins(colsP, valsP, Wp, yp, blk_d=blk_d,
+                                interpret=interpret)
+        # pad rows carry y=0 ⇒ coefficient 0 (padded_row_mask invariant):
+        # inert in the scatter though their margin 0 selects as a violator
+        coeff = jnp.where(margins < 1.0, yp, 0.0)
+        W_half = S.ell_grad_update(colsP, valsP, Wp, coeff, scal, blk_d=blk_d,
+                                   interpret=interpret)[:, :d]
     if project:
         W_half = jax.vmap(lambda w: _project_ball(w, lam))(W_half)
     return W_half.astype(W.dtype)

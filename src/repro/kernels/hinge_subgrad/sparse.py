@@ -24,6 +24,25 @@ pad *rows* carry y=0 — both are inert in the contraction, so the kernels take
 no validity plane. VMEM per program is the (B·k, blk_d) one-hot plus the
 planes: callers bound B·k·blk_d (ops.ell_fleet_half_step picks blk_d).
 Interpret mode off-TPU as everywhere else in this package.
+
+Two schedules per op:
+
+  * **sweep** (``ell_margins`` / ``ell_grad_update``) — grid (m, d/blk_d):
+    every node walks *all* d-blocks every launch. Data-oblivious, and the
+    parity oracle for the schedule below.
+  * **touched-block** (``ell_margins_prefetch`` / ``ell_grad_update_prefetch``)
+    — grid (m, n_blocks_max) over a compact per-node touched-block-id map
+    (repro.sparse.formats.block_map; ops.ell_block_map is the on-device twin).
+    The map rides in as a ``PrefetchScalarGridSpec`` scalar-prefetch operand so
+    the ``index_map`` can steer each program's DMA to exactly one *live* w
+    block. Empty slots carry the sentinel id ``n_d_blocks`` and alias the
+    all-zero pad block appended after w's last real block — inert on read, and
+    ``pl.when`` skips their contraction so FLOPs track live blocks too.
+    Sentinel slots are contiguous at the map's tail (the map is sorted), so
+    Mosaic's revisit logic collapses their DMAs into one. Per-node cost
+    becomes O(touched · B·k·blk_d) instead of O(B·k·d) — proportional to the
+    node's own nonzero structure, which is the GADGET paper's per-node-local
+    cost model.
 """
 from __future__ import annotations
 
@@ -36,7 +55,8 @@ import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
 
-__all__ = ["ell_margins", "ell_grad_update", "DEFAULT_BLK_D_SPARSE"]
+__all__ = ["ell_margins", "ell_grad_update", "ell_margins_prefetch",
+           "ell_grad_update_prefetch", "DEFAULT_BLK_D_SPARSE"]
 
 DEFAULT_BLK_D_SPARSE = 512
 
@@ -131,3 +151,116 @@ def ell_grad_update(cols: jax.Array, vals: jax.Array, W: jax.Array,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cols, vals, W, coeff, scal)
+
+
+# ---------------------------------------------------------------------------
+# Touched-block schedule (scalar-prefetch): grid (m, n_blocks_max)
+# ---------------------------------------------------------------------------
+
+
+def _ell_margins_prefetch_kernel(bids_ref, cols_ref, vals_ref, w_ref, y_ref,
+                                 m_ref, acc, *, blk_d, n_d_blocks):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    bid = bids_ref[i, j]
+
+    @pl.when(bid < n_d_blocks)  # sentinel slots: DMA aliases the pad block,
+    def _():                    # contraction skipped — FLOPs track live blocks
+        B, k = cols_ref.shape[1], cols_ref.shape[2]
+        onehot, v = _onehot_gather(cols_ref[0] - bid * blk_d, vals_ref[0], blk_d)
+        gathered = onehot @ w_ref[0]
+        acc[...] += jnp.sum((v * gathered).reshape(B, k), axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _():
+        m_ref[0] = y_ref[0] * acc[...]
+
+
+def ell_margins_prefetch(cols: jax.Array, vals: jax.Array, W: jax.Array,
+                         y: jax.Array, block_ids: jax.Array, *, blk_d: int,
+                         n_d_blocks: int, interpret: bool = False) -> jax.Array:
+    """Touched-block twin of :func:`ell_margins`.
+
+    ``block_ids``: (m, n_blocks_max) compact touched-block-id map (live ids
+    ascending, then the sentinel ``n_d_blocks``), scalar-prefetched so the
+    w ``index_map`` DMAs exactly the one live block each program contracts
+    against. W must carry the sentinel's landing pad: shape
+    (m, (n_d_blocks + 1)·blk_d) with the last block all-zero."""
+    m, B, k = cols.shape
+    assert W.shape[1] == (n_d_blocks + 1) * blk_d, "caller pads W + zero block"
+    n_blocks_max = block_ids.shape[1]
+    kern = functools.partial(_ell_margins_prefetch_kernel, blk_d=blk_d,
+                             n_d_blocks=n_d_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, n_blocks_max),
+        in_specs=[
+            pl.BlockSpec((1, B, k), lambda i, j, b: (i, 0, 0)),
+            pl.BlockSpec((1, B, k), lambda i, j, b: (i, 0, 0)),
+            pl.BlockSpec((1, blk_d), lambda i, j, b: (i, b[i, j])),
+            pl.BlockSpec((1, B), lambda i, j, b: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda i, j, b: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((B,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, B), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_ids, cols, vals, W, y)
+
+
+def _ell_grad_prefetch_kernel(bids_ref, cols_ref, vals_ref, c_ref, g_ref, *,
+                              blk_d, n_d_blocks):
+    i, j = pl.program_id(0), pl.program_id(1)
+    bid = bids_ref[i, j]
+    g_ref[0, 0] = jnp.zeros_like(g_ref[0, 0])
+
+    @pl.when(bid < n_d_blocks)
+    def _():
+        onehot, v = _onehot_gather(cols_ref[0] - bid * blk_d, vals_ref[0], blk_d)
+        contrib = (c_ref[0][:, None] * vals_ref[0]).reshape(v.shape)
+        g_ref[0, 0] = contrib @ onehot
+
+
+def ell_grad_update_prefetch(cols: jax.Array, vals: jax.Array,
+                             coeff: jax.Array, block_ids: jax.Array, *,
+                             blk_d: int, n_d_blocks: int,
+                             interpret: bool = False) -> jax.Array:
+    """Touched-block twin of :func:`ell_grad_update`'s scatter phase.
+
+    Returns the raw per-bucket scatter-adds g — (m, n_blocks_max, blk_d),
+    bucket j of node i holding Σ_b coeff_b · vals[b, :] over the entries in
+    d-block ``block_ids[i, j]`` (sentinel buckets are zeros). Unlike the sweep
+    kernel it neither reads w nor applies the Pegasos axpy: untouched blocks
+    still need the (1 − λα) decay, so the wrapper folds the buckets into the
+    decayed weights with one masked scatter — see ops.ell_fleet_half_step."""
+    m, B, k = cols.shape
+    n_blocks_max = block_ids.shape[1]
+    kern = functools.partial(_ell_grad_prefetch_kernel, blk_d=blk_d,
+                             n_d_blocks=n_d_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m, n_blocks_max),
+        in_specs=[
+            pl.BlockSpec((1, B, k), lambda i, j, b: (i, 0, 0)),
+            pl.BlockSpec((1, B, k), lambda i, j, b: (i, 0, 0)),
+            pl.BlockSpec((1, B), lambda i, j, b: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk_d), lambda i, j, b: (i, j, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n_blocks_max, blk_d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_ids, cols, vals, coeff)

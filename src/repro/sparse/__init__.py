@@ -6,4 +6,8 @@ layout contract; the sparse Pallas kernels live in
 ``repro.kernels.hinge_subgrad`` and the streaming LibSVM ingest in
 ``repro.data.libsvm``.
 """
-from repro.sparse.formats import CSR, ELL, EllPartitions, partition_rows  # noqa: F401
+from repro.sparse.formats import (  # noqa: F401
+    CSR, ELL, BlockBuckets, DEFAULT_BUCKET_BLK_D, EllPartitions,
+    block_map, bucket_by_block, frequency_remap, minibatch_block_bound,
+    partition_rows, row_block_counts,
+)

@@ -19,14 +19,43 @@ consumes; it composes with the PR 2 ``n_counts`` API (padded tail rows carry
 all-zero vals and are excluded from sampling/mass/objective by the caller's
 counts). This module is NumPy-only on purpose — it is the host substrate; the
 jnp/Pallas consumers live in ``repro.kernels.hinge_subgrad``.
+
+Block bucketing (sweep-free scheduling): the one-hot sparse kernels sweep all
+``d/blk_d`` weight blocks per node even though a (B, k) minibatch touches only
+a few. The helpers at the bottom of this module are the *host* statement of
+the touched-block schedule the scalar-prefetch kernels consume:
+
+  * :func:`block_map` — the compact ``(m, n_blocks_max)`` touched-block-id map
+    (distinct live d-block ids first, then the inert sentinel ``n_d_blocks``,
+    which callers alias to an all-zero pad block of w);
+  * :func:`bucket_by_block` — entries sorted/bucketed by d-block with
+    per-block entry slices (:class:`BlockBuckets`), the reference layout the
+    bench uses to count blocks/FLOPs per schedule;
+  * :func:`row_block_counts` / :func:`minibatch_block_bound` — the static
+    ``n_blocks_max`` cap: any B sampled rows touch at most the sum of the B
+    largest per-row distinct-block counts, so the bound is sound for every
+    minibatch the training loop can draw;
+  * :func:`frequency_remap` — rank columns by document frequency so hot
+    columns share blocks. Real tf-idf text is Zipf-distributed; after the
+    remap a minibatch's entries concentrate in a handful of leading blocks,
+    which is what makes touched-block scheduling worth dispatching.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
-__all__ = ["CSR", "ELL", "EllPartitions", "partition_rows"]
+__all__ = [
+    "CSR", "ELL", "EllPartitions", "partition_rows",
+    "BlockBuckets", "DEFAULT_BUCKET_BLK_D", "block_map", "bucket_by_block",
+    "row_block_counts", "minibatch_block_bound", "frequency_remap",
+]
+
+# Default d-block width for touched-block schedules: the TPU lane minimum.
+# Fine blocks over-fetch the least per touched block — the opposite trade from
+# the sweep schedule, which wants coarse blocks to keep its grid short.
+DEFAULT_BUCKET_BLK_D = 128
 
 
 @dataclass
@@ -177,11 +206,16 @@ class EllPartitions:
     """Per-node stacked ELL planes for GADGET: node i's rows are
     ``cols[i], vals[i], y-padded`` with the first ``n_counts[i]`` valid.
     Produced by :func:`repro.data.svm_datasets.partition`; consumed by
-    ``gadget_train(..., n_counts=...)`` in place of a dense (m, n_i, d)."""
+    ``gadget_train(..., n_counts=...)`` in place of a dense (m, n_i, d).
+
+    ``row_block_counts`` (lazy, cached per blk_d) feeds the static
+    ``n_blocks_max`` grid bound of the scalar-prefetch kernel schedule — see
+    :func:`minibatch_block_bound`."""
 
     cols: np.ndarray  # (m, n_i, k_max) int32
     vals: np.ndarray  # (m, n_i, k_max) float32
     d: int            # feature dimension (planes don't carry it)
+    _block_counts: dict = field(default_factory=dict, repr=False, compare=False)
 
     @property
     def shape(self) -> tuple[int, int, int]:
@@ -191,6 +225,19 @@ class EllPartitions:
     @property
     def nbytes(self) -> int:
         return self.cols.nbytes + self.vals.nbytes
+
+    def row_block_counts(self, blk_d: int = DEFAULT_BUCKET_BLK_D) -> np.ndarray:
+        """(m, n_i) distinct-d-block counts per row, cached per blk_d."""
+        if blk_d not in self._block_counts:
+            self._block_counts[blk_d] = row_block_counts(self.cols, self.vals, blk_d)
+        return self._block_counts[blk_d]
+
+    def block_bound(self, batch_size: int, blk_d: int = DEFAULT_BUCKET_BLK_D) -> int:
+        """Static ``n_blocks_max`` cap for a batch_size-row minibatch drawn
+        from any node — sound for every draw the training loop can make."""
+        return minibatch_block_bound(self.cols, self.vals, batch_size, blk_d,
+                                     d=self.d,
+                                     counts=self.row_block_counts(blk_d))
 
 
 def partition_rows(n: int, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarray, int]:
@@ -217,3 +264,175 @@ def partition_rows(n: int, m: int, seed: int = 0) -> tuple[np.ndarray, np.ndarra
     for i in range(m):
         idx[i * n_i: i * n_i + counts[i]] = perm[offsets[i]: offsets[i] + counts[i]]
     return idx, counts, n_i
+
+
+# ---------------------------------------------------------------------------
+# Block-bucketed schedules (sweep-free sparse hot path)
+# ---------------------------------------------------------------------------
+
+
+def _entry_blocks(cols: np.ndarray, vals: np.ndarray, blk_d: int,
+                  sentinel: int) -> np.ndarray:
+    """Per-entry d-block id with pad entries (val == 0) mapped to sentinel."""
+    return np.where(vals != 0, cols // blk_d, sentinel)
+
+
+def row_block_counts(cols: np.ndarray, vals: np.ndarray, blk_d: int) -> np.ndarray:
+    """Distinct live d-blocks per row: ``(..., k)`` planes → ``(...,)`` int32.
+
+    Pad entries (val = 0) count nothing. One vectorized O(nnz log k) pass —
+    cheap enough to run eagerly on full-shape CCAT planes.
+    """
+    cols = np.asarray(cols)
+    if cols.shape[-1] == 0:
+        return np.zeros(cols.shape[:-1], np.int32)
+    blocks = np.sort(_entry_blocks(cols, np.asarray(vals), blk_d, -1), axis=-1)
+    live = blocks >= 0
+    first = live[..., :1]
+    changed = (blocks[..., 1:] != blocks[..., :-1]) & live[..., 1:]
+    return (first.sum(axis=-1) + changed.sum(axis=-1)).astype(np.int32)
+
+
+def minibatch_block_bound(cols: np.ndarray, vals: np.ndarray, batch_size: int,
+                          blk_d: int = DEFAULT_BUCKET_BLK_D, *,
+                          d: int | None = None,
+                          counts: np.ndarray | None = None) -> int:
+    """Sound static cap on distinct d-blocks any batch_size-row minibatch of
+    any node can touch: ``max_i ( sum of the batch_size largest per-row
+    distinct-block counts within node i )``, clamped to the structural limits
+    ``n_d_blocks`` and ``batch_size·k``. Repeated draws of the same row (the
+    sampler draws with replacement) only shrink the union, so the top-B sum
+    dominates every realizable minibatch. Always ≥ 1 so degenerate schedules
+    (all-pad minibatches, k = 0 planes) still grid-launch.
+    """
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals)
+    if counts is None:
+        counts = row_block_counts(cols, vals, blk_d)
+    counts = counts.reshape(len(counts), -1) if counts.ndim > 1 else counts[None, :]
+    B = min(batch_size, counts.shape[1])
+    top = -np.sort(-counts, axis=1)[:, :B]
+    bound = int(top.sum(axis=1).max()) if counts.size else 0
+    if d is None:
+        d = int(cols.max()) + 1 if cols.size else 1
+    n_d_blocks = -(-d // blk_d)
+    k = cols.shape[-1]
+    return max(1, min(bound, n_d_blocks, max(1, batch_size * k)))
+
+
+def block_map(cols: np.ndarray, vals: np.ndarray, blk_d: int, n_d_blocks: int,
+              n_blocks_max: int) -> np.ndarray:
+    """Compact touched-block-id map for stacked minibatch planes: ``(m, B, k)``
+    cols/vals → ``(m, n_blocks_max)`` int32, each row the node's distinct live
+    d-block ids ascending, then the inert sentinel ``n_d_blocks``. The host
+    twin of ``ops.ell_block_map`` (the trace-safe device version) — tests pin
+    them together. Raises if a node touches more than ``n_blocks_max`` blocks
+    (the cap from :func:`minibatch_block_bound` makes that unreachable)."""
+    cols = np.asarray(cols)
+    m = cols.shape[0]
+    blocks = _entry_blocks(cols.reshape(m, -1), np.asarray(vals).reshape(m, -1),
+                           blk_d, n_d_blocks)
+    out = np.full((m, n_blocks_max), n_d_blocks, np.int32)
+    for i in range(m):
+        live = np.unique(blocks[i])
+        live = live[live < n_d_blocks]
+        if len(live) > n_blocks_max:
+            raise ValueError(
+                f"node {i} touches {len(live)} blocks > n_blocks_max={n_blocks_max}")
+        out[i, :len(live)] = live
+    return out
+
+
+@dataclass
+class BlockBuckets:
+    """Entries of stacked ``(m, B, k)`` minibatch planes sorted by d-block,
+    with per-block entry slices: bucket j of node i holds entries
+    ``cols[i, starts[i, j]:starts[i, j+1]]`` — all in d-block
+    ``block_ids[i, j]``. Empty slots carry the sentinel ``n_d_blocks`` and an
+    empty slice; pad entries sort to the tail after the last live bucket
+    (inert-pad convention preserved: their (col=0, val=0) payload stays
+    self-masking). This is the bench/oracle layout — the kernels themselves
+    keep the planes unsorted and rely on the one-hot rebase to mask
+    out-of-block entries."""
+
+    block_ids: np.ndarray  # (m, n_blocks_max) int32, sentinel = n_d_blocks
+    starts: np.ndarray     # (m, n_blocks_max + 1) int64 slice offsets
+    cols: np.ndarray       # (m, B*k) int32 sorted by block id
+    vals: np.ndarray       # (m, B*k) float32 sorted with cols
+    blk_d: int
+    n_d_blocks: int
+
+    @property
+    def n_blocks_max(self) -> int:
+        return self.block_ids.shape[1]
+
+    def blocks_visited(self) -> np.ndarray:
+        """(m,) live buckets per node — the blocks a touched-block schedule
+        actually DMAs (sentinel slots alias one shared zero block)."""
+        return (self.block_ids < self.n_d_blocks).sum(axis=1).astype(np.int64)
+
+
+def bucket_by_block(cols: np.ndarray, vals: np.ndarray, blk_d: int, *,
+                    d: int | None = None,
+                    n_blocks_max: int | None = None) -> BlockBuckets:
+    """Sort/bucket stacked ``(m, B, k)`` minibatch planes by d-block."""
+    cols = np.asarray(cols, np.int32)
+    vals = np.asarray(vals, np.float32)
+    m = cols.shape[0]
+    if d is None:
+        d = int(cols.max()) + 1 if cols.size else 1
+    n_d_blocks = -(-d // blk_d)
+    flat_c, flat_v = cols.reshape(m, -1), vals.reshape(m, -1)
+    blocks = _entry_blocks(flat_c, flat_v, blk_d, n_d_blocks)
+    order = np.argsort(blocks, axis=1, kind="stable")
+    sorted_b = np.take_along_axis(blocks, order, axis=1)
+    if n_blocks_max is None:
+        n_blocks_max = max(1, row_like_max(sorted_b, n_d_blocks))
+    ids = np.full((m, n_blocks_max), n_d_blocks, np.int32)
+    starts = np.zeros((m, n_blocks_max + 1), np.int64)
+    for i in range(m):
+        live, first = np.unique(sorted_b[i], return_index=True)
+        keep = live < n_d_blocks
+        live, first = live[keep], first[keep]
+        if len(live) > n_blocks_max:
+            raise ValueError(
+                f"node {i} touches {len(live)} blocks > n_blocks_max={n_blocks_max}")
+        ids[i, :len(live)] = live
+        ends = np.append(first[1:], (sorted_b[i] < n_d_blocks).sum())
+        starts[i, :len(live)] = first
+        starts[i, len(live):] = ends[-1] if len(live) else 0
+        starts[i, 1:len(live) + 1] = ends
+    return BlockBuckets(ids, starts,
+                        np.take_along_axis(flat_c, order, axis=1),
+                        np.take_along_axis(flat_v, order, axis=1),
+                        blk_d, n_d_blocks)
+
+
+def row_like_max(sorted_blocks: np.ndarray, sentinel: int) -> int:
+    """Max distinct live blocks over the leading axis of block-sorted ids."""
+    live = sorted_blocks < sentinel
+    first = live[:, :1]
+    changed = (sorted_blocks[:, 1:] != sorted_blocks[:, :-1]) & live[:, 1:]
+    per = first.sum(axis=1) + changed.sum(axis=1)
+    return int(per.max()) if per.size else 0
+
+
+def frequency_remap(cols: np.ndarray, vals: np.ndarray, d: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Relabel columns by descending document frequency (ties by old id).
+
+    Returns ``(new_cols, perm)`` where ``perm[new] = old`` — i.e. a weight
+    vector learned in remapped space maps back as ``w_old = w_new[inv]`` with
+    ``inv = argsort(perm)``. A pure relabeling: margins, objectives and
+    consensus are unchanged up to this permutation. Hot columns become
+    low-rank and therefore share leading d-blocks — the preprocessing that
+    turns Zipf-distributed text into few-touched-block minibatches (real
+    LibSVM ids carry no such locality)."""
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    freq = np.bincount(cols.reshape(-1)[vals.reshape(-1) != 0], minlength=d)
+    perm = np.argsort(-freq, kind="stable").astype(np.int64)   # perm[new] = old
+    rank = np.empty(d, np.int64)
+    rank[perm] = np.arange(d)
+    # pad entries stay canonical (col=0, val=0) rather than inheriting rank[0]
+    return np.where(vals != 0, rank[cols], 0).astype(np.int32), perm

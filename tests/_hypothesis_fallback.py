@@ -3,7 +3,7 @@
 CI installs the real hypothesis via the `[test]` extra; bare containers (no
 network) fall back to this shim so the full tier-1 suite still collects and
 runs. Only the surface this repo uses is implemented: ``given``, ``settings``
-and the ``integers`` / ``sampled_from`` strategies. Examples are drawn from a
+and the ``integers`` / ``sampled_from`` / ``booleans`` strategies. Examples are drawn from a
 PRNG seeded by the test's qualified name, so runs are deterministic — no
 shrinking, no example database.
 
@@ -39,9 +39,14 @@ def _sampled_from(elements) -> _Strategy:
     return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
 
 
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
 
 
 def given(*strats: _Strategy):
