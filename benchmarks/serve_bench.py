@@ -1,0 +1,236 @@
+"""Serving benchmark: anytime snapshot → checkpoint → bucketed sparse scoring.
+
+Exercises the whole `repro.serve` pipeline at the paper's CCAT signature
+(d = 47,236, 0.16% nonzeros, Zipf column profile) and *asserts* the
+subsystem's acceptance numbers on every run:
+
+  * **Parity** — the same query batch scored three ways must agree: the dense
+    fused kernel vs the query-side touched-block sparse kernel on identical
+    f32 weights (≤ 1e-5), and the int8-export serving path vs the jnp oracle
+    on its dequantized weights (≤ 1e-5). Quantization *drift* vs the f32
+    model is reported (it is bounded by the int8 scale, orders of magnitude
+    above 1e-5 — the honest number, not an assertion).
+  * **Compile bound** — a fresh engine draining ragged traffic through the
+    bucketed micro-batcher compiles at most one executable per bucket
+    (measured ``distinct_shapes`` ≤ len(buckets)).
+  * **Touched blocks** — sparse scoring visits ≤ 1/5 of the w d-blocks the
+    dense sweep equivalent walks at the quick shape (the serving twin of
+    sparse_bench's training-side ratio; rides the same Zipf locality).
+
+Latency (p50/p99 per request through the batcher, queue + compute) and
+throughput are measured over the drained traffic and recorded in
+``BENCH_serve.json``. On this container Pallas interprets on CPU, so absolute
+numbers are not TPU numbers — the structural leaves (parity, compile count,
+block ratio, request accounting) are the regression surface.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro import serve
+from repro.core.gadget import GadgetConfig, gadget_train
+from repro.data.svm_datasets import make_dataset, partition
+from repro.serve import snapshot as snap_mod
+
+PARITY_TOL = 1e-5
+BLOCKS_RATIO_BOUND = 0.2  # sparse predict must skip ≥ 4/5 of w at quick shape
+
+
+def _train_snapshot(ds, n_nodes: int, n_iters: int):
+    Pe, yp, nc = partition(ds.X_train, ds.y_train, n_nodes, seed=0)
+    cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=4,
+                       topology="exponential", max_iters=n_iters,
+                       check_every=n_iters, epsilon=0.0)
+    t0 = time.time()
+    res = gadget_train(Pe, jnp.asarray(yp), cfg,
+                       n_counts=nc, snapshot_every=max(1, n_iters // 4))
+    t_train = time.time() - t0
+    return res, Pe, t_train
+
+
+def bench_parity(srv, srv_q, snap, ell_test, n_rows: int, verbose: bool) -> dict:
+    """Dense vs sparse-prefetch vs quantized on one CCAT-shaped batch."""
+    cols, vals = ell_test.cols[:n_rows], ell_test.vals[:n_rows]
+    Xq = ell_test.take_rows(np.arange(n_rows)).to_dense()  # (n_rows, d) ~6 MB
+
+    s_dense, l_dense = srv.score(Xq)
+    s_sparse, l_sparse = srv.score_sparse(cols, vals)
+    diff_ds = float(np.max(np.abs(s_dense - s_sparse)))
+
+    w_deq = snap_mod.dequantize_int8(*snap_mod.quantize_int8(snap.w))
+    s_q, _ = srv_q.score(Xq)
+    diff_q_oracle = float(np.max(np.abs(s_q - Xq @ w_deq)))
+    drift = float(np.max(np.abs(s_q - s_dense)))
+    label_agreement = float(np.mean(l_dense == np.where(s_q >= 0, 1.0, -1.0)))
+
+    assert diff_ds <= PARITY_TOL, (
+        f"dense vs sparse-prefetch scores diff {diff_ds:.2e} > {PARITY_TOL}")
+    assert diff_q_oracle <= PARITY_TOL, (
+        f"int8 serving path vs dequantized oracle diff {diff_q_oracle:.2e} > {PARITY_TOL}")
+    assert np.array_equal(l_dense, l_sparse)
+
+    if verbose:
+        emit(f"serve/parity(B={n_rows})", 0.0,
+             f"dense_vs_sparse={diff_ds:.1e};quant_vs_oracle={diff_q_oracle:.1e}"
+             f";quant_drift={drift:.1e};label_agree={label_agreement:.3f}")
+    return {
+        "batch_rows": n_rows,
+        "dense_vs_sparse_max_abs_diff": diff_ds,
+        "quantized_vs_oracle_max_abs_diff": diff_q_oracle,
+        "quantized_drift_vs_f32": drift,
+        "quantized_label_agreement": label_agreement,
+        "within_tolerance": 1,
+    }
+
+
+def bench_batcher(snap, Pe, ell_test, rows: int, n_queries: int,
+                  verbose: bool) -> dict:
+    """Ragged traffic through the bucketed batcher on a fresh engine:
+    latency/throughput accounting + the compile-count and block-ratio
+    assertions (fresh engine so ``distinct_shapes`` counts only this path)."""
+    srv = serve.SvmServer.from_snapshot(snap, use_kernels=True)
+    k_max = ell_test.k_max
+    buckets = serve.calibrate_buckets(
+        serve.bucket_ladder(k_max, rows=rows, min_k=max(8, k_max // 4), d=snap.d),
+        Pe.cols.reshape(-1, Pe.cols.shape[-1])[:2000],
+        Pe.vals.reshape(-1, Pe.vals.shape[-1])[:2000], snap.d)
+    mb = serve.MicroBatcher(buckets)
+
+    # warm each bucket's executable before the timed traffic so latency
+    # percentiles measure steady-state serving, not first-batch compiles
+    # (the compile-count assertion below still covers exactly these shapes)
+    for b in buckets:
+        srv.score_sparse(np.zeros((b.rows, b.k), np.int32),
+                         np.zeros((b.rows, b.k), np.float32),
+                         n_blocks_max=b.n_blocks_max)
+    warm = srv.stats()
+    blocks_warmup = warm["blocks_visited"]
+    dense_warmup = warm["dense_block_equivalent"]
+
+    row_nnz = ell_test.row_nnz()
+    rids, scored = [], {}
+    for i in range(n_queries):
+        # ragged on purpose: truncate some queries so several rungs get traffic
+        nnz = int(row_nnz[i]) if i % 3 else max(1, int(row_nnz[i]) // 4)
+        live = ell_test.vals[i] != 0
+        c, v = ell_test.cols[i][live][:nnz], ell_test.vals[i][live][:nnz]
+        rids.append(mb.submit(c, v))
+        if (i + 1) % max(1, rows * 2) == 0 or i == n_queries - 1:
+            scored.update(mb.drain(srv.scorer_for()))
+    assert not mb.pending
+    assert set(scored) == set(rids)  # every submitted request came back
+
+    st_mb = mb.stats()
+    st_srv = srv.stats()
+    assert st_srv["distinct_shapes"] <= len(buckets), (
+        f"batcher compiled {st_srv['distinct_shapes']} shapes > "
+        f"{len(buckets)} buckets")
+    # block accounting over the measured traffic only (warm-up batches are
+    # all-pad: zero live blocks but a full dense-sweep denominator each)
+    blocks_visited = st_srv["blocks_visited"] - blocks_warmup
+    dense_equiv = st_srv["dense_block_equivalent"] - dense_warmup
+    ratio = blocks_visited / dense_equiv
+    assert ratio <= BLOCKS_RATIO_BOUND, (
+        f"sparse predict visited {ratio:.3f} of w blocks > {BLOCKS_RATIO_BOUND}")
+
+    if verbose:
+        emit(f"serve/batcher(rows={rows},buckets={len(buckets)})",
+             st_mb["latency_p50_ms"] * 1e3,
+             f"p50={st_mb['latency_p50_ms']:.1f}ms;p99={st_mb['latency_p99_ms']:.1f}ms"
+             f";qps={st_mb['queries_per_sec']:.1f}"
+             f";shapes={st_srv['distinct_shapes']}/{len(buckets)}"
+             f";blocks_ratio={ratio:.3f}")
+    return {
+        "rows_per_batch": rows,
+        "n_buckets": len(buckets),
+        "bucket_ks": [b.k for b in buckets],
+        "bucket_block_caps": [b.n_blocks_max for b in buckets],
+        "distinct_shapes": st_srv["distinct_shapes"],
+        "requests": st_mb["requests"],
+        "batches": st_mb["batches"],
+        "pad_fraction": round(st_mb["pad_fraction"], 4),
+        "latency": {"us_per_call": {
+            "p50": st_mb["latency_p50_ms"] * 1e3,
+            "p99": st_mb["latency_p99_ms"] * 1e3,
+        }},
+        "throughput": {"queries_per_sec": st_mb["queries_per_sec"]},
+        "blocks": {
+            "visited": blocks_visited,
+            "dense_equivalent": dense_equiv,
+            "ratio": round(ratio, 4),
+            "asserted_bound": BLOCKS_RATIO_BOUND,
+        },
+    }
+
+
+def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
+        n_iters: int | None = None, json_path: str | None = None,
+        verbose: bool = True) -> dict:
+    if scale is None:
+        scale = 0.002 if quick else 0.01
+    if n_iters is None:
+        n_iters = 8 if quick else 40
+    rows = 4 if quick else 8
+    n_queries = 48 if quick else 256
+
+    t0 = time.time()
+    ds = make_dataset("ccat", scale=scale, seed=0, sparse=True)
+    t_gen = time.time() - t0
+    res, Pe, t_train = _train_snapshot(ds, n_nodes, n_iters)
+    snaps = serve.snapshots_from(res)
+    snap = snaps[-1]
+
+    with tempfile.TemporaryDirectory() as td:
+        serve.to_checkpoint(snap, td + "/f32", lam=ds.lam)
+        serve.to_checkpoint(snap, td + "/int8", quantize="int8", lam=ds.lam)
+        srv = serve.SvmServer.load(td + "/f32", use_kernels=True)
+        srv_q = serve.SvmServer.load(td + "/int8", use_kernels=True)
+        # restore fidelity: the f32 round-trip serves the exact snapshot
+        assert np.array_equal(srv.W, np.asarray(snap.w, np.float32))
+
+        out = {
+            "quick": quick,
+            "scale": scale,
+            "runner": runner_fingerprint(),
+            "model": {
+                "d": snap.d, "k_max": ds.X_train.k_max,
+                "iteration": snap.iteration,
+                "n_snapshots": len(snaps),
+                "objective_finite": int(np.isfinite(snap.objective)),
+            },
+            "gen": {"seconds": t_gen},
+            "train": {"seconds": t_train},
+            "parity": bench_parity(srv, srv_q, snap, ds.X_test,
+                                   min(32, ds.X_test.shape[0]), verbose),
+            "batcher": bench_batcher(snap, Pe, ds.X_test, rows, n_queries,
+                                     verbose),
+        }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (tiny row count, same d/sparsity)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="CCAT row-count scale")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, scale=args.scale, n_nodes=args.nodes,
+        n_iters=args.iters, json_path=args.json_path)

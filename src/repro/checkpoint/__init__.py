@@ -1,2 +1,4 @@
-"""Checkpoint substrate: pytree <-> .npz + JSON treedef, with rotation."""
-from repro.checkpoint.io import latest_step, restore, save  # noqa: F401
+"""Checkpoint substrate: pytree <-> .npz + versioned JSON manifest, with
+rotation and caller metadata (``extra``) for model exports."""
+from repro.checkpoint.io import (latest_step, read_manifest, restore,  # noqa: F401
+                                 save)

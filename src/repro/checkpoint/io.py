@@ -1,9 +1,14 @@
 """Checkpointing: flatten any pytree of arrays to an .npz plus a JSON treedef.
 
-No orbax in the container; this covers the trainer's needs — atomic writes
-(tmp + rename), step-numbered directories, keep-last-k rotation, and dtype/
-shape-faithful restore onto the caller's tree structure (so restored arrays
-can be re-sharded by the caller's jit in/out shardings).
+No orbax in the container; this covers the trainer's and the serving
+subsystem's needs — atomic writes (tmp + rename), step-numbered directories,
+keep-last-k rotation, a versioned manifest with caller ``extra`` metadata
+(``repro.serve.snapshot`` records model kind / quantization there), and
+dtype/shape-faithful restore onto the caller's tree structure (so restored
+arrays can be re-sharded by the caller's jit in/out shardings). Quantized
+int8 leaves round-trip dtype-exact — ``restore`` validates dtype as well as
+shape, and a structure mismatch fails with the saved-vs-expected treedefs
+spelled out instead of leaking a leaf-order scramble to the caller.
 """
 from __future__ import annotations
 
@@ -18,28 +23,43 @@ import numpy as np
 
 Pytree = Any
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "read_manifest", "MANIFEST_VERSION"]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+
+# Bumped when the on-disk layout changes shape. Version 1: arrays.npz with
+# leaf_<i> keys + this manifest schema (step/treedef/n_leaves/dtypes/shapes,
+# optional caller "extra"). Pre-versioned checkpoints read as version 0.
+MANIFEST_VERSION = 1
 
 
 def _step_dir(root: str, step: int) -> str:
     return os.path.join(root, f"step_{step:09d}")
 
 
-def save(root: str, step: int, tree: Pytree, keep: int = 3) -> str:
-    """Write ``tree`` under root/step_XXXXXXXXX atomically; rotate old steps."""
+def save(root: str, step: int, tree: Pytree, keep: int = 3,
+         extra: dict | None = None) -> str:
+    """Write ``tree`` under root/step_XXXXXXXXX atomically; rotate old steps.
+
+    ``extra`` (optional, JSON-serializable) is stored verbatim under the
+    manifest's ``"extra"`` key — caller-owned metadata (model kind, export
+    quantization, training iteration) readable via :func:`read_manifest`
+    without touching the arrays.
+    """
     os.makedirs(root, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
     manifest = {
+        "version": MANIFEST_VERSION,
         "step": step,
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "dtypes": [str(a.dtype) for a in arrays.values()],
         "shapes": [list(a.shape) for a in arrays.values()],
     }
+    if extra is not None:
+        manifest["extra"] = extra
     tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_ckpt_")
     try:
         np.savez(os.path.join(tmp, _ARRAYS), **arrays)
@@ -80,19 +100,62 @@ def latest_step(root: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore(root: str, like: Pytree, step: int | None = None) -> Pytree:
-    """Restore arrays into the structure of ``like`` (shape/dtype validated)."""
+def _resolve_step(root: str, step: int | None) -> int:
     if step is None:
         step = latest_step(root)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {root}")
+    return step
+
+
+def read_manifest(root: str, step: int | None = None) -> dict:
+    """The checkpoint's manifest dict (version, treedef, dtypes/shapes, caller
+    ``extra``) without loading any arrays — how serving discovers a model's
+    layout before building the ``like`` tree for :func:`restore`."""
+    step = _resolve_step(root, step)
+    with open(os.path.join(_step_dir(root, step), _MANIFEST)) as fh:
+        manifest = json.load(fh)
+    manifest.setdefault("version", 0)  # pre-versioned checkpoints
+    return manifest
+
+
+def restore(root: str, like: Pytree, step: int | None = None) -> Pytree:
+    """Restore arrays into the structure of ``like``.
+
+    Structure, shape and dtype are all validated *before* unflattening, each
+    with an error naming the checkpoint side and the expected side — a
+    checkpoint written with a different tree structure (or a leaf that was
+    quantized on one side only) fails loudly instead of handing back leaves
+    in a scrambled order or silently casting. Dtypes round-trip exactly
+    (``np.savez`` preserves them), so int8-quantized exports restore as int8.
+    """
+    step = _resolve_step(root, step)
     path = _step_dir(root, step)
+    manifest = read_manifest(root, step)
     with np.load(os.path.join(path, _ARRAYS)) as z:
         arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]
     leaves, treedef = jax.tree.flatten(like)
+    saved_treedef = manifest.get("treedef")
+    if manifest.get("n_leaves", len(arrays)) != len(arrays):
+        raise ValueError(
+            f"checkpoint at {path} is corrupt: manifest records "
+            f"{manifest['n_leaves']} leaves but {_ARRAYS} holds {len(arrays)}")
     if len(leaves) != len(arrays):
-        raise ValueError(f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}")
+        raise ValueError(
+            f"checkpoint structure mismatch: saved {len(arrays)} leaves "
+            f"(treedef {saved_treedef}), caller expects {len(leaves)} "
+            f"(treedef {treedef})")
+    if saved_treedef is not None and saved_treedef != str(treedef):
+        raise ValueError(
+            "checkpoint structure mismatch: saved treedef\n  "
+            f"{saved_treedef}\ndoes not match the caller's ``like`` treedef\n  "
+            f"{treedef}")
     for i, (a, l) in enumerate(zip(arrays, leaves)):
         if tuple(a.shape) != tuple(np.shape(l)):
             raise ValueError(f"leaf {i}: checkpoint shape {a.shape} != expected {np.shape(l)}")
+        want_dtype = getattr(l, "dtype", None)
+        if want_dtype is not None and a.dtype != want_dtype:
+            raise ValueError(
+                f"leaf {i}: checkpoint dtype {a.dtype} != expected {want_dtype} "
+                "(quantized exports must be restored into a matching-dtype tree)")
     return jax.tree.unflatten(treedef, arrays)

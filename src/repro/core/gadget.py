@@ -78,6 +78,7 @@ from repro.kernels.hinge_subgrad import ref as hinge_ref
 __all__ = [
     "GadgetConfig",
     "GadgetResult",
+    "SnapshotRing",
     "gadget_train",
     "gadget_train_reference",
     "make_gadget_mesh_step",
@@ -113,6 +114,29 @@ class GadgetConfig(NamedTuple):
     sparse_schedule: str = "auto"
 
 
+class SnapshotRing(NamedTuple):
+    """Anytime-export ring: the last ``slots`` consensus snapshots taken every
+    ``every`` iterations *inside* the jitted training loop, plus the final
+    iterate. Raw device-layout buffers — ``repro.serve.snapshot`` decodes them
+    into ordered :class:`~repro.serve.snapshot.Snapshot` records; snapshot j
+    (1-based, at iteration j·every) lives in slot ``(j - 1) % slots`` and
+    ``count`` is the total number taken (> slots ⇒ the ring wrapped and only
+    the latest ``slots`` survive)."""
+
+    every: int
+    W: np.ndarray             # (slots, d) consensus weights per snapshot
+    iterations: np.ndarray    # (slots,) int32 iteration index (0 = never used)
+    objectives: np.ndarray    # (slots,) primal objective of each snapshot
+    count: int                # snapshots taken in total (may exceed slots)
+    final_w: np.ndarray       # (d,) consensus at termination
+    final_iteration: int
+    final_objective: float
+
+    @property
+    def slots(self) -> int:
+        return self.W.shape[0]
+
+
 class GadgetResult(NamedTuple):
     W: jax.Array            # (m, d) final per-node weights
     w_consensus: jax.Array  # (d,) data-weighted network average
@@ -124,6 +148,7 @@ class GadgetResult(NamedTuple):
     W_avg: jax.Array | None = None  # (m, d) per-node iterate averages w̄_i
     # (Pegasos' Theorem-2-style guarantee bounds the averaged iterate, not the
     # last one — same reason pegasos_train exposes w_avg)
+    snapshots: SnapshotRing | None = None  # anytime export (snapshot_every=K)
 
 
 # Host↔device traffic instrumentation, read by benchmarks/gossip_device_bench.py:
@@ -333,10 +358,17 @@ def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
 @functools.lru_cache(maxsize=32)
 def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                        n_chunks: int, chunk: int,
-                       sparse_block_bound: int | None = None):
+                       sparse_block_bound: int | None = None,
+                       snap_every: int = 0, snap_slots: int = 0):
     """Jitted whole-training function: while_loop over ε-check chunks, scan
     over iterations inside each chunk, donated weight buffers, on-device
-    objective/ε traces. Returns arrays only — the caller syncs once."""
+    objective/ε traces. Returns arrays only — the caller syncs once.
+
+    ``snap_every`` > 0 additionally threads the anytime-export ring through
+    the loop: every K-th iteration writes (consensus w, iteration, objective)
+    into slot ``count % snap_slots`` under a ``lax.cond`` — non-snapshot
+    iterations pay nothing, and the whole ring stays on device until the
+    single post-termination sync."""
 
     def train(X, y, B_stack, data_key, mix_key, n_counts, W0, W_sum0):
         y_flat = y.reshape(m * n_i)
@@ -357,8 +389,11 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                 return obj.primal_objective_masked(
                     w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
 
+        def consensus_of(W):
+            return jnp.sum(W * n_counts[:, None], axis=0) / total_n
+
         def step(carry, _):
-            W, W_sum, t = carry
+            W, W_sum, t, snaps = carry
             active = t <= cfg.max_iters
             W, W_sum = jax.lax.cond(
                 active,
@@ -368,30 +403,49 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                 lambda a: (a[0], a[1]),
                 (W, W_sum, t),
             )
-            return (W, W_sum, jnp.where(active, t + 1, t)), None
+            if snap_every:
+                def do_snap(op):
+                    (sw, si, so, sc), W_now = op
+                    w_cons = consensus_of(W_now)
+                    slot = sc % snap_slots
+                    return (sw.at[slot].set(w_cons), si.at[slot].set(t),
+                            so.at[slot].set(objective_of(w_cons)), sc + 1)
+
+                snaps = jax.lax.cond(active & (t % snap_every == 0),
+                                     do_snap, lambda op: op[0], (snaps, W))
+            return (W, W_sum, jnp.where(active, t + 1, t), snaps), None
 
         def chunk_body(carry):
-            W, W_sum, t, ci, _, obj_tr, it_tr, eps_tr = carry
+            W, W_sum, t, snaps, ci, _, obj_tr, it_tr, eps_tr = carry
             W_prev = W
-            (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t), None, length=chunk)
+            (W, W_sum, t, snaps), _ = jax.lax.scan(
+                step, (W, W_sum, t, snaps), None, length=chunk)
             eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
-            w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
+            w_cons = consensus_of(W)
             obj_tr = obj_tr.at[ci].set(objective_of(w_cons))
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
-            return W, W_sum, t, ci + 1, eps, obj_tr, it_tr, eps_tr
+            return W, W_sum, t, snaps, ci + 1, eps, obj_tr, it_tr, eps_tr
 
         def cond(carry):
-            _, _, t, ci, eps, _, _, _ = carry
+            _, _, t, _, ci, eps, _, _, _ = carry
             return (ci < n_chunks) & (eps >= cfg.epsilon) & (t <= cfg.max_iters)
 
-        init = (W0, W_sum0, jnp.int32(1), jnp.int32(0), jnp.float32(jnp.inf),
+        snaps0 = (jnp.zeros((snap_slots, d), jnp.float32),
+                  jnp.zeros((snap_slots,), jnp.int32),
+                  jnp.full((snap_slots,), jnp.nan, jnp.float32),
+                  jnp.int32(0))
+        init = (W0, W_sum0, jnp.int32(1), snaps0, jnp.int32(0),
+                jnp.float32(jnp.inf),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.zeros((n_chunks,), jnp.int32),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32))
-        W, W_sum, t, ci, eps, obj_tr, it_tr, eps_tr = jax.lax.while_loop(cond, chunk_body, init)
-        w_cons = jnp.sum(W * n_counts[:, None], axis=0) / total_n
-        return W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr
+        (W, W_sum, t, snaps, ci, eps,
+         obj_tr, it_tr, eps_tr) = jax.lax.while_loop(cond, chunk_body, init)
+        w_cons = consensus_of(W)
+        final_obj = objective_of(w_cons) if snap_every else jnp.float32(jnp.nan)
+        return (W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr,
+                snaps, final_obj)
 
     # Buffer donation is a no-op (with a warning) on CPU — only request it
     # where the runtime honors it.
@@ -404,8 +458,24 @@ def _validate_topology(cfg: GadgetConfig) -> None:
         raise ValueError(f"unknown topology {cfg.topology!r}")
 
 
+# Default anytime-export ring capacity: enough history for serve-side A/B
+# (previous vs current snapshot) without holding every iterate.
+DEFAULT_SNAPSHOT_SLOTS = 8
+
+
+def _validate_snapshotting(snapshot_every, snapshot_slots) -> int:
+    if snapshot_every is None:
+        return 0
+    if int(snapshot_every) < 1:
+        raise ValueError(f"snapshot_every must be >= 1, got {snapshot_every}")
+    if int(snapshot_slots) < 1:
+        raise ValueError(f"snapshot_slots must be >= 1, got {snapshot_slots}")
+    return int(snapshot_every)
+
+
 def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Array,
-                          n_counts=None):
+                          n_counts=None, snapshot_every=None,
+                          snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS):
     """Build the exact (jitted train fn, argument tuple) pair `gadget_train`
     executes: resolved config, one stacked-matrix upload, PRNG streams, fresh
     (donatable) weight buffers. The transfer-guard benchmark calls this too,
@@ -413,6 +483,7 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     Requires cfg.max_iters > 0."""
     X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     cfg = _resolve_kernels(cfg)
+    snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)
     n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
     sparse_block_bound = _sparse_block_bound(cfg, X_parts, X)
@@ -430,7 +501,8 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     chunk = min(cfg.check_every, cfg.max_iters)
     n_chunks = -(-cfg.max_iters // chunk)
     train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk,
-                               sparse_block_bound)
+                               sparse_block_bound, snap_every,
+                               int(snapshot_slots) if snap_every else 0)
     args = (X, jnp.asarray(y_parts), B_stack, data_key, mix_key,
             n_counts, jnp.zeros((m, d), dtype), jnp.zeros((m, d), dtype))
     return train, args
@@ -442,6 +514,8 @@ def gadget_train(
     cfg: GadgetConfig = GadgetConfig(),
     *,
     n_counts=None,
+    snapshot_every: int | None = None,
+    snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS,
 ) -> GadgetResult:
     """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d) dense, or a
     ``repro.sparse.EllPartitions`` of stacked padded-ELL planes (sparse local
@@ -456,25 +530,57 @@ def gadget_train(
     n_counts[i]) must carry y=0; they are never sampled, carry no Push-Sum
     mass, and are excluded from the consensus weighting and objective trace.
     ``repro.data.svm_datasets.partition`` returns exactly these counts.
+
+    ``snapshot_every=K`` (optional): anytime export — every K-th iteration
+    records ``(iteration, consensus w, primal objective)`` into an on-device
+    ring of ``snapshot_slots`` entries riding the jitted while_loop (GADGET is
+    usable at every iteration; this is the serving tap). The ring plus the
+    final iterate come back as ``result.snapshots`` (:class:`SnapshotRing`) in
+    the same single post-termination sync; decode with
+    ``repro.serve.snapshot.snapshots_from``. K > the realized iteration count
+    simply yields the final snapshot alone.
     """
     _validate_topology(cfg)
 
     empty = np.zeros((0,), np.float32)
     if cfg.max_iters <= 0:  # zero-iteration call: return the initial state
+        snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)
         _, m, n_i, d, dtype = _unpack_partitions(X_parts)
+        ring = None
+        if snap_every:
+            # empty ring, initial state as the final iterate: w = 0 scores
+            # every margin 0, so the masked primal objective is exactly 1
+            ring = SnapshotRing(
+                every=snap_every,
+                W=np.zeros((int(snapshot_slots), d), np.float32),
+                iterations=np.zeros((int(snapshot_slots),), np.int32),
+                objectives=np.full((int(snapshot_slots),), np.nan, np.float32),
+                count=0, final_w=np.zeros((d,), np.float32),
+                final_iteration=0, final_objective=1.0)
         return GadgetResult(W=jnp.zeros((m, d), dtype),
                             w_consensus=jnp.zeros((d,), dtype),
                             iters=0, epsilon=float("inf"),
                             objective_trace=empty, time_trace=empty.astype(np.int32),
-                            eps_trace=empty, W_avg=jnp.zeros((m, d), dtype))
+                            eps_trace=empty, W_avg=jnp.zeros((m, d), dtype),
+                            snapshots=ring)
 
-    train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts)
+    train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts,
+                                        snapshot_every, snapshot_slots)
     out = train(*args)
-    W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr = jax.block_until_ready(out)
+    (W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr,
+     snaps, final_obj) = jax.block_until_ready(out)
     transfer_stats["host_syncs"] += 1  # single post-termination sync
 
     n_done = int(n_done)
     iters = int(iters)
+    ring = None
+    if snapshot_every:
+        sw, si, so, sc = snaps
+        ring = SnapshotRing(every=int(snapshot_every), W=np.asarray(sw),
+                            iterations=np.asarray(si), objectives=np.asarray(so),
+                            count=int(sc), final_w=np.asarray(w_cons),
+                            final_iteration=iters,
+                            final_objective=float(final_obj))
     return GadgetResult(
         W=W,
         w_consensus=w_cons,
@@ -484,6 +590,7 @@ def gadget_train(
         time_trace=np.asarray(it_tr)[:n_done],
         eps_trace=np.asarray(eps_tr)[:n_done],
         W_avg=W_sum / max(iters, 1),
+        snapshots=ring,
     )
 
 
@@ -521,6 +628,8 @@ def gadget_train_reference(
     cfg: GadgetConfig = GadgetConfig(),
     *,
     n_counts=None,
+    snapshot_every: int | None = None,
+    snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS,
 ) -> GadgetResult:
     """Seed-style host chunk loop on the same PRNG streams as `gadget_train`:
     mixing matrices cross the host boundary every iteration (deterministic
@@ -528,6 +637,10 @@ def gadget_train_reference(
     runs *unfused* (two kernels per node, R sequential Push-Sum rounds) —
     it is the seed-semantics parity oracle the fused device path is accepted
     against, and the baseline for the transfer-counter benchmark.
+
+    ``snapshot_every=K`` mirrors the device loop's anytime-export ring on the
+    host, slot for slot — the reference trace the device snapshots are
+    accepted against (tests/test_serve.py sweeps K).
     """
     X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     _validate_topology(cfg)
@@ -556,6 +669,12 @@ def gadget_train_reference(
                 w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
     one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d,
                                     _sparse_block_bound(cfg, X_parts, X))
+    snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)
+    if snap_every:  # host twin of the device ring, slot for slot
+        snap_w = np.zeros((snapshot_slots, d), np.float32)
+        snap_it = np.zeros((snapshot_slots,), np.int32)
+        snap_obj = np.full((snapshot_slots,), np.nan, np.float32)
+        snap_count = 0
 
     W = jnp.zeros((m, d), dtype)
     W_sum = jnp.zeros((m, d), dtype)
@@ -574,6 +693,13 @@ def gadget_train_reference(
             else:
                 Bs = None  # drawn in-step, same as the device path
             W, W_sum = one_iter(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs)
+            if snap_every and (it + s + 1) % snap_every == 0:
+                w_snap = jnp.sum(W * n_counts[:, None], axis=0) / total_n
+                slot = snap_count % snapshot_slots
+                snap_w[slot] = np.asarray(w_snap)
+                snap_it[slot] = it + s + 1
+                snap_obj[slot] = float(objective_of(w_snap))
+                snap_count += 1
         it += chunk
         eps = float(jnp.max(jnp.linalg.norm(W - W_prev, axis=1)))  # blocking sync
         transfer_stats["host_syncs"] += 1
@@ -586,6 +712,12 @@ def gadget_train_reference(
             break
 
     w_cons = jnp.sum(W * n_counts[:, None], axis=0) / jnp.sum(n_counts)
+    ring = None
+    if snap_every:
+        ring = SnapshotRing(every=snap_every, W=snap_w, iterations=snap_it,
+                            objectives=snap_obj, count=snap_count,
+                            final_w=np.asarray(w_cons), final_iteration=it,
+                            final_objective=float(objective_of(w_cons)))
     return GadgetResult(
         W=W,
         w_consensus=w_cons,
@@ -595,6 +727,7 @@ def gadget_train_reference(
         time_trace=np.asarray(time_trace),
         eps_trace=np.asarray(eps_trace),
         W_avg=W_sum / max(it, 1),
+        snapshots=ring,
     )
 
 

@@ -6,6 +6,12 @@ vector trained on (x, +1 if y==c else -1); prediction is argmax_c <w_c, x>.
 All classes train in ONE run — the per-node weight matrix W (m, C, d) rides
 through the same local Pegasos half-step and Push-Sum rounds (Push-Vector
 over the stacked class dimension), so gossip cost is shared across classes.
+
+Prediction dispatches the serving-side fused scores+argmax kernel
+(``hinge_subgrad.ops.dense_predict`` — one launch for margins AND argmax),
+the same path ``repro.serve.SvmServer`` scores multiclass checkpoints with;
+the pure-jnp argmax stays available as ``predict_multiclass(use_kernels=False)``
+and remains the oracle the kernel is tested against.
 """
 from __future__ import annotations
 
@@ -17,6 +23,7 @@ import numpy as np
 
 from repro.core.gadget import GadgetConfig
 from repro.core.push_sum import PushSumSim
+from repro.kernels.hinge_subgrad import ops as hinge_ops
 
 __all__ = ["MulticlassResult", "gadget_train_multiclass", "predict_multiclass"]
 
@@ -94,5 +101,14 @@ def gadget_train_multiclass(X_parts: jax.Array, y_parts: jax.Array, n_classes: i
     return MulticlassResult(W=W, w_consensus=jnp.mean(W, axis=0), iters=it)
 
 
-def predict_multiclass(w_consensus: jax.Array, X: jax.Array) -> jax.Array:
-    return jnp.argmax(X @ w_consensus.T, axis=-1)
+def predict_multiclass(w_consensus: jax.Array, X: jax.Array, *,
+                       use_kernels: bool | None = None) -> jax.Array:
+    """argmax_c <w_c, x> per row. ``use_kernels=None`` follows the package
+    convention (fused kernel wherever it compiles natively, interpret-mode
+    kernel when forced via True, jnp oracle via False)."""
+    if use_kernels is None:
+        use_kernels = not hinge_ops.default_interpret()
+    if use_kernels:
+        _, labels = hinge_ops.dense_predict(w_consensus, X)
+        return labels
+    return jnp.argmax(X @ w_consensus.T, axis=-1).astype(jnp.int32)

@@ -2,6 +2,8 @@
 
 Dense kernels in ``hinge_subgrad.py`` (blocked margins / grad_update and the
 fused ``fleet_half_step``), padded-ELL sparse kernels in ``sparse.py``
-(gather-dot margins, scatter-add grad), jnp oracles in ``ref.py``, and the
-padding/dispatch layer in ``ops.py``.
+(gather-dot margins, scatter-add grad), the serving-side predict family in
+``predict.py`` (fused dense scores+argmax and the query-side touched-block
+ELL predict), jnp oracles in ``ref.py``, and the padding/dispatch layer in
+``ops.py``.
 """

@@ -20,11 +20,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.hinge_subgrad import hinge_subgrad as K
+from repro.kernels.hinge_subgrad import predict as P
 from repro.kernels.hinge_subgrad import sparse as S
 from repro.sparse.formats import DEFAULT_BUCKET_BLK_D
 
 __all__ = ["pegasos_step", "local_half_step", "fleet_half_step",
            "ell_fleet_half_step", "ell_block_map", "resolve_ell_schedule",
+           "dense_predict", "ell_predict", "resolve_block_cap",
            "padded_row_mask", "default_interpret",
            "FLEET_TILE_BUDGET_BYTES", "ELL_ONEHOT_BUDGET",
            "ELL_PREFETCH_BLK_D"]
@@ -323,6 +325,118 @@ def ell_fleet_half_step(W: jax.Array, cols: jax.Array, vals: jax.Array,
     if project:
         W_half = jax.vmap(lambda w: _project_ball(w, lam))(W_half)
     return W_half.astype(W.dtype)
+
+
+# ------------------------------------------------------------------- predict
+# Serving-side dispatch (repro.serve): scores + argmax against a trained
+# model. ``W`` is either the binary (d,) weight vector or a one-vs-rest
+# (C, d) class matrix; both wrappers are trace-safe (no jit of their own) so
+# the serving engine and the shard_map batch-parallel path jit them once per
+# bucket shape.
+
+
+def _as_class_matrix(W: jax.Array) -> tuple[jax.Array, bool]:
+    W = jnp.asarray(W)
+    if W.ndim == 1:
+        return W[None, :], True
+    if W.ndim != 2:
+        raise ValueError(f"W must be (d,) or (C, d), got shape {W.shape}")
+    return W, False
+
+
+def _finish_predict(scores, labels, B, C, binary):
+    scores, labels = scores[:B, :C], labels[:B]
+    if binary:
+        s = scores[:, 0]
+        return s, jnp.where(s >= 0.0, 1.0, -1.0)
+    return scores, labels
+
+
+def resolve_block_cap(B: int, k: int, *, n_d_blocks: int,
+                      n_blocks_max: int | None = None) -> int:
+    """The one statement of the touched-block map width: the requested cap
+    (or the no-information ``B·k``) clamped to the structural limits. The
+    serving engine's jit-cache key and host-side map width must agree with
+    ``ell_predict``'s internal computation — both call this."""
+    return max(1, min(n_blocks_max or B * k, B * k, n_d_blocks))
+
+
+def dense_predict(W: jax.Array, X: jax.Array, *,
+                  interpret: bool | None = None,
+                  blk_b: int = K.DEFAULT_BLK_B,
+                  blk_d: int = K.DEFAULT_BLK_D) -> tuple[jax.Array, jax.Array]:
+    """Fused serving scores-and-argmax in one kernel launch.
+
+    W: (d,) binary weights or (C, d) one-vs-rest class matrix; X: (B, d)
+    query batch. Returns ``(scores, labels)``: binary → ((B,) margins,
+    (B,) f32 sign labels in {-1, +1}); multiclass → ((B, C) scores,
+    (B,) int32 argmax). Pads B to a sublane multiple, d to blk_d, C to a
+    128-lane multiple (zero class rows, masked out of the in-kernel argmax).
+    """
+    W2, binary = _as_class_matrix(W)
+    C, d = W2.shape
+    B = X.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    blk_b_ = min(blk_b, -(-B // 8) * 8)
+    blk_d_ = min(blk_d, -(-d // 128) * 128)
+    Xp = _pad_to(_pad_to(X.astype(jnp.float32), blk_b_, 0), blk_d_, 1)
+    Wp = _pad_to(_pad_to(W2.astype(jnp.float32), 128, 0), blk_d_, 1)
+    scores, labels = P.dense_scores(Xp, Wp, n_classes=C, blk_b=blk_b_,
+                                    blk_d=blk_d_, interpret=interpret)
+    return _finish_predict(scores, labels, B, C, binary)
+
+
+def ell_predict(W: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                n_blocks_max: int | None = None,
+                blk_d: int | None = None,
+                block_ids: jax.Array | None = None,
+                interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Sparse serving scores-and-argmax over one padded-ELL query batch.
+
+    cols/vals: (B, k) query planes (formats pad convention: (col=0, val=0)
+    entries and all-pad rows are inert — a pad row scores 0 every class and
+    labels +1/class 0). The *query-side* touched-block schedule: the batch's
+    compact touched-block-id map steers the W DMA so scoring touches only
+    live d-blocks — O(live·C·blk_d) weight lanes instead of O(C·d).
+
+    ``n_blocks_max`` is the static grid cap — per-bucket in the serving
+    engine (one compile per bucket shape), from
+    ``formats.minibatch_block_bound`` over the query set; defaults to the
+    structural ``min(B·k, n_d_blocks)``. ``block_ids`` optionally supplies a
+    host-computed map (``formats.block_map`` with m=1, shape
+    (n_blocks_max,)); by default the map is computed on device
+    (``ell_block_map``), keeping the wrapper trace-safe. Returns
+    ``(scores, labels)`` with the same shapes/dtypes as ``dense_predict``.
+    """
+    W2, binary = _as_class_matrix(W)
+    C, d = W2.shape
+    B, k = cols.shape
+    if k == 0:  # all-empty batch: widen to one inert entry (shapes nonzero)
+        cols = jnp.zeros((B, 1), jnp.int32)
+        vals = jnp.zeros((B, 1), jnp.float32)
+        k = 1
+    if interpret is None:
+        interpret = default_interpret()
+    blk_d = blk_d or ELL_PREFETCH_BLK_D
+    n_d_blocks = -(-d // blk_d)
+
+    colsP = _pad_to(_pad_to(cols.astype(jnp.int32), 8, 0), 128, 1)
+    valsP = _pad_to(_pad_to(vals.astype(jnp.float32), 8, 0), 128, 1)
+    if block_ids is not None:
+        bids = jnp.asarray(block_ids, jnp.int32)
+    else:
+        cap = resolve_block_cap(B, k, n_d_blocks=n_d_blocks,
+                                n_blocks_max=n_blocks_max)
+        bids = ell_block_map(colsP[None], valsP[None], blk_d=blk_d,
+                             n_d_blocks=n_d_blocks, n_blocks_max=cap)[0]
+    # one extra zero block after the last real one: the sentinel's DMA pad
+    Wp = _pad_to(_pad_to(W2.astype(jnp.float32), 128, 0),
+                 (n_d_blocks + 1) * blk_d, 1)
+    scores, labels = P.ell_scores_prefetch(colsP, valsP, Wp, bids,
+                                           blk_d=blk_d, n_d_blocks=n_d_blocks,
+                                           n_classes=C, interpret=interpret)
+    return _finish_predict(scores, labels, B, C, binary)
 
 
 @functools.partial(jax.jit, static_argnames=("lam", "blk_b", "blk_d", "interpret"))

@@ -92,6 +92,30 @@ def ell_fleet_half_step_ref(W: jax.Array, cols: jax.Array, vals: jax.Array,
     return W_half
 
 
+# -------------------------------------------------------------------- predict
+# Serving-side oracles (repro.serve / ops.dense_predict / ops.ell_predict):
+# scores S = X @ W^T against a (C, d) class-weight matrix, labels = argmax_c.
+
+
+def predict_scores_ref(W: jax.Array, X: jax.Array) -> jax.Array:
+    """S = X @ W^T. W: (C, d) class weights (C=1 for binary), X: (B, d)."""
+    return X @ W.T
+
+
+def predict_labels_ref(W: jax.Array, X: jax.Array) -> jax.Array:
+    """argmax_c S[b, c] — first occurrence, the convention the fused kernel's
+    masked max/min argmax reproduces."""
+    return jnp.argmax(predict_scores_ref(W, X), axis=-1).astype(jnp.int32)
+
+
+def ell_predict_scores_ref(W: jax.Array, cols: jax.Array,
+                           vals: jax.Array) -> jax.Array:
+    """Sparse twin: scores for one (B, k) padded-ELL query batch as a
+    gather-dot against every class row — S[b, c] = Σ_k vals[b,k]·W[c, cols[b,k]].
+    Pad entries (val=0) are inert; an all-pad row scores 0 for every class."""
+    return jnp.einsum("bk,cbk->bc", vals, jnp.take(W, cols, axis=1))
+
+
 def pegasos_step_ref(w: jax.Array, X: jax.Array, y: jax.Array, lam: float, t: jax.Array):
     """Returns (w_new (d,), mean_hinge_loss ()). X: (B, d); y: (B,) in {-1,+1}."""
     margins = y * (X @ w)

@@ -1,4 +1,11 @@
-"""Serving driver: prefill a batch of requests, then decode tokens.
+"""Serving driver for the *transformer* architectures: prefill a batch of
+requests, then decode tokens.
+
+NOTE: this is the seed's token-decode surface, kept for architecture
+dry-runs (``launch.dryrun`` lowers the same serve_step on the production
+mesh). It is NOT the SVM serving path — for scoring GADGET SVM models
+(anytime snapshots, bucketed sparse queries, fused predict kernels) use
+``repro.serve`` (``SvmServer``; see ``examples/serve_batched.py``).
 
 Runs reduced configs on CPU end-to-end (greedy sampling); the same
 serve_step is what the decode dry-run shapes lower on the production mesh.

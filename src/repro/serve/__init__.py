@@ -1,0 +1,18 @@
+"""Anytime serving subsystem: snapshot → checkpoint → score.
+
+GADGET's consensus model is usable at every iteration; this package is the
+half of the system that *uses* it. ``snapshot`` decodes the training loop's
+on-device export ring and wires it into versioned ``repro.checkpoint``
+exports (f32 or int8+scale); ``batcher`` buckets ragged sparse queries into a
+small fixed set of pad shapes (static shapes ⇒ bounded compile count);
+``engine`` is the ``SvmServer`` scoring path over the fused dense and
+query-side touched-block sparse predict kernels, plus the ``shard_map``
+batch-parallel scorer. ``benchmarks/serve_bench.py`` measures and asserts
+the whole pipeline.
+"""
+from repro.serve.batcher import (Bucket, MicroBatcher, bucket_ladder,  # noqa: F401
+                                 calibrate_buckets)
+from repro.serve.engine import SvmServer, make_mesh_scorer  # noqa: F401
+from repro.serve.snapshot import (Snapshot, dequantize_int8,  # noqa: F401
+                                  from_checkpoint, latest, quantize_int8,
+                                  snapshots_from, to_checkpoint)

@@ -1,0 +1,216 @@
+"""Bucketed micro-batcher: variable-nnz sparse queries → fixed pad shapes.
+
+Serving traffic is ragged — each query carries its own nonzero count — but
+XLA/Pallas want static shapes, and every novel shape is a recompile. The
+batcher quantizes the raggedness away: a small fixed ladder of
+``(rows, k, n_blocks_max)`` :class:`Bucket` shapes, each query routed to the
+narrowest bucket whose ``k`` fits its nnz, batches padded with the standard
+inert ``(col=0, val=0)`` convention (``formats.pad_query_planes`` — pad rows
+score 0 and are dropped before results are returned). The engine therefore
+compiles **at most one executable per bucket**, no matter what arrives —
+``benchmarks/serve_bench.py`` asserts the measured compile count against
+``len(buckets)``.
+
+``n_blocks_max`` is each bucket's static grid cap for the query-side
+touched-block predict kernel — the serving twin of the training loop's
+host-derived ``minibatch_block_bound``. :func:`calibrate_buckets` derives it
+from a sample of representative queries (sum of the ``rows`` largest per-row
+distinct-block counts, the same sound bound training uses); uncalibrated
+buckets fall back to the structural ``min(rows·k, n_d_blocks)``, which is
+correct but gives the prefetch schedule nothing to skip.
+
+Accounting: every request is stamped at submit and at result-ready (the
+score function is forced to completion before the stamp), so :meth:`stats`
+reports real queue+compute latency percentiles and drain throughput.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.sparse.formats import (DEFAULT_BUCKET_BLK_D, minibatch_block_bound,
+                                  pad_query_planes, row_block_counts)
+
+__all__ = ["Bucket", "bucket_ladder", "calibrate_buckets", "MicroBatcher"]
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One static serving shape: batches of ``rows`` queries padded to ``k``
+    nonzeros each, scored with a ``n_blocks_max``-slot touched-block map."""
+
+    rows: int
+    k: int
+    n_blocks_max: int
+
+    def __post_init__(self):
+        if self.rows < 1 or self.k < 1 or self.n_blocks_max < 1:
+            raise ValueError(f"degenerate bucket {self}")
+
+
+def bucket_ladder(k_max: int, *, rows: int = 8, min_k: int = 16, d: int = None,
+                  blk_d: int = DEFAULT_BUCKET_BLK_D) -> tuple[Bucket, ...]:
+    """Doubling-``k`` ladder up to ``k_max``: [min_k, 2·min_k, …, ≥ k_max].
+
+    A doubling ladder bounds pad waste at 2× while keeping the shape set (and
+    so the compile count) logarithmic in ``k_max``. ``n_blocks_max`` defaults
+    to each rung's structural cap — tighten with :func:`calibrate_buckets`.
+    """
+    if k_max < 1:
+        raise ValueError("k_max must be >= 1")
+    n_d_blocks = -(-d // blk_d) if d else None
+    ks = []
+    k = min(min_k, k_max)
+    while k < k_max:
+        ks.append(k)
+        k *= 2
+    ks.append(k_max)
+
+    def cap(k):
+        structural = rows * k
+        return max(1, min(structural, n_d_blocks) if n_d_blocks else structural)
+
+    return tuple(Bucket(rows, k, cap(k)) for k in ks)
+
+
+def calibrate_buckets(buckets, sample_cols: np.ndarray, sample_vals: np.ndarray,
+                      d: int, *, blk_d: int = DEFAULT_BUCKET_BLK_D
+                      ) -> tuple[Bucket, ...]:
+    """Tighten every bucket's ``n_blocks_max`` from representative queries.
+
+    ``sample_cols/vals``: (n, k) ELL planes of typical traffic (e.g. a slice
+    of the training set). The cap per bucket is
+    ``minibatch_block_bound(sample, batch_size=rows)`` — sound for any
+    ``rows`` sample-like queries, and on Zipf/frequency-ranked text features
+    far below the structural bound, which is what lets the sparse predict
+    kernel skip most of w."""
+    counts = row_block_counts(sample_cols, sample_vals, blk_d)
+    return tuple(
+        Bucket(b.rows, b.k, minibatch_block_bound(
+            sample_cols, sample_vals, b.rows, blk_d, d=d, counts=counts))
+        for b in buckets)
+
+
+@dataclass
+class _Request:
+    rid: int
+    cols: np.ndarray
+    vals: np.ndarray
+    t_submit: float
+    t_done: float | None = None
+    scores: np.ndarray | None = None
+    label: np.ndarray | None = None
+
+
+@dataclass
+class MicroBatcher:
+    """FIFO request queue drained in bucketed, padded batches.
+
+    ``score_fn(bucket, cols, vals)`` — supplied per drain, typically
+    ``SvmServer.scorer_for`` — receives exactly ``(bucket.rows, bucket.k)``
+    planes and returns ``(scores, labels)`` for every row (pad rows included;
+    the batcher drops them). Results are forced (``np.asarray``) before the
+    done-stamp so latency numbers include device time, not dispatch time.
+    """
+
+    buckets: tuple[Bucket, ...]
+    clock: callable = time.monotonic
+    _queue: deque = field(default_factory=deque, repr=False)
+    _next_rid: int = 0
+    _done: list = field(default_factory=list, repr=False)
+    _undelivered: dict = field(default_factory=dict, repr=False)
+    _batches: int = 0
+    _padded_rows: int = 0
+    _drain_seconds: float = 0.0
+
+    def __post_init__(self):
+        if not self.buckets:
+            raise ValueError("need at least one bucket")
+        self.buckets = tuple(sorted(self.buckets, key=lambda b: b.k))
+
+    def bucket_for(self, nnz: int) -> Bucket:
+        """Narrowest bucket that fits ``nnz`` nonzeros."""
+        for b in self.buckets:
+            if b.k >= nnz:
+                return b
+        raise ValueError(
+            f"query with {nnz} nonzeros exceeds the widest bucket "
+            f"(k={self.buckets[-1].k}) — add a wider rung")
+
+    def submit(self, cols, vals) -> int:
+        """Enqueue one query (1-D cols/vals of its nonzero features)."""
+        cols = np.asarray(cols, np.int32).reshape(-1)
+        vals = np.asarray(vals, np.float32).reshape(-1)
+        self.bucket_for(len(cols))  # reject oversize at submit, not drain
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(_Request(rid, cols, vals, self.t_now()))
+        return rid
+
+    def t_now(self) -> float:
+        return self.clock()
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def drain(self, score_fn) -> dict[int, tuple[np.ndarray, np.ndarray]]:
+        """Score every pending request; returns {rid: (scores, label)}.
+
+        Requests are grouped by bucket in FIFO order and emitted in full
+        ``bucket.rows``-sized pad shapes — partial tail batches still launch
+        at the bucket shape (pad rows are inert), so shapes stay static.
+
+        If ``score_fn`` raises, the exception propagates but no request or
+        result is lost: batches not yet scored (including the failing one)
+        go back on the queue, and results scored before the failure are held
+        and delivered by the next successful drain."""
+        t0 = self.t_now()
+        by_bucket: dict[Bucket, list[_Request]] = {}
+        while self._queue:
+            r = self._queue.popleft()
+            by_bucket.setdefault(self.bucket_for(len(r.cols)), []).append(r)
+        batches = [
+            (bucket, reqs[i:i + bucket.rows])
+            for bucket, reqs in by_bucket.items()
+            for i in range(0, len(reqs), bucket.rows)
+        ]
+        n_scored = 0
+        try:
+            for bucket, chunk in batches:
+                cols, vals = pad_query_planes(
+                    [(r.cols, r.vals) for r in chunk], bucket.rows, bucket.k)
+                scores, labels = score_fn(bucket, cols, vals)
+                scores, labels = np.asarray(scores), np.asarray(labels)  # sync
+                t_done = self.t_now()
+                self._batches += 1
+                self._padded_rows += bucket.rows - len(chunk)
+                for j, r in enumerate(chunk):
+                    r.scores, r.label, r.t_done = scores[j], labels[j], t_done
+                    self._undelivered[r.rid] = (r.scores, r.label)
+                    self._done.append(r)
+                n_scored += 1
+        finally:
+            for bucket, chunk in batches[n_scored:]:
+                self._queue.extend(chunk)
+            self._drain_seconds += self.t_now() - t0
+        out, self._undelivered = self._undelivered, {}
+        return out
+
+    def stats(self) -> dict:
+        """Latency/throughput over everything drained so far."""
+        lat = np.array([r.t_done - r.t_submit for r in self._done], np.float64)
+        n = len(lat)
+        return {
+            "requests": n,
+            "batches": self._batches,
+            "padded_rows": self._padded_rows,
+            "pad_fraction": (self._padded_rows / max(1, n + self._padded_rows)),
+            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3) if n else float("nan"),
+            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3) if n else float("nan"),
+            "queries_per_sec": n / self._drain_seconds if self._drain_seconds else float("nan"),
+            "drain_seconds": self._drain_seconds,
+        }

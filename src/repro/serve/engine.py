@@ -1,0 +1,234 @@
+"""SvmServer: snapshot-and-serve engine over the fused predict kernels.
+
+The serving half of the anytime loop: load a model (live
+:class:`~repro.serve.snapshot.Snapshot` or versioned checkpoint, f32 or
+int8+scale), then answer queries three ways —
+
+  * :meth:`score` — dense (B, d) batches through the fused scores+argmax
+    kernel (``ops.dense_predict``), one launch per batch;
+  * :meth:`score_sparse` — padded-ELL (B, k) batches through the query-side
+    touched-block kernel (``ops.ell_predict``): the batch's compact
+    touched-block-id map is built on host (``formats.block_map``) and steers
+    the W DMA, so a CCAT-shaped sparse query touches only the d-blocks its
+    features live in;
+  * :func:`make_mesh_scorer` — the batch-parallel ``shard_map`` path: w
+    replicated (closed over), queries sharded over the mesh's batch axis, the
+    multi-device shape of the ROADMAP's serve-heavy-traffic goal.
+
+Every distinct static shape is jitted once and cached;
+``stats()["distinct_shapes"]`` is the measured compile count the bucketed
+batcher's ≤ len(buckets) guarantee is asserted against
+(``benchmarks/serve_bench.py``). The same stats dict tracks blocks visited by
+the sparse path vs the dense sweep equivalent — the serving twin of the
+training bench's ``blocks_visited_ratio``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad import ref as hinge_ref
+from repro.serve import snapshot as snap_mod
+from repro.serve.batcher import Bucket
+from repro.sparse.formats import DEFAULT_BUCKET_BLK_D, block_map
+
+__all__ = ["SvmServer", "make_mesh_scorer"]
+
+
+class SvmServer:
+    """Load-once, score-many serving engine for GADGET SVM models.
+
+    ``W``: (d,) binary weights or (C, d) one-vs-rest class matrix.
+    ``use_kernels=None`` (default) follows the package convention — Pallas
+    kernels wherever they compile natively, jnp oracles where they would only
+    interpret — so a CPU replica and a TPU replica run the same engine.
+    ``use_kernels=True`` forces the kernel path (interpret off-TPU; what CI
+    exercises). ``meta`` carries the checkpoint's manifest ``extra`` when
+    loaded from disk (iteration, objective, export dtype).
+    """
+
+    def __init__(self, W, *, meta: dict | None = None,
+                 blk_d: int = DEFAULT_BUCKET_BLK_D,
+                 use_kernels: bool | None = None):
+        W = np.asarray(W, np.float32)
+        if W.ndim not in (1, 2):
+            raise ValueError(f"W must be (d,) or (C, d), got {W.shape}")
+        self.W = W
+        self.binary = W.ndim == 1
+        self.d = int(W.shape[-1])
+        self.n_classes = 1 if self.binary else int(W.shape[0])
+        self.meta = dict(meta or {})
+        self.blk_d = int(blk_d)
+        self.n_d_blocks = -(-self.d // self.blk_d)
+        if use_kernels is None:
+            use_kernels = not hinge_ops.default_interpret()
+        self.use_kernels = bool(use_kernels)
+        self._W_dev = jnp.asarray(W)
+        self._compiled: dict[tuple, object] = {}
+        self._stats = {
+            "queries": 0, "batches": 0, "sparse_batches": 0,
+            "blocks_visited": 0, "dense_block_equivalent": 0,
+            "cap_overflows": 0,
+        }
+
+    # ------------------------------------------------------------- loading
+
+    @classmethod
+    def from_snapshot(cls, snap: snap_mod.Snapshot, **kw) -> "SvmServer":
+        """Serve a live training snapshot (no disk round-trip)."""
+        meta = {"iteration": snap.iteration, "objective": snap.objective}
+        return cls(snap.w, meta=meta, **kw)
+
+    @classmethod
+    def load(cls, root: str, step: int | None = None, **kw) -> "SvmServer":
+        """Restore a ``serve.snapshot.to_checkpoint`` export (f32 or int8 —
+        quantized weights are dequantized once here; scoring runs f32)."""
+        w, extra = snap_mod.from_checkpoint(root, step)
+        return cls(w, meta=extra, **kw)
+
+    # ------------------------------------------------------------- scoring
+
+    def _jit(self, key, build):
+        fn = self._compiled.get(key)
+        if fn is None:
+            fn = self._compiled[key] = build()
+        return fn
+
+    def score(self, X) -> tuple[np.ndarray, np.ndarray]:
+        """Dense batch: X (B, d) → (scores, labels) — binary ((B,), ±1 f32),
+        multiclass ((B, C), int32 argmax). One fused kernel launch per call;
+        one compile per distinct B."""
+        X = np.asarray(X, np.float32)
+        B, d = X.shape
+        if d != self.d:
+            raise ValueError(f"query d={d} != model d={self.d}")
+        if self.use_kernels:
+            fn = self._jit(("dense", B), lambda: jax.jit(functools.partial(
+                hinge_ops.dense_predict, interpret=hinge_ops.default_interpret())))
+        else:
+            fn = self._jit(("dense", B), lambda: jax.jit(self._dense_oracle))
+        scores, labels = fn(self._W_dev, jnp.asarray(X))
+        self._stats["queries"] += B
+        self._stats["batches"] += 1
+        return np.asarray(scores), np.asarray(labels)
+
+    def _dense_oracle(self, W, X):
+        scores = hinge_ref.predict_scores_ref(W[None] if self.binary else W, X)
+        return hinge_ops._finish_predict(scores, jnp.argmax(scores, axis=-1)
+                                         .astype(jnp.int32), X.shape[0],
+                                         self.n_classes, self.binary)
+
+    def score_sparse(self, cols, vals, *, n_blocks_max: int | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Sparse ELL batch: (B, k) padded planes → (scores, labels).
+
+        ``n_blocks_max`` is the static map width (per-bucket constant when
+        called through the batcher — one compile per bucket); defaults to the
+        structural ``min(B·k, n_d_blocks)``. The touched-block map is built
+        on host over the *actual batch* — blocks the batch doesn't live in
+        are never DMA'd — and padded with sentinels to the static width.
+
+        A batch touching more blocks than the cap (live traffic heavier than
+        the calibration sample) is still served correctly: the map widens to
+        the realized count, rounded up to an 8-multiple so over-cap traffic
+        adds a bounded number of shapes, and ``stats()["cap_overflows"]``
+        counts it — the signal to re-run ``calibrate_buckets``. It never
+        raises mid-drain, so the batcher queue cannot wedge on one batch."""
+        cols = np.asarray(cols, np.int32)
+        vals = np.asarray(vals, np.float32)
+        B, k = cols.shape
+        if k == 0:
+            cols = np.zeros((B, 1), np.int32)
+            vals = np.zeros((B, 1), np.float32)
+            k = 1
+        cap = hinge_ops.resolve_block_cap(B, k, n_d_blocks=self.n_d_blocks,
+                                          n_blocks_max=n_blocks_max)
+        live = len(np.unique(cols[vals != 0] // self.blk_d))
+        if live > cap:
+            cap = min(-(-live // 8) * 8, self.n_d_blocks)
+            self._stats["cap_overflows"] += 1
+        bm = block_map(cols[None], vals[None], self.blk_d, self.n_d_blocks, cap)[0]
+        key = ("ell", B, k, cap)
+        if self.use_kernels:
+            fn = self._jit(key, lambda: jax.jit(functools.partial(
+                hinge_ops.ell_predict, blk_d=self.blk_d,
+                interpret=hinge_ops.default_interpret())))
+            scores, labels = fn(self._W_dev, jnp.asarray(cols),
+                                jnp.asarray(vals), block_ids=jnp.asarray(bm))
+        else:
+            fn = self._jit(key, lambda: jax.jit(self._ell_oracle))
+            scores, labels = fn(self._W_dev, jnp.asarray(cols), jnp.asarray(vals))
+        self._stats["queries"] += B
+        self._stats["batches"] += 1
+        self._stats["sparse_batches"] += 1
+        self._stats["blocks_visited"] += live
+        self._stats["dense_block_equivalent"] += self.n_d_blocks
+        return np.asarray(scores), np.asarray(labels)
+
+    def _ell_oracle(self, W, cols, vals):
+        scores = hinge_ref.ell_predict_scores_ref(
+            W[None] if self.binary else W, cols, vals)
+        return hinge_ops._finish_predict(scores, jnp.argmax(scores, axis=-1)
+                                         .astype(jnp.int32), cols.shape[0],
+                                         self.n_classes, self.binary)
+
+    def scorer_for(self, bucket: Bucket | None = None):
+        """The ``score_fn`` the micro-batcher drains with. Each batch is
+        scored with its own bucket's static ``n_blocks_max`` (the batcher
+        passes the bucket per batch), so every batch of a bucket reuses one
+        compiled executable; pass ``bucket`` to pin one cap for every batch
+        instead."""
+        def score_fn(b: Bucket, cols, vals):
+            cap = (bucket or b).n_blocks_max
+            return self.score_sparse(cols, vals, n_blocks_max=cap)
+        return score_fn
+
+    # --------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        s = dict(self._stats)
+        s["distinct_shapes"] = len(self._compiled)
+        s["blocks_visited_ratio"] = (
+            s["blocks_visited"] / s["dense_block_equivalent"]
+            if s["dense_block_equivalent"] else float("nan"))
+        return s
+
+
+def make_mesh_scorer(W, *, mesh=None, axis: str = "batch",
+                     use_kernels: bool | None = None):
+    """Batch-parallel serving step: w replicated, queries sharded.
+
+    Returns ``scorer(X) -> (scores, labels)`` where X's leading axis is
+    sharded over ``mesh``'s ``axis`` (defaults to a 1-D mesh over every local
+    device) and the class weights are closed over — replicated to each shard,
+    never gathered. B must divide by the axis size (pad with zero rows; they
+    score 0 and slice away). ``check_rep=False`` for the kernel path — jax
+    has no ``pallas_call`` replication rule inside ``shard_map`` yet, same
+    pin as the training mesh step."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()), (axis,))
+    W_dev = jnp.asarray(np.asarray(W, np.float32))
+    if use_kernels is None:
+        use_kernels = not hinge_ops.default_interpret()
+    binary = W_dev.ndim == 1
+
+    def per_shard(Xl):
+        if use_kernels:
+            return hinge_ops.dense_predict(
+                W_dev, Xl, interpret=hinge_ops.default_interpret())
+        scores = hinge_ref.predict_scores_ref(
+            W_dev[None] if binary else W_dev, Xl)
+        labels = jnp.argmax(scores, axis=-1).astype(jnp.int32)
+        return hinge_ops._finish_predict(scores, labels, Xl.shape[0],
+                                         1 if binary else W_dev.shape[0], binary)
+
+    sharded = shard_map(per_shard, mesh=mesh, in_specs=P(axis),
+                        out_specs=(P(axis), P(axis)), check_rep=False)
+    return jax.jit(sharded)

@@ -1,0 +1,190 @@
+"""Anytime snapshot export: ring decoding, versioned checkpoints, quantization.
+
+GADGET is an *anytime* algorithm — the consensus model is usable at every
+iteration — and ``gadget_train(..., snapshot_every=K)`` taps that: the jitted
+loop records the last few ``(iteration, consensus w, objective)`` triples into
+an on-device ring (:class:`repro.core.gadget.SnapshotRing`). This module is
+the host half of the export path:
+
+  * :func:`snapshots_from` / :func:`latest` — decode the ring (device slot
+    layout) into ordered :class:`Snapshot` records, final iterate included.
+  * :func:`to_checkpoint` / :func:`from_checkpoint` — wire a snapshot into
+    ``repro.checkpoint`` with a versioned manifest (``kind`` +
+    ``serve_format`` under the manifest's ``extra``), so a serving process can
+    discover the model's shape/dtype without guessing a tree structure.
+  * :func:`quantize_int8` / :func:`dequantize_int8` — symmetric per-class-row
+    int8 + f32 scale export, the same shrink-the-payload trade the quantized
+    gossip path makes (``consensus.gossip_mix_stacked(payload_dtype=...)``
+    quantizes the *sent* share per round; here the shipped artifact is the
+    weights themselves, 4× smaller on the wire and dtype-faithful on restore).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core.gadget import SnapshotRing
+
+__all__ = [
+    "Snapshot", "snapshots_from", "latest",
+    "to_checkpoint", "from_checkpoint",
+    "quantize_int8", "dequantize_int8",
+    "SERVE_KIND", "SERVE_FORMAT_VERSION",
+]
+
+SERVE_KIND = "gadget_svm_model"
+SERVE_FORMAT_VERSION = 1
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """One servable model state: the consensus weights at ``iteration`` and
+    the primal objective they achieved. ``w`` is (d,) for the paper's binary
+    SVM or (C, d) for the one-vs-rest multiclass extension."""
+
+    iteration: int
+    w: np.ndarray
+    objective: float
+
+    @property
+    def d(self) -> int:
+        return self.w.shape[-1]
+
+    @property
+    def n_classes(self) -> int:
+        return 1 if self.w.ndim == 1 else self.w.shape[0]
+
+
+def _ring_of(source) -> SnapshotRing:
+    ring = getattr(source, "snapshots", source)
+    if not isinstance(ring, SnapshotRing):
+        raise ValueError(
+            "no snapshots attached — train with gadget_train(..., "
+            "snapshot_every=K) to record the anytime ring")
+    return ring
+
+
+def snapshots_from(source) -> list[Snapshot]:
+    """Decode a training result's ring into ordered snapshots.
+
+    ``source``: a ``GadgetResult`` (its ``.snapshots`` field) or a raw
+    :class:`SnapshotRing`. Returns oldest → newest; when the ring wrapped
+    (``count > slots``) only the latest ``slots`` periodic snapshots survive.
+    The final iterate is always last — appended when the run did not end
+    exactly on a snapshot boundary (including ``K > iters``, where it is the
+    only entry)."""
+    ring = _ring_of(source)
+    n_valid = min(ring.count, ring.slots)
+    out = [
+        Snapshot(int(ring.iterations[j % ring.slots]),
+                 np.asarray(ring.W[j % ring.slots]),
+                 float(ring.objectives[j % ring.slots]))
+        for j in range(ring.count - n_valid, ring.count)
+    ]
+    if not out or out[-1].iteration != ring.final_iteration:
+        out.append(Snapshot(int(ring.final_iteration), np.asarray(ring.final_w),
+                            float(ring.final_objective)))
+    return out
+
+
+def latest(source) -> Snapshot:
+    """The newest servable state (the final iterate)."""
+    return snapshots_from(source)[-1]
+
+
+# ------------------------------------------------------------- quantization
+
+
+def quantize_int8(w: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric int8 quantization with one f32 scale per class row.
+
+    ``w``: (d,) or (C, d) → ``(q, scale)`` with ``q`` int8 of the same shape
+    and ``scale`` shaped () / (C,) such that ``q ≈ round(w / scale)`` clipped
+    to ±127. Max-abs scaling keeps dequantization error ≤ scale/2 per weight.
+    """
+    w = np.asarray(w, np.float32)
+    W2 = w[None] if w.ndim == 1 else w
+    scale = (np.maximum(np.abs(W2).max(axis=1), 1e-30) / 127.0).astype(np.float32)
+    q = np.clip(np.rint(W2 / scale[:, None]), -127, 127).astype(np.int8)
+    if w.ndim == 1:
+        return q[0], scale[0]
+    return q, scale
+
+
+def dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_int8` (up to the ≤ scale/2 rounding)."""
+    q = np.asarray(q)
+    scale = np.asarray(scale, np.float32)
+    if q.ndim == 1:
+        return q.astype(np.float32) * scale
+    return q.astype(np.float32) * scale[:, None]
+
+
+# -------------------------------------------------------------- checkpoints
+
+
+def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
+                  step: int | None = None, keep: int = 3,
+                  lam: float | None = None) -> str:
+    """Export one snapshot as a servable checkpoint under ``root``.
+
+    ``quantize``: ``None`` ships f32 weights; ``"int8"`` ships the int8+scale
+    pair from :func:`quantize_int8` (dtype-faithful on restore — the
+    regression tests pin this through ``repro.checkpoint``). The manifest's
+    ``extra`` carries the versioned serving schema — kind, format version,
+    dtype, shape, iteration, objective — so :func:`from_checkpoint` (and the
+    serving engine) can rebuild the restore tree without out-of-band
+    knowledge. ``step`` defaults to the snapshot's iteration.
+    """
+    if quantize not in (None, "int8"):
+        raise ValueError(f"unknown quantize mode {quantize!r}")
+    if quantize == "int8":
+        q, scale = quantize_int8(snap.w)
+        tree = {"w": q, "scale": np.asarray(scale, np.float32)}
+    else:
+        tree = {"w": np.asarray(snap.w, np.float32)}
+    extra = {
+        "kind": SERVE_KIND,
+        "serve_format": SERVE_FORMAT_VERSION,
+        "dtype": "int8" if quantize == "int8" else "float32",
+        "d": int(snap.d),
+        "n_classes": int(snap.n_classes),
+        "binary": snap.w.ndim == 1,
+        "iteration": int(snap.iteration),
+        "objective": float(snap.objective),
+    }
+    if lam is not None:
+        extra["lam"] = float(lam)
+    return ckpt.save(root, snap.iteration if step is None else step, tree,
+                     keep=keep, extra=extra)
+
+
+def from_checkpoint(root: str, step: int | None = None
+                    ) -> tuple[np.ndarray, dict]:
+    """Load a servable checkpoint back to f32 weights.
+
+    Returns ``(w, extra)`` — int8 exports are dequantized here (serving
+    kernels run f32; the quantization already paid for itself on the wire /
+    at rest). Rejects checkpoints that are not serving exports or carry a
+    newer format version, with the manifest contents in the error."""
+    manifest = ckpt.read_manifest(root, step)
+    extra = manifest.get("extra") or {}
+    if extra.get("kind") != SERVE_KIND:
+        raise ValueError(
+            f"checkpoint under {root} is not a serving export "
+            f"(manifest extra: {extra!r}) — write it with serve.snapshot.to_checkpoint")
+    if extra.get("serve_format", 0) > SERVE_FORMAT_VERSION:
+        raise ValueError(
+            f"serving checkpoint format {extra['serve_format']} is newer than "
+            f"this build understands ({SERVE_FORMAT_VERSION})")
+    d, C, binary = extra["d"], extra["n_classes"], extra["binary"]
+    w_shape = (d,) if binary else (C, d)
+    if extra["dtype"] == "int8":
+        like = {"w": np.zeros(w_shape, np.int8),
+                "scale": np.zeros(() if binary else (C,), np.float32)}
+        tree = ckpt.restore(root, like, step)
+        return dequantize_int8(tree["w"], tree["scale"]), extra
+    tree = ckpt.restore(root, {"w": np.zeros(w_shape, np.float32)}, step)
+    return np.asarray(tree["w"]), extra

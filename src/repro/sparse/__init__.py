@@ -9,5 +9,5 @@ layout contract; the sparse Pallas kernels live in
 from repro.sparse.formats import (  # noqa: F401
     CSR, ELL, BlockBuckets, DEFAULT_BUCKET_BLK_D, EllPartitions,
     block_map, bucket_by_block, frequency_remap, minibatch_block_bound,
-    partition_rows, row_block_counts,
+    pad_query_planes, partition_rows, row_block_counts,
 )

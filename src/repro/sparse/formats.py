@@ -50,6 +50,7 @@ __all__ = [
     "CSR", "ELL", "EllPartitions", "partition_rows",
     "BlockBuckets", "DEFAULT_BUCKET_BLK_D", "block_map", "bucket_by_block",
     "row_block_counts", "minibatch_block_bound", "frequency_remap",
+    "pad_query_planes",
 ]
 
 # Default d-block width for touched-block schedules: the TPU lane minimum.
@@ -415,6 +416,34 @@ def row_like_max(sorted_blocks: np.ndarray, sentinel: int) -> int:
     changed = (sorted_blocks[:, 1:] != sorted_blocks[:, :-1]) & live[:, 1:]
     per = first.sum(axis=1) + changed.sum(axis=1)
     return int(per.max()) if per.size else 0
+
+
+def pad_query_planes(queries, rows: int, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a list of ragged sparse queries into one fixed-shape ELL batch.
+
+    ``queries``: up to ``rows`` items of ``(cols_i, vals_i)`` 1-D arrays (a
+    query's nonzero features). Returns ``(cols, vals)`` planes of exactly
+    ``(rows, k)`` under the standard pad convention — entries beyond a query's
+    nnz and whole rows beyond ``len(queries)`` carry the inert ``(0, 0.0)``.
+    This is the serving micro-batcher's one statement of its bucket shapes:
+    every batch it emits for a ``(rows, k)`` bucket goes through here, so the
+    kernels always see one of a small fixed set of static shapes. Raises if a
+    query exceeds the bucket's ``k`` (route it to a wider bucket instead of
+    silently truncating features)."""
+    if len(queries) > rows:
+        raise ValueError(f"{len(queries)} queries > bucket rows={rows}")
+    cols = np.zeros((rows, k), np.int32)
+    vals = np.zeros((rows, k), np.float32)
+    for i, (c, v) in enumerate(queries):
+        c = np.asarray(c, np.int32).reshape(-1)
+        v = np.asarray(v, np.float32).reshape(-1)
+        if c.shape != v.shape:
+            raise ValueError(f"query {i}: cols/vals lengths disagree")
+        if len(c) > k:
+            raise ValueError(f"query {i} has {len(c)} nonzeros > bucket k={k}")
+        cols[i, :len(c)] = c
+        vals[i, :len(v)] = v
+    return cols, vals
 
 
 def frequency_remap(cols: np.ndarray, vals: np.ndarray, d: int

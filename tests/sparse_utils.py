@@ -1,0 +1,62 @@
+"""Shared sparse test fixtures: the one statement of the "dense oracle" setup.
+
+Every sparse parity test in this suite — the training-side
+``ell_fleet_half_step`` one-hot sweep/prefetch checks in ``test_sparse.py``
+AND the serving-side predict checks in ``test_serve.py`` — follows the same
+recipe: draw a ragged sparse matrix, keep BOTH its dense form (the oracle
+input) and its padded-ELL planes (the kernel input), and assert the kernels
+land on the dense math. These helpers hold that recipe once so the oracle
+setup cannot drift between the training and serving test files.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import ELL
+
+RNG = np.random.default_rng(0)
+
+
+def random_sparse(n: int, d: int, nnz_max: int, rng=RNG) -> np.ndarray:
+    """Dense matrix with ≤ nnz_max nonzeros per row (ragged on purpose)."""
+    X = np.zeros((n, d), np.float32)
+    for r in range(n):
+        k = int(rng.integers(0, nnz_max + 1))
+        cols = rng.choice(d, size=k, replace=False)
+        X[r, cols] = rng.normal(size=k).astype(np.float32)
+    return X
+
+
+def ell_minibatch_planes(m: int, B: int, d: int, k: int, localized: bool = False,
+                         rng=RNG):
+    """Random (m, B, k) minibatch planes + labels + weights, plus the dense X
+    the jnp oracles consume — the shared sweep-oracle fixture. ``localized``
+    confines each node's columns to a narrow band (few touched d-blocks, the
+    shape the prefetch schedules exist for)."""
+    X = np.zeros((m * B, d), np.float32)
+    for r in range(m * B):
+        kk = int(rng.integers(0, k + 1))
+        lo = (r // B) * 64 % max(1, d - 64) if localized else 0
+        hi = min(d, lo + 64) if localized else d
+        cc = rng.choice(np.arange(lo, hi), size=min(kk, hi - lo), replace=False)
+        X[r, cc] = rng.normal(size=len(cc)).astype(np.float32)
+    ell = ELL.from_dense(X)
+    kw = ell.k_max
+    return (X.reshape(m, B, d),
+            jnp.asarray(ell.cols.reshape(m, B, kw)),
+            jnp.asarray(ell.vals.reshape(m, B, kw)),
+            jnp.asarray(np.sign(rng.normal(size=(m, B)) + 0.1).astype(np.float32)),
+            jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 0.1))
+
+
+def random_ell_queries(n: int, d: int, k_max: int, rng=RNG):
+    """Ragged serving queries: list of (cols, vals) 1-D pairs plus the ELL
+    batch and dense matrix oracles for the same rows."""
+    X = random_sparse(n, d, k_max, rng)
+    ell = ELL.from_dense(X)
+    queries = []
+    for r in range(n):
+        live = ell.vals[r] != 0
+        queries.append((ell.cols[r][live], ell.vals[r][live]))
+    return queries, ell, X

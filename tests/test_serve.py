@@ -1,0 +1,516 @@
+"""Serving subsystem: snapshot ring vs the host-loop reference (bit-matching
+sweep over K), versioned checkpoint round-trips incl. int8 dtype fidelity and
+treedef-mismatch errors, predict kernel parity (dense fused argmax + query-side
+touched-block sparse) against the shared sweep-oracle fixture, the bucketed
+micro-batcher's static-shape/recompile guarantees, the SvmServer engine end to
+end, and the shard_map batch-parallel scorer."""
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ckpt
+from repro import serve
+from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
+from repro.kernels.hinge_subgrad import ops as hinge_ops
+from repro.kernels.hinge_subgrad import ref as hinge_ref
+from repro.serve import snapshot as snap_mod
+from tests.sparse_utils import ell_minibatch_planes, random_ell_queries
+
+RNG = np.random.default_rng(0)
+
+
+def _toy_parts(m=3, n_i=20, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    X = rng.normal(size=(m * n_i, d)).astype(np.float32)
+    y = np.sign(X @ w_true).astype(np.float32)
+    return jnp.asarray(X.reshape(m, n_i, d)), jnp.asarray(y.reshape(m, n_i))
+
+
+def _toy_cfg(max_iters=24, **kw):
+    base = dict(lam=1e-3, batch_size=3, gossip_rounds=2, max_iters=max_iters,
+                check_every=10, epsilon=0.0)
+    base.update(kw)
+    return GadgetConfig(**base)
+
+
+# ------------------------------------------------------------ snapshot ring
+
+
+class TestSnapshotRing:
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(1, 30), st.integers(1, 6), st.integers(5, 24))
+    def test_device_ring_bit_matches_reference(self, K, slots, iters):
+        """The acceptance sweep: device snapshots (unfused loop) must equal
+        the host-loop reference trace at every K — including K > iters, where
+        only the final-iter snapshot exists — slot for slot and bit for bit."""
+        Xp, yp = _toy_parts()
+        cfg = _toy_cfg(max_iters=iters, fused=False)
+        dev = gadget_train(Xp, yp, cfg, snapshot_every=K, snapshot_slots=slots)
+        ref = gadget_train_reference(Xp, yp, cfg, snapshot_every=K,
+                                     snapshot_slots=slots)
+        rd, rr = dev.snapshots, ref.snapshots
+        assert rd.count == rr.count == iters // K
+        np.testing.assert_array_equal(rd.iterations, rr.iterations)
+        np.testing.assert_array_equal(rd.W, rr.W)  # weights: bit for bit
+        np.testing.assert_array_equal(rd.final_w, rr.final_w)
+        assert rd.final_iteration == rr.final_iteration == iters
+        # the objective scalar is a full-data reduction — inside the jitted
+        # while_loop XLA may fuse it differently than the reference's
+        # standalone jit, so it matches to float rounding, not bitwise
+        np.testing.assert_allclose(np.nan_to_num(rd.objectives),
+                                   np.nan_to_num(rr.objectives), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(rd.final_objective, rr.final_objective,
+                                   rtol=1e-5, atol=1e-6)
+
+        sd, sr = serve.snapshots_from(dev), serve.snapshots_from(ref)
+        assert [s.iteration for s in sd] == [s.iteration for s in sr]
+        assert sd[-1].iteration == iters  # final-iter snapshot always present
+        its = [s.iteration for s in sd]
+        assert its == sorted(its) and len(set(its)) == len(its)
+        # ring semantics: the latest min(count, slots) periodic snapshots
+        # survive, then the final iterate (deduped when iters % K == 0)
+        periodic = [j * K for j in range(1, iters // K + 1)]
+        expect = periodic[len(periodic) - min(slots, len(periodic)):]
+        if not expect or expect[-1] != iters:
+            expect = expect + [iters]
+        assert its == expect
+
+    def test_k_larger_than_iters_yields_final_only(self):
+        Xp, yp = _toy_parts()
+        res = gadget_train(Xp, yp, _toy_cfg(max_iters=7), snapshot_every=50)
+        assert res.snapshots.count == 0
+        snaps = serve.snapshots_from(res)
+        assert len(snaps) == 1 and snaps[0].iteration == 7
+        np.testing.assert_array_equal(snaps[0].w, np.asarray(res.w_consensus))
+
+    def test_ring_wraparound_keeps_latest(self):
+        Xp, yp = _toy_parts()
+        res = gadget_train(Xp, yp, _toy_cfg(max_iters=20), snapshot_every=2,
+                           snapshot_slots=3)
+        assert res.snapshots.count == 10
+        snaps = serve.snapshots_from(res)
+        # last 3 periodic snapshots survive; 20 is both periodic and final
+        assert [s.iteration for s in snaps] == [16, 18, 20]
+
+    def test_fused_ring_matches_reference_loosely(self):
+        """The default fused loop reorders float math; its snapshots must
+        still land on the reference trace to the standing 1e-5 bar."""
+        Xp, yp = _toy_parts()
+        dev = gadget_train(Xp, yp, _toy_cfg(max_iters=20), snapshot_every=5)
+        ref = gadget_train_reference(Xp, yp, _toy_cfg(max_iters=20),
+                                     snapshot_every=5)
+        np.testing.assert_array_equal(dev.snapshots.iterations,
+                                      ref.snapshots.iterations)
+        assert np.max(np.abs(dev.snapshots.W - ref.snapshots.W)) <= 1e-5
+
+    def test_zero_iteration_run_still_exports_initial_state(self):
+        """max_iters=0 with snapshot_every must hand back a servable ring
+        (the initial w=0 iterate, objective exactly 1), not None."""
+        Xp, yp = _toy_parts()
+        res = gadget_train(Xp, yp, _toy_cfg(max_iters=0), snapshot_every=5)
+        snaps = serve.snapshots_from(res)
+        assert len(snaps) == 1 and snaps[0].iteration == 0
+        np.testing.assert_array_equal(snaps[0].w, np.zeros(Xp.shape[-1]))
+        assert snaps[0].objective == 1.0
+
+    def test_snapshot_validation(self):
+        Xp, yp = _toy_parts()
+        with pytest.raises(ValueError, match="snapshot_every"):
+            gadget_train(Xp, yp, _toy_cfg(max_iters=4), snapshot_every=0)
+        with pytest.raises(ValueError, match="snapshot_slots"):
+            gadget_train(Xp, yp, _toy_cfg(max_iters=4), snapshot_every=2,
+                         snapshot_slots=0)
+        res = gadget_train(Xp, yp, _toy_cfg(max_iters=4))
+        assert res.snapshots is None
+        with pytest.raises(ValueError, match="snapshot_every"):
+            serve.snapshots_from(res)
+
+
+# ---------------------------------------------------------- predict kernels
+
+
+class TestPredictKernels:
+    @pytest.mark.parametrize("B,d,C", [(1, 64, 1), (5, 300, 3), (16, 1024, 10),
+                                       (9, 130, 129)])
+    def test_dense_predict_parity(self, B, d, C):
+        X = RNG.normal(size=(B, d)).astype(np.float32)
+        W = RNG.normal(size=(C, d)).astype(np.float32)
+        scores, labels = hinge_ops.dense_predict(jnp.asarray(W), jnp.asarray(X),
+                                                 interpret=True)
+        # rtol: blocked accumulation vs BLAS ordering at d=1024 differs by a
+        # few f32 ulps on O(30) scores
+        np.testing.assert_allclose(np.asarray(scores), X @ W.T, rtol=1e-5,
+                                   atol=2e-5)
+        np.testing.assert_array_equal(
+            np.asarray(labels),
+            np.asarray(hinge_ref.predict_labels_ref(jnp.asarray(W), jnp.asarray(X))))
+
+    def test_dense_predict_binary(self):
+        B, d = 11, 200
+        X = RNG.normal(size=(B, d)).astype(np.float32)
+        w = RNG.normal(size=d).astype(np.float32)
+        scores, labels = hinge_ops.dense_predict(jnp.asarray(w), jnp.asarray(X),
+                                                 interpret=True)
+        assert scores.shape == (B,) and labels.shape == (B,)
+        np.testing.assert_allclose(np.asarray(scores), X @ w, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(labels),
+                                      np.where(X @ w >= 0, 1.0, -1.0))
+
+    def test_argmax_pad_classes_masked(self):
+        """Pad class rows are zero ⇒ score 0, which beats all-negative real
+        scores unless masked — the kernel must never emit a pad label."""
+        B, d, C = 8, 64, 3
+        X = -np.abs(RNG.normal(size=(B, d))).astype(np.float32)
+        W = np.abs(RNG.normal(size=(C, d))).astype(np.float32)  # scores < 0
+        _, labels = hinge_ops.dense_predict(jnp.asarray(W), jnp.asarray(X),
+                                            interpret=True)
+        assert np.all(np.asarray(labels) < C)
+
+    def test_argmax_first_occurrence_ties(self):
+        X = np.ones((4, 16), np.float32)
+        W = np.stack([np.ones(16), np.ones(16), np.zeros(16)]).astype(np.float32)
+        _, labels = hinge_ops.dense_predict(jnp.asarray(W), jnp.asarray(X),
+                                            interpret=True)
+        np.testing.assert_array_equal(np.asarray(labels), np.zeros(4, np.int32))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 8), st.integers(32, 500), st.integers(1, 8),
+           st.integers(1, 12), st.booleans())
+    def test_ell_predict_parity_property(self, B, d, C, k, localized):
+        """Sparse predict == dense predict == jnp oracle on the same rows —
+        the satellite's shared-oracle check: the planes/dense pair comes from
+        the same tests/sparse_utils fixture the training sweep-kernel parity
+        tests use, not a re-derived copy."""
+        X, cols, vals, _, _ = ell_minibatch_planes(1, B, d, min(k, d), localized)
+        X, cols, vals = X[0], cols[0], vals[0]
+        W = RNG.normal(size=(C, d)).astype(np.float32)
+        want_s, want_l = hinge_ops.dense_predict(jnp.asarray(W), jnp.asarray(X),
+                                                 interpret=True)
+        got_s, got_l = hinge_ops.ell_predict(jnp.asarray(W), cols, vals,
+                                             interpret=True)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                                   atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(got_s),
+            np.asarray(hinge_ref.ell_predict_scores_ref(jnp.asarray(W), cols, vals)),
+            atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+
+    def test_ell_predict_host_map_and_bound(self):
+        """A host-computed per-bucket map (the serving engine's path) gives
+        identical scores, and the realized live count respects the bound."""
+        from repro.sparse.formats import block_map, minibatch_block_bound
+        B, d, k = 6, 700, 9
+        X, cols, vals, _, _ = ell_minibatch_planes(1, B, d, k, localized=True)
+        X, cols, vals = X[0], cols[0], vals[0]
+        w = RNG.normal(size=d).astype(np.float32)
+        blk_d = hinge_ops.ELL_PREFETCH_BLK_D
+        n_blk = -(-d // blk_d)
+        bound = minibatch_block_bound(np.asarray(cols), np.asarray(vals), B,
+                                      blk_d, d=d)
+        bm = block_map(np.asarray(cols)[None], np.asarray(vals)[None], blk_d,
+                       n_blk, bound)[0]
+        assert (bm < n_blk).sum() <= bound
+        base_s, _ = hinge_ops.ell_predict(jnp.asarray(w), cols, vals,
+                                          interpret=True)
+        got_s, _ = hinge_ops.ell_predict(jnp.asarray(w), cols, vals,
+                                         block_ids=jnp.asarray(bm),
+                                         interpret=True)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(base_s),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_s), X @ w, atol=2e-5)
+
+    def test_ell_predict_degenerate(self):
+        w = RNG.normal(size=100).astype(np.float32)
+        for k in (0, 3):
+            cols = jnp.zeros((4, k), jnp.int32)
+            vals = jnp.zeros((4, k), jnp.float32)
+            scores, labels = hinge_ops.ell_predict(jnp.asarray(w), cols, vals,
+                                                   interpret=True)
+            np.testing.assert_array_equal(np.asarray(scores), np.zeros(4))
+            np.testing.assert_array_equal(np.asarray(labels), np.ones(4))
+
+
+# ------------------------------------------------- checkpoint + quantization
+
+
+class TestServeCheckpoints:
+    def _snap(self, d=48, C=None):
+        w = RNG.normal(size=(C, d) if C else d).astype(np.float32)
+        return snap_mod.Snapshot(iteration=17, w=w, objective=0.5)
+
+    def test_f32_roundtrip_serves_identical(self, tmp_path):
+        snap = self._snap()
+        serve.to_checkpoint(snap, str(tmp_path), lam=1e-3)
+        srv_disk = serve.SvmServer.load(str(tmp_path), use_kernels=True)
+        srv_live = serve.SvmServer.from_snapshot(snap, use_kernels=True)
+        assert srv_disk.meta["iteration"] == 17
+        assert srv_disk.meta["lam"] == 1e-3
+        X = RNG.normal(size=(9, snap.d)).astype(np.float32)
+        s_disk, l_disk = srv_disk.score(X)
+        s_live, l_live = srv_live.score(X)
+        np.testing.assert_array_equal(s_disk, s_live)  # bit-identical weights
+        np.testing.assert_array_equal(l_disk, l_live)
+
+    def test_int8_roundtrip_dtype_faithful(self, tmp_path):
+        """Regression (satellite): int8 leaves survive save/restore as int8,
+        and the quantized engine serves exactly its dequantized weights."""
+        snap = self._snap(C=3)
+        serve.to_checkpoint(snap, str(tmp_path), quantize="int8")
+        q, scale = snap_mod.quantize_int8(snap.w)
+        like = {"w": np.zeros_like(q), "scale": np.zeros(3, np.float32)}
+        tree = ckpt.restore(str(tmp_path), like)
+        assert tree["w"].dtype == np.int8
+        np.testing.assert_array_equal(tree["w"], q)
+        np.testing.assert_array_equal(tree["scale"], scale)
+
+        srv = serve.SvmServer.load(str(tmp_path), use_kernels=True)
+        assert srv.meta["dtype"] == "int8"
+        X = RNG.normal(size=(6, snap.d)).astype(np.float32)
+        s_q, _ = srv.score(X)
+        w_deq = snap_mod.dequantize_int8(q, scale)
+        np.testing.assert_allclose(s_q, X @ w_deq.T, atol=2e-5)
+        # quantization error is bounded by the scale, not hidden
+        assert np.max(np.abs(w_deq - snap.w)) <= np.max(scale) / 2 + 1e-7
+
+    def test_restore_treedef_mismatch_clear_error(self, tmp_path):
+        """Regression (satellite): structure mismatch fails with the saved
+        and expected treedefs named, not an unflatten crash or silent
+        leaf-order scramble."""
+        ckpt.save(str(tmp_path), 0, {"w": np.zeros(4), "scale": np.zeros(())})
+        with pytest.raises(ValueError, match="treedef"):
+            ckpt.restore(str(tmp_path), {"weights": np.zeros(4),
+                                         "gain": np.zeros(())})
+        with pytest.raises(ValueError, match="structure mismatch"):
+            ckpt.restore(str(tmp_path), {"w": np.zeros(4)})
+
+    def test_restore_dtype_mismatch_clear_error(self, tmp_path):
+        ckpt.save(str(tmp_path), 0, {"w": np.zeros(4, np.int8)})
+        with pytest.raises(ValueError, match="dtype"):
+            ckpt.restore(str(tmp_path), {"w": np.zeros(4, np.float32)})
+
+    def test_from_checkpoint_rejects_foreign(self, tmp_path):
+        ckpt.save(str(tmp_path), 0, {"w": np.zeros(4)})
+        with pytest.raises(ValueError, match="serving export"):
+            snap_mod.from_checkpoint(str(tmp_path))
+
+    def test_manifest_versioned(self, tmp_path):
+        from repro.checkpoint.io import MANIFEST_VERSION
+        serve.to_checkpoint(self._snap(), str(tmp_path))
+        manifest = ckpt.read_manifest(str(tmp_path))
+        assert manifest["version"] == MANIFEST_VERSION
+        extra = manifest["extra"]
+        assert extra["kind"] == snap_mod.SERVE_KIND
+        assert extra["serve_format"] == snap_mod.SERVE_FORMAT_VERSION
+
+
+# ---------------------------------------------------------------- batcher
+
+
+class TestMicroBatcher:
+    def _server(self, d=256, seed=1):
+        w = np.random.default_rng(seed).normal(size=d).astype(np.float32)
+        return serve.SvmServer(w, use_kernels=True)
+
+    def test_bucket_ladder_shape_policy(self):
+        buckets = serve.bucket_ladder(100, rows=8, min_k=16, d=1280)
+        assert [b.k for b in buckets] == [16, 32, 64, 100]
+        assert all(b.n_blocks_max <= 10 for b in buckets)  # n_d_blocks cap
+        mb = serve.MicroBatcher(buckets)
+        assert mb.bucket_for(1).k == 16 and mb.bucket_for(33).k == 64
+        with pytest.raises(ValueError, match="widest bucket"):
+            mb.bucket_for(101)
+
+    def test_drain_parity_and_pad_inertness(self):
+        d = 256
+        srv = self._server(d)
+        queries, ell, X = random_ell_queries(13, d, 10, RNG)
+        mb = serve.MicroBatcher(serve.bucket_ladder(ell.k_max or 1, rows=4,
+                                                    min_k=4, d=d))
+        rids = [mb.submit(c, v) for c, v in queries]
+        out = mb.drain(srv.scorer_for())
+        assert len(out) == len(queries) and mb.pending == 0
+        want = X @ srv.W
+        for i, rid in enumerate(rids):
+            score, label = out[rid]
+            np.testing.assert_allclose(score, want[i], atol=2e-5)
+            assert label == (1.0 if want[i] >= 0 else -1.0)
+
+    def test_compile_count_bounded_by_buckets(self):
+        """The tentpole's static-shape guarantee, measured: many drains of
+        wildly ragged traffic compile at most one executable per bucket."""
+        d = 512
+        srv = self._server(d)
+        buckets = serve.bucket_ladder(24, rows=4, min_k=8, d=d)
+        mb = serve.MicroBatcher(buckets)
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            for _ in range(int(rng.integers(1, 11))):
+                nnz = int(rng.integers(1, 25))
+                cols = rng.choice(d, size=nnz, replace=False)
+                mb.submit(cols, rng.normal(size=nnz))
+            mb.drain(srv.scorer_for())
+        assert srv.stats()["distinct_shapes"] <= len(buckets)
+        st = mb.stats()
+        assert st["requests"] >= 5 and st["batches"] >= 5
+        assert st["latency_p50_ms"] <= st["latency_p99_ms"]
+
+    def test_latency_accounting_with_fake_clock(self):
+        times = iter(np.arange(0.0, 100.0, 0.5))
+        mb = serve.MicroBatcher((serve.Bucket(2, 4, 2),),
+                                clock=lambda: float(next(times)))
+        mb.submit([1], [1.0])
+        mb.submit([2], [0.5])
+        mb.drain(lambda b, c, v: (np.zeros(b.rows), np.ones(b.rows)))
+        st = mb.stats()
+        assert st["requests"] == 2 and st["batches"] == 1
+        assert st["latency_p99_ms"] >= st["latency_p50_ms"] > 0
+        assert st["queries_per_sec"] > 0
+
+    def test_oversize_rejected_at_submit(self):
+        mb = serve.MicroBatcher((serve.Bucket(2, 4, 2),))
+        with pytest.raises(ValueError, match="widest bucket"):
+            mb.submit(np.arange(5), np.ones(5))
+
+    def test_drain_requeues_unscored_on_error(self):
+        """A failing score_fn must lose neither requests nor results:
+        unscored batches (including the failing one) go back on the queue,
+        already-scored results are delivered by the next drain."""
+        mb = serve.MicroBatcher((serve.Bucket(2, 4, 2),))
+        rids = [mb.submit([i], [1.0]) for i in range(6)]  # 3 batches of 2
+        calls = []
+
+        def flaky(b, cols, vals):
+            calls.append(1)
+            if len(calls) == 2:
+                raise RuntimeError("boom")
+            return np.zeros(b.rows), np.ones(b.rows)
+
+        with pytest.raises(RuntimeError, match="boom"):
+            mb.drain(flaky)
+        assert mb.pending == 4  # batch 2 (failed) + batch 3 (never reached)
+        out = mb.drain(lambda b, c, v: (np.zeros(b.rows), np.ones(b.rows)))
+        assert sorted(out) == rids  # all six: held batch-1 results included
+        assert mb.stats()["requests"] == 6 and mb.pending == 0
+
+
+# ----------------------------------------------------------------- engine
+
+
+class TestSvmServer:
+    def test_sparse_dense_agree_and_blocks_tracked(self):
+        d, C = 640, 4
+        W = RNG.normal(size=(C, d)).astype(np.float32)
+        srv = serve.SvmServer(W, use_kernels=True)
+        X, cols, vals, _, _ = ell_minibatch_planes(1, 6, d, 8, localized=True)
+        s_d, l_d = srv.score(X[0])
+        s_s, l_s = srv.score_sparse(np.asarray(cols[0]), np.asarray(vals[0]))
+        np.testing.assert_allclose(s_s, s_d, atol=2e-5)
+        np.testing.assert_array_equal(l_s, l_d)
+        st = srv.stats()
+        assert st["blocks_visited_ratio"] < 1.0  # localized queries skip blocks
+        assert st["queries"] == 12 and st["sparse_batches"] == 1
+
+    def test_kernel_and_jnp_paths_agree(self):
+        d = 200
+        w = RNG.normal(size=d).astype(np.float32)
+        X, cols, vals, _, _ = ell_minibatch_planes(1, 5, d, 6)
+        a = serve.SvmServer(w, use_kernels=True)
+        b = serve.SvmServer(w, use_kernels=False)
+        np.testing.assert_allclose(a.score(X[0])[0], b.score(X[0])[0], atol=2e-5)
+        np.testing.assert_allclose(
+            a.score_sparse(np.asarray(cols[0]), np.asarray(vals[0]))[0],
+            b.score_sparse(np.asarray(cols[0]), np.asarray(vals[0]))[0],
+            atol=2e-5)
+
+    def test_shape_validation(self):
+        srv = serve.SvmServer(np.zeros(8, np.float32))
+        with pytest.raises(ValueError, match="d=4"):
+            srv.score(np.zeros((2, 4), np.float32))
+        with pytest.raises(ValueError, match=r"\(d,\) or \(C, d\)"):
+            serve.SvmServer(np.zeros((2, 3, 4), np.float32))
+
+    def test_over_cap_batch_widens_instead_of_raising(self):
+        """Live traffic heavier than the calibrated cap must still be served
+        correctly (map widens, counted in stats) — a mis-sized bucket may
+        cost a compile, never a wedged queue."""
+        d = 1280  # 10 d-blocks at blk_d=128
+        w = RNG.normal(size=d).astype(np.float32)
+        srv = serve.SvmServer(w, use_kernels=True)
+        # one query per d-block: 10 live blocks >> cap 2
+        cols = np.arange(0, d, 128, dtype=np.int32).reshape(1, -1)
+        vals = np.ones_like(cols, dtype=np.float32)
+        scores, _ = srv.score_sparse(cols, vals, n_blocks_max=2)
+        want = np.zeros(d, np.float32)
+        want[cols[0]] = 1.0
+        np.testing.assert_allclose(scores, [w[cols[0]].sum()], atol=2e-5)
+        assert srv.stats()["cap_overflows"] == 1
+
+
+# ------------------------------------------------------------- mesh scorer
+
+
+MESH_SERVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, numpy as np, jax.numpy as jnp
+from repro.serve import make_mesh_scorer
+
+rng = np.random.default_rng(0)
+d, B, C = 96, 16, 3
+W = rng.normal(size=(C, d)).astype(np.float32)
+X = rng.normal(size=(B, d)).astype(np.float32)
+scorer = make_mesh_scorer(W, use_kernels=True)
+scores, labels = scorer(jnp.asarray(X))
+np.testing.assert_allclose(np.asarray(scores), X @ W.T, atol=2e-5)
+np.testing.assert_array_equal(np.asarray(labels), np.argmax(X @ W.T, axis=1))
+print("MESH_SERVE_OK devices=%d" % jax.device_count())
+"""
+
+
+class TestMeshScorer:
+    def test_single_device_parity(self):
+        d = 128
+        w = RNG.normal(size=d).astype(np.float32)
+        X = RNG.normal(size=(8, d)).astype(np.float32)
+        scorer = serve.make_mesh_scorer(w, use_kernels=True)
+        scores, labels = scorer(jnp.asarray(X))
+        np.testing.assert_allclose(np.asarray(scores), X @ w, atol=2e-5)
+        np.testing.assert_array_equal(np.asarray(labels),
+                                      np.where(X @ w >= 0, 1.0, -1.0))
+
+    def test_four_device_subprocess(self, tmp_path):
+        """Queries sharded over 4 forced CPU devices, w replicated — the
+        batch-parallel serving path (subprocess so the flag cannot leak)."""
+        script = tmp_path / "mesh_serve.py"
+        script.write_text(MESH_SERVE_SCRIPT)
+        repo = __file__.rsplit("/tests/", 1)[0]
+        env = {**__import__("os").environ, "PYTHONPATH": f"{repo}/src:{repo}"}
+        p = subprocess.run([sys.executable, str(script)], capture_output=True,
+                           text=True, timeout=300, env=env)
+        assert p.returncode == 0, p.stdout[-2000:] + p.stderr[-2000:]
+        assert "MESH_SERVE_OK devices=4" in p.stdout
+
+
+# ------------------------------------------------------------- multiclass
+
+
+def test_predict_multiclass_routes_through_fused_kernel():
+    """core.multiclass.predict_multiclass dispatches the fused predict op
+    (kernel path forced here — the None default resolves per the package
+    convention) — same labels as the original jnp argmax."""
+    from repro.core.multiclass import predict_multiclass
+    C, d, N = 5, 64, 40
+    W = RNG.normal(size=(C, d)).astype(np.float32)
+    X = RNG.normal(size=(N, d)).astype(np.float32)
+    want = np.argmax(X @ W.T, axis=1)
+    for uk in (True, False, None):
+        got = predict_multiclass(jnp.asarray(W), jnp.asarray(X), use_kernels=uk)
+        np.testing.assert_array_equal(np.asarray(got), want)

@@ -17,18 +17,10 @@ from repro.kernels.hinge_subgrad import sparse as hinge_sparse
 from repro.sparse import (CSR, ELL, EllPartitions, block_map, bucket_by_block,
                           frequency_remap, minibatch_block_bound,
                           partition_rows, row_block_counts)
+# shared oracle fixtures (also used by test_serve.py's predict parity tests)
+from tests.sparse_utils import ell_minibatch_planes, random_sparse as _random_sparse
 
 RNG = np.random.default_rng(0)
-
-
-def _random_sparse(n, d, nnz_max, rng=RNG):
-    """Dense matrix with ≤ nnz_max nonzeros per row (ragged on purpose)."""
-    X = np.zeros((n, d), np.float32)
-    for r in range(n):
-        k = int(rng.integers(0, nnz_max + 1))
-        cols = rng.choice(d, size=k, replace=False)
-        X[r, cols] = rng.normal(size=k).astype(np.float32)
-    return X
 
 
 # ------------------------------------------------------------- containers
@@ -130,23 +122,10 @@ class TestSparseKernels:
             for i in range(m)])
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
+    # shared with test_serve.py: tests/sparse_utils.ell_minibatch_planes is
+    # the one statement of the planes-plus-dense-oracle fixture
     def _ell_planes(self, m, B, d, k, localized=False):
-        """Random (m, B, k) minibatch planes + labels + weights; ``localized``
-        confines each node's columns to a narrow band (few touched blocks)."""
-        X = np.zeros((m * B, d), np.float32)
-        for r in range(m * B):
-            kk = int(RNG.integers(0, k + 1))
-            lo = (r // B) * 64 % max(1, d - 64) if localized else 0
-            hi = min(d, lo + 64) if localized else d
-            cc = RNG.choice(np.arange(lo, hi), size=min(kk, hi - lo), replace=False)
-            X[r, cc] = RNG.normal(size=len(cc)).astype(np.float32)
-        ell = ELL.from_dense(X)
-        kw = ell.k_max
-        return (X.reshape(m, B, d),
-                jnp.asarray(ell.cols.reshape(m, B, kw)),
-                jnp.asarray(ell.vals.reshape(m, B, kw)),
-                jnp.asarray(np.sign(RNG.normal(size=(m, B)) + 0.1).astype(np.float32)),
-                jnp.asarray(RNG.normal(size=(m, d)).astype(np.float32) * 0.1))
+        return ell_minibatch_planes(m, B, d, k, localized)
 
     @settings(max_examples=12, deadline=None)
     @given(st.integers(1, 3), st.integers(1, 6), st.integers(64, 700),
