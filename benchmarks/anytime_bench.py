@@ -1,0 +1,277 @@
+"""Anytime-serving benchmark: served-model accuracy vs wall clock, measured
+while training runs — the paper's anytime property exercised end to end.
+
+The full live loop under measurement:
+
+  * a :class:`repro.serve.TrainPublisher` trains GADGET on CCAT-shaped sparse
+    partitions in a background thread and publishes a versioned checkpoint
+    every ``segment_iters`` iterations (atomic rename + ``LATEST`` pointer);
+  * the serving side (``SvmServer.watch``) streams its query set from an
+    on-disk LibSVM file (``iter_libsvm_chunks`` → ``MicroBatcher.submit_csr``
+    — the replica never materializes its queries), polls ``maybe_reload()``
+    between drains, and hot-swaps whenever the published version moves;
+  * every answered query is attributed to the model version that scored it,
+    yielding an accuracy-at-version timeline. Versions the serving loop was
+    too slow to catch live are replayed afterwards through the rollback path
+    (``checkpoint.point_latest``) so every publish point gets a measurement.
+
+Asserted on every run (the acceptance criteria, not just reported):
+
+  * ≥ 3 publish points measured, versions monotone non-decreasing;
+  * ≥ 2 hot swaps with the compile count (``distinct_shapes``) exactly flat
+    from the first swap onward — swapping never recompiles;
+  * every published version is a complete, loadable checkpoint and every
+    submitted request is answered exactly once.
+
+Per-point wall-clock/accuracy numbers depend on the train-vs-serve race and
+are skip-listed in check_regression; the deterministic regression surface is
+the structural flags plus ``final_accuracy`` (the final model is
+bit-identical to an uninterrupted ``gadget_train`` run, so its accuracy on
+the fixed query set is exact).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.anytime_bench [--quick] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro import checkpoint as ckpt
+from repro import serve
+from repro.core.gadget import GadgetConfig
+from repro.data.libsvm import dump_libsvm, iter_libsvm_chunks
+from repro.data.svm_datasets import make_dataset, partition
+
+FIRST_CKPT_TIMEOUT_S = 600.0
+
+
+class _Timeline:
+    """Accuracy-at-version accumulator: every answered query is attributed
+    to the model version that scored it."""
+
+    def __init__(self, t0: float):
+        self.t0 = t0
+        self.by_version: dict[int, dict] = {}
+
+    def tally(self, version: int, correct: int, n: int, live: bool) -> None:
+        e = self.by_version.setdefault(
+            version, {"correct": 0, "n": 0, "live": live, "t_last": 0.0})
+        e["correct"] += correct
+        e["n"] += n
+        e["t_last"] = time.time() - self.t0
+
+    def points(self) -> list[dict]:
+        return [
+            {"version": v, "wall_s": round(e["t_last"], 3),
+             "served_accuracy": e["correct"] / e["n"],
+             "n_queries_at_version": e["n"], "live": int(e["live"])}
+            for v, e in sorted(self.by_version.items())
+        ]
+
+
+def _serve_pass(qpath: str, d: int, chunk_rows: int, mb, srv, tl: _Timeline,
+                *, reload_between_drains: bool, live: bool,
+                on_swap=None) -> tuple[int, int]:
+    """One full streamed pass over the query file. Returns (correct, n) for
+    the whole pass; per-version attribution goes through ``tl``."""
+    pass_correct = pass_n = 0
+    for csr, labels in iter_libsvm_chunks(qpath, d, chunk_rows=chunk_rows):
+        if reload_between_drains:
+            step = srv.maybe_reload()  # the hot-swap, between drains
+            if step is not None and on_swap is not None:
+                on_swap(step)
+        rids = mb.submit_csr(csr)
+        out = mb.drain(srv.scorer_for())
+        version = int(srv.meta["iteration"])
+        preds = np.array([float(np.asarray(out[r][1]).reshape(())) for r in rids])
+        correct = int(np.sum(preds == np.asarray(labels)))
+        tl.tally(version, correct, len(rids), live)
+        pass_correct += correct
+        pass_n += len(rids)
+    return pass_correct, pass_n
+
+
+def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
+        max_iters: int | None = None, segment_iters: int | None = None,
+        json_path: str | None = None, verbose: bool = True) -> dict:
+    if scale is None:
+        scale = 0.002 if quick else 0.01
+    if max_iters is None:
+        max_iters = 20 if quick else 60
+    if segment_iters is None:
+        segment_iters = 4 if quick else 10
+    n_queries = 32 if quick else 128
+    chunk_rows = 8
+    rows = 4 if quick else 8
+
+    t0 = time.time()
+    ds = make_dataset("ccat", scale=scale, seed=0, sparse=True)
+    Pe, yp, nc = partition(ds.X_train, ds.y_train, n_nodes, seed=0)
+    cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=4,
+                       topology="exponential", max_iters=max_iters,
+                       epsilon=0.0, use_kernels=True)
+    import jax.numpy as jnp
+    yp = jnp.asarray(yp)
+
+    ell_q = ds.X_test.take_rows(np.arange(min(n_queries, ds.X_test.shape[0])))
+    y_q = np.asarray(ds.y_test[:ell_q.shape[0]], np.float32)
+    expected_versions = [segment_iters * j for j in
+                         range(1, -(-max_iters // segment_iters) + 1)]
+    expected_versions[-1] = min(expected_versions[-1], max_iters)
+
+    with tempfile.TemporaryDirectory() as td:
+        qpath = os.path.join(td, "queries.svm")
+        dump_libsvm(qpath, ell_q.to_csr(), y_q)  # the on-disk streaming source
+        root = os.path.join(td, "ckpts")
+
+        pub = serve.TrainPublisher(Pe, yp, cfg, root=root,
+                                   segment_iters=segment_iters,
+                                   n_counts=nc).start()
+        # serving comes up as soon as the FIRST version lands
+        deadline = time.time() + FIRST_CKPT_TIMEOUT_S
+        while ckpt.read_latest(root) is None:
+            if not pub.running:
+                pub.join()  # surfaces the training error
+            if time.time() > deadline:
+                raise TimeoutError("no checkpoint published within timeout")
+            time.sleep(0.02)
+        srv = serve.SvmServer.watch(root, use_kernels=True)
+
+        # bucket ladder calibrated on the query planes themselves — the block
+        # cap is then sound for every batch, so no cap-overflow shapes can
+        # appear mid-run and the compile count is exactly len(warmed shapes)
+        buckets = serve.calibrate_buckets(
+            serve.bucket_ladder(ell_q.k_max, rows=rows,
+                                min_k=max(8, ell_q.k_max // 4), d=ds.d),
+            ell_q.cols, ell_q.vals, ds.d)
+        mb = serve.MicroBatcher(buckets)
+        for b in buckets:  # warm every rung before measuring compile flatness
+            srv.score_sparse(np.zeros((b.rows, b.k), np.int32),
+                             np.zeros((b.rows, b.k), np.float32),
+                             n_blocks_max=b.n_blocks_max)
+
+        tl = _Timeline(t0)
+        shapes_at_first_swap = [None]
+
+        def on_swap(step):
+            if shapes_at_first_swap[0] is None:
+                shapes_at_first_swap[0] = srv.stats()["distinct_shapes"]
+            if verbose:
+                emit("anytime/swap", 0.0,
+                     f"version={step};t={time.time() - t0:.2f}s")
+
+        # ---- live phase: stream query passes while training runs
+        live_passes = 0
+        while pub.running:
+            _serve_pass(qpath, ds.d, chunk_rows, mb, srv, tl,
+                        reload_between_drains=True, live=True, on_swap=on_swap)
+            live_passes += 1
+        final_seg = pub.join()
+        assert pub.published == expected_versions, (
+            f"published {pub.published}, expected {expected_versions}")
+        assert final_seg.iteration == expected_versions[-1]
+
+        # ---- replay phase: publish points the live race skipped, served
+        # through the rollback path so every version gets a measurement
+        missed = [s for s in pub.published if s not in tl.by_version]
+        for s in missed:
+            ckpt.point_latest(root, s)
+            step = srv.maybe_reload()
+            assert step == s or int(srv.meta["iteration"]) == s
+            on_swap(s)
+            _serve_pass(qpath, ds.d, chunk_rows, mb, srv, tl,
+                        reload_between_drains=False, live=False)
+
+        # ---- final phase: one clean pass under the final version (its
+        # accuracy is deterministic — the trajectory bit-matches gadget_train)
+        ckpt.point_latest(root, pub.published[-1])
+        if srv.maybe_reload() is not None:
+            on_swap(pub.published[-1])
+        assert int(srv.meta["iteration"]) == pub.published[-1]
+        correct, n = _serve_pass(qpath, ds.d, chunk_rows, mb, srv, tl,
+                                 reload_between_drains=False, live=False)
+        final_accuracy = correct / n
+
+        st = srv.stats()
+        points = tl.points()
+        versions = [p["version"] for p in points]
+        assert len(points) >= 3, f"only {len(points)} publish points measured"
+        assert versions == sorted(versions)  # monotone non-decreasing
+        assert st["swaps"] >= 2, f"only {st['swaps']} hot swaps exercised"
+        assert shapes_at_first_swap[0] is not None
+        assert st["distinct_shapes"] == shapes_at_first_swap[0], (
+            f"compile count moved across swaps: {shapes_at_first_swap[0]} -> "
+            f"{st['distinct_shapes']}")
+        assert st["reload_errors"] == 0
+        assert mb.pending == 0
+
+        if verbose:
+            for p in points:
+                emit(f"anytime/point(v={p['version']})", 0.0,
+                     f"acc={p['served_accuracy']:.3f};t={p['wall_s']:.2f}s"
+                     f";live={p['live']};n={p['n_queries_at_version']}")
+            emit("anytime/summary", 0.0,
+                 f"points={len(points)};swaps={st['swaps']}"
+                 f";shapes={st['distinct_shapes']};final_acc={final_accuracy:.3f}")
+
+        out = {
+            "quick": quick,
+            "scale": scale,
+            "runner": runner_fingerprint(),
+            "model": {"d": ds.d, "k_max": ell_q.k_max, "n_nodes": n_nodes},
+            "publish": {
+                "segment_iters": segment_iters,
+                "max_iters": max_iters,
+                "n_published": len(pub.published),
+                "first_version": pub.published[0],
+                "final_version": pub.published[-1],
+            },
+            "serving": {
+                "n_buckets": len(buckets),
+                "bucket_ks": [b.k for b in buckets],
+                "n_query_rows": int(ell_q.shape[0]),
+                "distinct_shapes": st["distinct_shapes"],
+                "n_swaps": st["swaps"],
+                "n_live_passes": live_passes,
+                "requests_total": mb.stats()["requests"],
+            },
+            "anytime": {
+                "n_points": len(points),
+                "min_points_ok": int(len(points) >= 3),
+                "versions_monotone": int(versions == sorted(versions)),
+                "compile_flat_across_swaps": int(
+                    st["distinct_shapes"] == shapes_at_first_swap[0]),
+                "final_accuracy": final_accuracy,
+                "timeline": points,
+            },
+            "total": {"seconds": time.time() - t0},
+        }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (tiny row count, same d/sparsity)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="CCAT row-count scale")
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--iters", dest="max_iters", type=int, default=None)
+    ap.add_argument("--segment-iters", type=int, default=None,
+                    help="iterations per published checkpoint (the cadence)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, scale=args.scale, n_nodes=args.nodes,
+        max_iters=args.max_iters, segment_iters=args.segment_iters,
+        json_path=args.json_path)

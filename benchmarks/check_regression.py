@@ -38,22 +38,57 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 WALLCLOCK_LEAVES = {"seconds"}
 WALLCLOCK_PARENTS = {"us_per_call"}
 # leaves that are noisy by construction (ratios of two wall-clocks, diffs of
-# float accumulations that vary across BLAS builds) — reported but never
-# compared against the threshold
+# float accumulations that vary across BLAS builds, and the anytime bench's
+# train-vs-serve race artifacts: which versions were caught live, how many
+# passes/queries/swaps the race produced, per-point wall clocks) — reported
+# but never compared against the threshold
 SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
                "consensus_max_abs_diff", "fused_vs_pr1_max_abs_diff",
                "prefetch_vs_sweep_max_abs_diff",
                "dense_vs_sparse_max_abs_diff",
                "quantized_vs_oracle_max_abs_diff", "quantized_drift_vs_f32",
-               "quantized_label_agreement", "queries_per_sec"}
+               "quantized_label_agreement", "queries_per_sec",
+               "wall_s", "served_accuracy", "version", "live",
+               "n_queries_at_version", "n_swaps", "n_live_passes",
+               "requests_total"}
 # the fingerprint subtree identifies the runner; it is compared as a whole,
 # never leaf-by-leaf (a different cpu_count is not a "structural change")
 RUNNER_KEY = "runner"
+
+
+def fingerprint_slug(fp: dict) -> str:
+    """Filesystem-safe runner-class identity derived from a benchmark JSON's
+    ``runner`` fingerprint — the naming key for per-runner-class baselines in
+    ``benchmarks/baselines/`` (``<BENCH_stem>.<slug>.json``). Every field of
+    the fingerprint participates, so a slug match implies the full
+    fingerprint matches and the wall-clock gate arms."""
+    keys = ("os", "machine", "python", "backend", "pallas_interpret",
+            "cpu_count")
+    return "-".join(str(fp.get(k, "unknown")) for k in keys).replace("/", "_")
+
+
+def resolve_baseline(baseline: str, baseline_dir: str | None,
+                     fresh_fp: dict | None) -> tuple[str, bool]:
+    """Pick the baseline file to diff against: a fingerprint-matching
+    per-runner-class baseline from ``baseline_dir`` when one exists (the
+    wall-clock gate arms by construction — same slug ⇒ same fingerprint),
+    else the repo-root baseline (timing comparison inert unless the root
+    baseline happens to fingerprint-match). Returns ``(path, matched)``."""
+    if baseline_dir and fresh_fp:
+        stem = os.path.basename(baseline)
+        if stem.endswith(".json"):
+            stem = stem[:-5]
+        cand = os.path.join(baseline_dir,
+                            f"{stem}.{fingerprint_slug(fresh_fp)}.json")
+        if os.path.isfile(cand):
+            return cand, True
+    return baseline, False
 
 
 def _leaves(obj, path=()):
@@ -126,12 +161,22 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-threshold", type=float, default=2.5,
                     help="ratio above which --fail-on-timing fails (default "
                          "2.5; between --threshold and this, it still warns)")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="directory of per-runner-class baselines "
+                         "(<stem>.<fingerprint-slug>.json); when one matches "
+                         "the fresh run's fingerprint it replaces --baseline "
+                         "and the wall-clock gate arms by construction")
     args = ap.parse_args(argv)
 
     try:
         with open(args.fresh) as fh:
             fresh = json.load(fh)
-        with open(args.baseline) as fh:
+        baseline_path, matched = resolve_baseline(
+            args.baseline, args.baseline_dir, fresh.get(RUNNER_KEY))
+        if matched:
+            print(f"::notice::check_regression: fingerprint-matched baseline "
+                  f"{baseline_path} — wall-clock gate armed")
+        with open(baseline_path) as fh:
             baseline = json.load(fh)
     except (OSError, json.JSONDecodeError) as e:
         print(f"::error::check_regression: cannot load benchmark JSON: {e}")
@@ -139,14 +184,14 @@ def main(argv=None) -> int:
 
     warnings, timing = compare(fresh, baseline, args.threshold)
     for w in warnings:
-        print(f"::warning::bench {args.baseline}: {w}")
+        print(f"::warning::bench {baseline_path}: {w}")
     failures = 0
     for w, ratio in timing:
         hard = args.fail_on_timing and ratio > args.fail_threshold
         failures += hard
-        print(f"::{'error' if hard else 'warning'}::bench {args.baseline}: {w}")
+        print(f"::{'error' if hard else 'warning'}::bench {baseline_path}: {w}")
     if not warnings and not timing:
-        print(f"check_regression: {args.fresh} within {args.threshold:.2f}x of {args.baseline}")
+        print(f"check_regression: {args.fresh} within {args.threshold:.2f}x of {baseline_path}")
     return 1 if failures else 0
 
 

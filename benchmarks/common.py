@@ -50,3 +50,12 @@ def runner_fingerprint() -> dict:
         "pallas_interpret": int(default_interpret()),
         "cpu_count": os.cpu_count() or 0,
     }
+
+
+def fingerprint_slug() -> str:
+    """This runner's fingerprint as the filesystem-safe slug that names
+    per-runner-class baselines (``benchmarks/baselines/<stem>.<slug>.json``).
+    Delegates to check_regression's formatter so recording and matching can
+    never drift apart."""
+    from benchmarks.check_regression import fingerprint_slug as _slug
+    return _slug(runner_fingerprint())

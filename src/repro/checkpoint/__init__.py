@@ -1,4 +1,4 @@
 """Checkpoint substrate: pytree <-> .npz + versioned JSON manifest, with
 rotation and caller metadata (``extra``) for model exports."""
-from repro.checkpoint.io import (latest_step, read_manifest, restore,  # noqa: F401
-                                 save)
+from repro.checkpoint.io import (latest_step, point_latest,  # noqa: F401
+                                 read_latest, read_manifest, restore, save)

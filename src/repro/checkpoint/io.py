@@ -9,6 +9,20 @@ arrays can be re-sharded by the caller's jit in/out shardings). Quantized
 int8 leaves round-trip dtype-exact — ``restore`` validates dtype as well as
 shape, and a structure mismatch fails with the saved-vs-expected treedefs
 spelled out instead of leaking a leaf-order scramble to the caller.
+
+Live-publishing contract (the train-to-serve loop leans on all three):
+
+  * **Atomicity** — a checkpoint is staged in a dot-prefixed temp dir and
+    enters the namespace via one ``os.rename``; readers either see a complete
+    ``step_*`` directory or nothing. A crashed writer leaves only
+    ``.tmp_ckpt_*`` litter, which no reader ever lists.
+  * **Completeness** — discovery (:func:`latest_step`, :func:`read_latest`)
+    only counts directories holding both the manifest and the arrays, so even
+    a hand-torn directory is invisible rather than a crash at restore time.
+  * **LATEST pointer** — :func:`save` advances a root-level ``LATEST`` file
+    (atomic write + ``os.replace``) monotonically; :func:`point_latest` moves
+    it explicitly in either direction (rollback). Watchers poll
+    :func:`read_latest` instead of scanning the directory.
 """
 from __future__ import annotations
 
@@ -23,10 +37,12 @@ import numpy as np
 
 Pytree = Any
 
-__all__ = ["save", "restore", "latest_step", "read_manifest", "MANIFEST_VERSION"]
+__all__ = ["save", "restore", "latest_step", "read_latest", "point_latest",
+           "read_manifest", "MANIFEST_VERSION"]
 
 _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
+_LATEST = "LATEST"
 
 # Bumped when the on-disk layout changes shape. Version 1: arrays.npz with
 # leaf_<i> keys + this manifest schema (step/treedef/n_leaves/dtypes/shapes,
@@ -35,17 +51,35 @@ MANIFEST_VERSION = 1
 
 
 def _step_dir(root: str, step: int) -> str:
+    """Path of the step's directory: ``root/step_%09d`` (sorts numerically)."""
     return os.path.join(root, f"step_{step:09d}")
+
+
+def _is_complete(root: str, step: int) -> bool:
+    """True when the step directory holds both manifest and arrays — the
+    completeness gate every discovery path applies, so a torn directory
+    (crashed writer, partial copy) is invisible instead of half-loadable."""
+    path = _step_dir(root, step)
+    return (os.path.isfile(os.path.join(path, _MANIFEST))
+            and os.path.isfile(os.path.join(path, _ARRAYS)))
 
 
 def save(root: str, step: int, tree: Pytree, keep: int = 3,
          extra: dict | None = None) -> str:
     """Write ``tree`` under root/step_XXXXXXXXX atomically; rotate old steps.
 
+    The arrays + manifest are staged in a dot-prefixed temp dir and published
+    with a single ``os.rename`` — a reader polling ``root`` never observes a
+    partial checkpoint. After the rename, the root-level ``LATEST`` pointer
+    is advanced (monotonically — saving an *older* step never moves it back;
+    use :func:`point_latest` for explicit rollback). ``keep`` > 0 retains the
+    newest ``keep`` steps and deletes the rest; ``keep=0`` retains all
+    (what a live publisher uses so readers never race a rotation).
+
     ``extra`` (optional, JSON-serializable) is stored verbatim under the
     manifest's ``"extra"`` key — caller-owned metadata (model kind, export
     quantization, training iteration) readable via :func:`read_manifest`
-    without touching the arrays.
+    without touching the arrays. Returns the published step directory path.
     """
     os.makedirs(root, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
@@ -72,32 +106,99 @@ def save(root: str, step: int, tree: Pytree, keep: int = 3,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
+    current = _read_pointer(root)
+    if current is None or step >= current:
+        _write_pointer(root, step)
     _rotate(root, keep)
     return final
 
 
 def _rotate(root: str, keep: int) -> None:
+    """Delete all but the newest ``keep`` steps; ``keep <= 0`` keeps all."""
     steps = sorted(_list_steps(root))
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(_step_dir(root, s), ignore_errors=True)
 
 
 def _list_steps(root: str) -> list[int]:
+    """Step numbers of every *complete* checkpoint under ``root``. Temp dirs
+    (``.tmp_ckpt_*``) and torn directories are excluded."""
     out = []
     if not os.path.isdir(root):
         return out
     for name in os.listdir(root):
         if name.startswith("step_"):
             try:
-                out.append(int(name[5:]))
+                step = int(name[5:])
             except ValueError:
-                pass
+                continue
+            if _is_complete(root, step):
+                out.append(step)
     return out
 
 
 def latest_step(root: str) -> int | None:
+    """Highest complete step under ``root`` by directory scan (pointer-blind);
+    None when the root is empty or missing. :func:`read_latest` is the
+    pointer-aware twin a serving watcher should poll."""
     steps = _list_steps(root)
     return max(steps) if steps else None
+
+
+# --------------------------------------------------------- the LATEST pointer
+
+
+def _read_pointer(root: str) -> int | None:
+    try:
+        with open(os.path.join(root, _LATEST)) as fh:
+            return int(fh.read().strip())
+    except (OSError, ValueError):
+        return None
+
+
+def _write_pointer(root: str, step: int) -> None:
+    # atomic even against a concurrent reader: write-then-replace, and the
+    # payload is a bare integer so a torn read cannot half-parse
+    fd, tmp = tempfile.mkstemp(dir=root, prefix=".tmp_latest_")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            fh.write(f"{step}\n")
+        os.replace(tmp, os.path.join(root, _LATEST))
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def read_latest(root: str) -> int | None:
+    """The step the ``LATEST`` pointer currently designates, or None.
+
+    Pointer-first: if the pointer file exists and its step directory is
+    complete, that step wins — including when it is *older* than other steps
+    on disk (an operator rolled back via :func:`point_latest`). A stale or
+    corrupt pointer (missing file, unparseable payload, pointed-at step
+    rotated away) falls back to the :func:`latest_step` scan, so a watcher
+    never wedges on pointer damage."""
+    step = _read_pointer(root)
+    if step is not None and _is_complete(root, step):
+        return step
+    return latest_step(root)
+
+
+def point_latest(root: str, step: int) -> None:
+    """Move the ``LATEST`` pointer to ``step`` explicitly (atomic).
+
+    Unlike :func:`save`'s monotonic advance this moves in either direction —
+    the rollback path when a published model regresses. Raises
+    ``FileNotFoundError`` if ``step`` is not a complete checkpoint, so the
+    pointer can never be aimed at a torn or missing directory."""
+    if not _is_complete(root, step):
+        raise FileNotFoundError(
+            f"cannot point LATEST at step {step}: no complete checkpoint at "
+            f"{_step_dir(root, step)}")
+    _write_pointer(root, step)
 
 
 def _resolve_step(root: str, step: int | None) -> int:

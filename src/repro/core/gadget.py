@@ -78,8 +78,10 @@ from repro.kernels.hinge_subgrad import ref as hinge_ref
 __all__ = [
     "GadgetConfig",
     "GadgetResult",
+    "SegmentResult",
     "SnapshotRing",
     "gadget_train",
+    "gadget_train_stream",
     "gadget_train_reference",
     "make_gadget_mesh_step",
     "transfer_stats",
@@ -88,6 +90,17 @@ __all__ = [
 
 
 class GadgetConfig(NamedTuple):
+    """Hyperparameters + execution knobs for one GADGET training run.
+
+    The paper's parameters (λ, minibatch size, Push-Sum rounds R, topology,
+    the two projection steps, the anytime ε) ride alongside execution
+    switches (`use_kernels`, `fused`, `sparse_schedule`) that change *how*
+    the same trajectory is computed, never *what* it computes — every path
+    is bit- or 1e-5-level parity-checked against the host-loop reference.
+    A config is hashable (NamedTuple) and is part of the jit cache key, so
+    reusing one across `gadget_train` / `gadget_train_stream` calls reuses
+    compiled executables."""
+
     lam: float = 1e-4            # λ — SVM regularization / learning parameter
     batch_size: int = 1          # local examples per sub-gradient estimate
     gossip_rounds: int = 4       # Push-Sum rounds per iteration (R)
@@ -149,6 +162,21 @@ class GadgetResult(NamedTuple):
     # (Pegasos' Theorem-2-style guarantee bounds the averaged iterate, not the
     # last one — same reason pegasos_train exposes w_avg)
     snapshots: SnapshotRing | None = None  # anytime export (snapshot_every=K)
+
+
+class SegmentResult(NamedTuple):
+    """One :func:`gadget_train_stream` segment — everything a live publisher
+    needs to export a servable model mid-training. ``W`` stays on device
+    (per-node (m, d) weights, useful for parity checks / resuming);
+    ``w_consensus`` is the host-side (d,) f32 data-weighted average —
+    exactly what :class:`~repro.serve.snapshot.Snapshot` wraps."""
+
+    iteration: int          # global iteration index reached (1-based count)
+    W: jax.Array            # (m, d) per-node weights after the segment
+    w_consensus: np.ndarray  # (d,) f32 consensus at the segment boundary
+    objective: float        # primal objective of w_consensus
+    epsilon: float          # max_i ‖Δŵ_i‖ across the segment
+    done: bool              # ε-converged or cfg.max_iters reached
 
 
 # Host↔device traffic instrumentation, read by benchmarks/gossip_device_bench.py:
@@ -348,6 +376,36 @@ def _one_iteration(cfg: GadgetConfig, m: int,
                         sparse_block_bound)
 
 
+def _trace_closures(cfg: GadgetConfig, X, y: jax.Array, n_counts: jax.Array,
+                    m: int, n_i: int, d: int):
+    """The two traced reductions every loop variant shares: ``objective_of(w)``
+    (masked full-data primal, dense or ELL gather-dot) and ``consensus_of(W)``
+    (data-weighted network average). Built identically by the while-loop
+    trainer, the segment trainer and the host reference so their traces agree
+    bit-for-bit."""
+    y_flat = y.reshape(m * n_i)
+    total_n = jnp.sum(n_counts)
+    valid_flat = _valid_row_mask(m, n_i, n_counts)
+    if isinstance(X, tuple):  # ELL planes: full-data pass as a gather-dot
+        cols_flat = X[0].reshape(m * n_i, -1)
+        vals_flat = X[1].reshape(m * n_i, -1)
+
+        def objective_of(w):
+            return obj.primal_objective_masked_ell(
+                w, cols_flat, vals_flat, y_flat, cfg.lam, valid_flat, total_n)
+    else:
+        X_flat = X.reshape(m * n_i, d)
+
+        def objective_of(w):
+            return obj.primal_objective_masked(
+                w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
+
+    def consensus_of(W):
+        return jnp.sum(W * n_counts[:, None], axis=0) / total_n
+
+    return objective_of, consensus_of
+
+
 def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
     """Key for the jit-factory caches: the traced program never reads
     cfg.seed (PRNG keys are runtime arguments), so multi-seed sweeps must
@@ -371,26 +429,9 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
     single post-termination sync."""
 
     def train(X, y, B_stack, data_key, mix_key, n_counts, W0, W_sum0):
-        y_flat = y.reshape(m * n_i)
-        total_n = jnp.sum(n_counts)
         # padded rows of non-uniform partitions are masked out of the trace
-        valid_flat = _valid_row_mask(m, n_i, n_counts)
-        if isinstance(X, tuple):  # ELL planes: full-data pass as a gather-dot
-            cols_flat = X[0].reshape(m * n_i, -1)
-            vals_flat = X[1].reshape(m * n_i, -1)
-
-            def objective_of(w):
-                return obj.primal_objective_masked_ell(
-                    w, cols_flat, vals_flat, y_flat, cfg.lam, valid_flat, total_n)
-        else:
-            X_flat = X.reshape(m * n_i, d)
-
-            def objective_of(w):
-                return obj.primal_objective_masked(
-                    w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
-
-        def consensus_of(W):
-            return jnp.sum(W * n_counts[:, None], axis=0) / total_n
+        objective_of, consensus_of = _trace_closures(cfg, X, y, n_counts,
+                                                     m, n_i, d)
 
         def step(carry, _):
             W, W_sum, t, snaps = carry
@@ -595,6 +636,117 @@ def gadget_train(
 
 
 # ---------------------------------------------------------------------------
+# Segmented streaming trainer — the live train-to-serve tap
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def _make_segment_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
+                        seg_len: int, sparse_block_bound: int | None = None):
+    """Jitted ``seg_len``-iteration training segment, compiled once per
+    (cfg, shape, seg_len): a ``lax.scan`` over the same ``_one_iteration``
+    body as the while-loop trainer, with the global iteration counter ``t0``
+    as a *runtime* argument. Every segment of a run — tail included — reuses
+    this one executable: iterations past ``cfg.max_iters`` are masked inactive
+    under ``lax.cond`` (exactly the while-loop trainer's tail handling), and
+    because the PRNG streams are keyed on the global ``t``
+    (``fold_in(data_key, t)``), a segmented run's trajectory is bit-identical
+    to one uninterrupted ``gadget_train`` call."""
+
+    def segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t0):
+        objective_of, consensus_of = _trace_closures(cfg, X, y, n_counts,
+                                                     m, n_i, d)
+
+        def step(carry, _):
+            W, W_sum, t = carry
+            active = t <= cfg.max_iters
+            W, W_sum = jax.lax.cond(
+                active,
+                lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                         data_key, mix_key, B_stack, *a,
+                                         sparse_block_bound=sparse_block_bound),
+                lambda a: (a[0], a[1]),
+                (W, W_sum, t),
+            )
+            return (W, W_sum, jnp.where(active, t + 1, t)), None
+
+        W_prev = W
+        (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t0), None,
+                                        length=seg_len)
+        eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
+        w_cons = consensus_of(W)
+        return W, W_sum, t, w_cons, objective_of(w_cons), eps
+
+    donate = (6, 7) if jax.default_backend() != "cpu" else ()
+    return jax.jit(segment, donate_argnums=donate)
+
+
+def gadget_train_stream(
+    X_parts: jax.Array,
+    y_parts: jax.Array,
+    cfg: GadgetConfig = GadgetConfig(),
+    *,
+    segment_iters: int,
+    n_counts=None,
+):
+    """Generator twin of :func:`gadget_train`: yield a :class:`SegmentResult`
+    every ``segment_iters`` iterations while training stays device-resident.
+
+    This is the live train-to-serve tap (``repro.serve.publisher`` runs it in
+    a background thread): the trajectory is **bit-identical** to a single
+    ``gadget_train`` call on the same config — segments reuse one compiled
+    executable with the global iteration counter as a runtime argument, and
+    all PRNG draws key on that global counter — but control returns to the
+    host at every segment boundary, where the current consensus model can be
+    published. ``segment_iters`` is also the ε-check cadence (it plays the
+    role ``cfg.check_every`` plays in ``gadget_train``); the stream ends after
+    the segment where ``ε < cfg.epsilon`` or ``cfg.max_iters`` is reached
+    (that last result carries ``done=True``). Accepts the same dense
+    (m, n_i, d) / ``EllPartitions`` data and ``n_counts`` conventions as
+    ``gadget_train``. One host sync per segment, by construction.
+    """
+    _validate_topology(cfg)
+    if int(segment_iters) < 1:
+        raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
+    if cfg.max_iters <= 0:
+        raise ValueError("gadget_train_stream needs cfg.max_iters > 0 "
+                         "(use gadget_train for the zero-iteration case)")
+    X, m, n_i, d, dtype = _unpack_partitions(X_parts)
+    cfg = _resolve_kernels(cfg)
+    y = jnp.asarray(y_parts)
+    n_counts = _partition_counts(y, n_counts)
+    data_key, mix_key = _stream_keys(cfg.seed)
+    sparse_block_bound = _sparse_block_bound(cfg, X_parts, X)
+
+    if cfg.topology == "random":
+        B_stack = None
+    else:
+        stack = (topo.build_product_stack(cfg.topology, m, cfg.gossip_rounds)
+                 if cfg.fused else topo.build_matrix_stack(cfg.topology, m))
+        B_stack = jnp.asarray(stack)
+        transfer_stats["matrix_uploads"] += 1  # one upload, same as gadget_train
+
+    segment = _make_segment_train(_cache_cfg(cfg), m, n_i, d,
+                                  int(segment_iters), sparse_block_bound)
+    W = jnp.zeros((m, d), dtype)
+    W_sum = jnp.zeros((m, d), dtype)
+    t = jnp.int32(1)
+    while True:
+        out = segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t)
+        W, W_sum, t, w_cons, objective, eps = jax.block_until_ready(out)
+        transfer_stats["host_syncs"] += 1  # one sync per segment boundary
+        iteration = int(t) - 1
+        eps_f = float(eps)
+        done = eps_f < cfg.epsilon or iteration >= cfg.max_iters
+        yield SegmentResult(iteration=iteration, W=W,
+                            w_consensus=np.asarray(w_cons),
+                            objective=float(objective), epsilon=eps_f,
+                            done=done)
+        if done:
+            return
+
+
+# ---------------------------------------------------------------------------
 # Host-loop reference (seed semantics) — parity oracle and transfer baseline
 # ---------------------------------------------------------------------------
 
@@ -651,22 +803,8 @@ def gadget_train_reference(
     R = cfg.gossip_rounds
 
     y = jnp.asarray(y_parts)
-    y_flat = y.reshape(m * n_i)
     total_n = jnp.sum(n_counts)
-    valid_flat = _valid_row_mask(m, n_i, n_counts)
-    if isinstance(X, tuple):
-        cols_flat = X[0].reshape(m * n_i, -1)
-        vals_flat = X[1].reshape(m * n_i, -1)
-
-        def objective_of(w):
-            return obj.primal_objective_masked_ell(
-                w, cols_flat, vals_flat, y_flat, cfg.lam, valid_flat, total_n)
-    else:
-        X_flat = X.reshape(m * n_i, d)
-
-        def objective_of(w):
-            return obj.primal_objective_masked(
-                w, X_flat, y_flat, cfg.lam, valid_flat, total_n)
+    objective_of, _ = _trace_closures(cfg, X, y, n_counts, m, n_i, d)
     one_iter = _make_reference_step(_cache_cfg(cfg), m, n_i, d,
                                     _sparse_block_bound(cfg, X_parts, X))
     snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)

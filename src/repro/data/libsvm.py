@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.sparse.formats import CSR
 
-__all__ = ["load_libsvm", "load_libsvm_csr", "iter_libsvm_chunks"]
+__all__ = ["load_libsvm", "load_libsvm_csr", "iter_libsvm_chunks",
+           "dump_libsvm"]
 
 
 def _canonical_labels(y: np.ndarray, dtype) -> np.ndarray:
@@ -182,3 +183,34 @@ def load_libsvm(path: str, n_features: int | None = None, dtype=np.float32,
     """
     csr, y = load_libsvm_csr(path, n_features, dtype, strict=strict)
     return csr.to_dense(dtype), y
+
+
+def dump_libsvm(path: str, X, y) -> None:
+    """Write ``(X, y)`` as LibSVM text (`label idx:val ...`, 1-based indices).
+
+    ``X``: dense (N, d) array **or** anything CSR-shaped (``data`` /
+    ``indices`` / ``indptr`` attributes — ``repro.sparse.CSR``,
+    scipy.sparse.csr_matrix); only nonzeros are written either way, so the
+    output round-trips through :func:`iter_libsvm_chunks` /
+    :func:`load_libsvm_csr` structure-exactly. ``y``: (N,) labels written
+    as integers when integral (the {-1,+1} convention) else as floats.
+    Exists so benchmarks/tests can stage a real on-disk streaming source
+    (the anytime bench's replica reads its queries this way) without
+    shipping dataset files in the repo."""
+    if hasattr(X, "indptr"):
+        data = np.asarray(X.data)
+        indices = np.asarray(X.indices)
+        indptr = np.asarray(X.indptr)
+        rows = [(indices[indptr[i]:indptr[i + 1]],
+                 data[indptr[i]:indptr[i + 1]]) for i in range(len(indptr) - 1)]
+    else:
+        X = np.asarray(X)
+        rows = [(np.nonzero(r)[0], r[np.nonzero(r)[0]]) for r in X]
+    y = np.asarray(y)
+    if len(rows) != len(y):
+        raise ValueError(f"X has {len(rows)} rows but y has {len(y)} labels")
+    with open(path, "w") as fh:
+        for (idxs, vals), lab in zip(rows, y):
+            lab_s = str(int(lab)) if float(lab).is_integer() else repr(float(lab))
+            feats = " ".join(f"{int(i) + 1}:{v:.9g}" for i, v in zip(idxs, vals))
+            fh.write(f"{lab_s} {feats}\n".rstrip() + "\n")

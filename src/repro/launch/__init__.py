@@ -1,3 +1,10 @@
-"""Launch layer: production meshes, sharding plans, step builders, dry-run,
-and the train/serve drivers. dryrun.py must be executed as its own process
+"""Launch layer for the *transformer* seed scaffolding: production meshes,
+sharding plans, step builders, dry-run, and token-level train/serve drivers
+(``launch.train`` / ``launch.serve`` decode tokens, not SVM scores).
+
+This package predates the GADGET SVM work and is kept for architecture
+dry-runs and the gossip-consensus-for-deep-nets experiments. The SVM serving
+path — anytime snapshots, checkpoint publishing, hot-swapping ``SvmServer``,
+bucketed sparse queries — lives in ``repro.serve`` (see
+``docs/ARCHITECTURE.md``). dryrun.py must be executed as its own process
 (it forces 512 placeholder devices before jax init)."""

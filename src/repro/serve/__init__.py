@@ -1,18 +1,23 @@
-"""Anytime serving subsystem: snapshot → checkpoint → score.
+"""Anytime serving subsystem: snapshot → checkpoint → score, live.
 
 GADGET's consensus model is usable at every iteration; this package is the
 half of the system that *uses* it. ``snapshot`` decodes the training loop's
 on-device export ring and wires it into versioned ``repro.checkpoint``
-exports (f32 or int8+scale); ``batcher`` buckets ragged sparse queries into a
-small fixed set of pad shapes (static shapes ⇒ bounded compile count);
+exports (f32 or int8+scale); ``publisher`` runs training in a background
+thread and flushes those exports continuously (monotone versions, atomic
+rename, a ``LATEST`` pointer); ``batcher`` buckets ragged sparse queries into
+a small fixed set of pad shapes (static shapes ⇒ bounded compile count);
 ``engine`` is the ``SvmServer`` scoring path over the fused dense and
-query-side touched-block sparse predict kernels, plus the ``shard_map``
-batch-parallel scorer. ``benchmarks/serve_bench.py`` measures and asserts
-the whole pipeline.
+query-side touched-block sparse predict kernels — with ``watch`` /
+``maybe_reload`` hot-swapping the weight plane between drains without
+recompiling — plus the ``shard_map`` batch-parallel scorer.
+``benchmarks/serve_bench.py`` and ``benchmarks/anytime_bench.py`` measure
+and assert the whole pipeline; ``docs/ARCHITECTURE.md`` walks it end to end.
 """
 from repro.serve.batcher import (Bucket, MicroBatcher, bucket_ladder,  # noqa: F401
                                  calibrate_buckets)
 from repro.serve.engine import SvmServer, make_mesh_scorer  # noqa: F401
+from repro.serve.publisher import TrainPublisher  # noqa: F401
 from repro.serve.snapshot import (Snapshot, dequantize_int8,  # noqa: F401
                                   from_checkpoint, latest, quantize_int8,
                                   snapshots_from, to_checkpoint)

@@ -150,11 +150,32 @@ class MicroBatcher:
         self._queue.append(_Request(rid, cols, vals, self.t_now()))
         return rid
 
+    def submit_csr(self, csr) -> list[int]:
+        """Enqueue every row of a CSR chunk; returns the request ids in row
+        order. The streaming ingestion path: feed
+        ``data.libsvm.iter_libsvm_chunks`` chunks straight in, so a serving
+        replica never materializes its query set — each row's (cols, vals)
+        slice views the chunk's arrays (copied into the pad planes only at
+        drain). ``csr`` is anything with CSR attributes ``data`` / ``indices``
+        / ``indptr`` (``repro.data.libsvm.CSR``, scipy.sparse.csr_matrix);
+        rows whose nnz exceeds the widest bucket raise at submit, before
+        anything is enqueued for that row."""
+        indptr = np.asarray(csr.indptr)
+        indices = np.asarray(csr.indices, np.int32)
+        data = np.asarray(csr.data, np.float32)
+        return [
+            self.submit(indices[indptr[i]:indptr[i + 1]],
+                        data[indptr[i]:indptr[i + 1]])
+            for i in range(len(indptr) - 1)
+        ]
+
     def t_now(self) -> float:
+        """Current time on the batcher's clock (injectable for tests)."""
         return self.clock()
 
     @property
     def pending(self) -> int:
+        """Number of submitted-but-undrained requests in the queue."""
         return len(self._queue)
 
     def drain(self, score_fn) -> dict[int, tuple[np.ndarray, np.ndarray]]:

@@ -21,6 +21,17 @@ batcher's ≤ len(buckets) guarantee is asserted against
 (``benchmarks/serve_bench.py``). The same stats dict tracks blocks visited by
 the sparse path vs the dense sweep equivalent — the serving twin of the
 training bench's ``blocks_visited_ratio``.
+
+Live updates: the compiled executables take the weight plane as a *runtime*
+argument, so :meth:`SvmServer.swap_weights` replaces the model under load
+without invalidating the jit cache — same shapes, same executables,
+``distinct_shapes`` stays flat across swaps (the hot-swap tests pin this).
+:meth:`SvmServer.watch` + :meth:`SvmServer.maybe_reload` turn that into the
+consuming half of the live train-to-serve loop: between batcher drains the
+server polls the checkpoint root's ``LATEST`` pointer
+(``repro.checkpoint.read_latest``) and hot-swaps whenever the version moved —
+forward when :class:`~repro.serve.publisher.TrainPublisher` publishes,
+backward when an operator rolls back via ``checkpoint.point_latest``.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.kernels.hinge_subgrad import ops as hinge_ops
 from repro.kernels.hinge_subgrad import ref as hinge_ref
 from repro.serve import snapshot as snap_mod
@@ -69,10 +81,12 @@ class SvmServer:
         self.use_kernels = bool(use_kernels)
         self._W_dev = jnp.asarray(W)
         self._compiled: dict[tuple, object] = {}
+        self._watch_root: str | None = None
+        self._watch_step: int | None = None
         self._stats = {
             "queries": 0, "batches": 0, "sparse_batches": 0,
             "blocks_visited": 0, "dense_block_equivalent": 0,
-            "cap_overflows": 0,
+            "cap_overflows": 0, "swaps": 0, "reload_errors": 0,
         }
 
     # ------------------------------------------------------------- loading
@@ -89,6 +103,73 @@ class SvmServer:
         quantized weights are dequantized once here; scoring runs f32)."""
         w, extra = snap_mod.from_checkpoint(root, step)
         return cls(w, meta=extra, **kw)
+
+    @classmethod
+    def watch(cls, root: str, **kw) -> "SvmServer":
+        """Serve the checkpoint the root's ``LATEST`` pointer designates and
+        keep watching it: the returned server's :meth:`maybe_reload` polls
+        the pointer and hot-swaps when the published version moves (forward
+        — a live :class:`~repro.serve.publisher.TrainPublisher` — or
+        backward — an operator rollback via ``checkpoint.point_latest``).
+        Call ``maybe_reload()`` between batcher drains; it is cheap (one
+        small file read) when nothing changed."""
+        step = ckpt.read_latest(root)
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoints under {root}")
+        w, extra = snap_mod.from_checkpoint(root, step)
+        srv = cls(w, meta=extra, **kw)
+        srv._watch_root = root
+        srv._watch_step = step
+        return srv
+
+    # ------------------------------------------------------------ hot swap
+
+    def swap_weights(self, W, *, meta: dict | None = None) -> None:
+        """Replace the served model in place, under load, without recompiling.
+
+        ``W`` must match the current model's shape — (d,) vs (C, d) and both
+        extents — because shapes key the compiled-executable cache; the cache
+        itself is untouched (every executable takes the weight plane as a
+        runtime argument), so ``stats()["distinct_shapes"]`` is invariant
+        across swaps and in-flight batches simply score against whichever
+        plane was installed when their launch read it. A shape change is a
+        different model: build a new server. ``meta`` (e.g. the new
+        checkpoint's manifest ``extra``) replaces :attr:`meta` when given."""
+        W = np.asarray(W, np.float32)
+        if W.shape != self.W.shape:
+            raise ValueError(
+                f"hot swap must preserve the weight shape {self.W.shape} "
+                f"(compiled executables are shape-keyed), got {W.shape}")
+        self.W = W
+        self._W_dev = jnp.asarray(W)
+        if meta is not None:
+            self.meta = dict(meta)
+        self._stats["swaps"] += 1
+
+    def maybe_reload(self) -> int | None:
+        """Poll the watched root once; hot-swap if ``LATEST`` moved.
+
+        Returns the newly-installed step when a swap happened, None when the
+        pointer is unchanged (the overwhelmingly common case — one small
+        file read, no array I/O). Any failure mid-reload (pointer damage, a
+        checkpoint deleted between pointer read and restore, a bad export)
+        counts ``stats()["reload_errors"]`` and keeps serving the current
+        model — a live replica must never wedge on a bad publish."""
+        if self._watch_root is None:
+            raise RuntimeError(
+                "server is not watching a checkpoint root — construct it "
+                "with SvmServer.watch(root)")
+        try:
+            step = ckpt.read_latest(self._watch_root)
+            if step is None or step == self._watch_step:
+                return None
+            w, extra = snap_mod.from_checkpoint(self._watch_root, step)
+            self.swap_weights(w, meta=extra)
+            self._watch_step = step
+            return step
+        except Exception:
+            self._stats["reload_errors"] += 1
+            return None
 
     # ------------------------------------------------------------- scoring
 
@@ -190,6 +271,10 @@ class SvmServer:
     # --------------------------------------------------------------- stats
 
     def stats(self) -> dict:
+        """Serving counters: queries/batches served, ``distinct_shapes``
+        (jit-cache size — the compile count asserted flat across hot swaps),
+        ``swaps`` / ``reload_errors`` from the watch path, and the sparse
+        blocks-visited accounting vs a dense sweep."""
         s = dict(self._stats)
         s["distinct_shapes"] = len(self._compiled)
         s["blocks_visited_ratio"] = (

@@ -1,0 +1,115 @@
+"""Live checkpoint publisher: train in the background, flush every segment.
+
+The producing half of the live train-to-serve loop. :class:`TrainPublisher`
+runs :func:`repro.core.gadget.gadget_train_stream` — trajectory bit-identical
+to one ``gadget_train`` call — in a daemon thread, and at every segment
+boundary exports the current consensus model through
+:func:`repro.serve.snapshot.to_checkpoint`:
+
+  * **versioned** — the checkpoint step is the global training iteration, so
+    versions are strictly monotone across a run;
+  * **atomic** — ``repro.checkpoint`` stages in a temp dir and publishes via
+    one ``os.rename``, so a concurrently-polling server never sees a torn
+    checkpoint;
+  * **discoverable** — each save advances the root's ``LATEST`` pointer,
+    which ``SvmServer.watch(root).maybe_reload()`` polls between drains.
+
+Publish cadence is ``segment_iters`` (training iterations per checkpoint);
+``keep=0`` (the default here, unlike the offline exporter) retains every
+version so a reader can never race a rotation and rollback targets survive.
+Exceptions in the training thread are captured, surfaced by :meth:`join`,
+and flagged via :attr:`error` — the publisher never kills the serving
+process that owns it.
+"""
+from __future__ import annotations
+
+import threading
+
+from repro.core.gadget import GadgetConfig, SegmentResult, gadget_train_stream
+from repro.serve.snapshot import Snapshot, to_checkpoint
+
+__all__ = ["TrainPublisher"]
+
+
+class TrainPublisher:
+    """Background trainer that publishes a servable checkpoint per segment.
+
+    ``X_parts``/``y_parts``/``cfg``/``n_counts`` follow the
+    ``gadget_train`` conventions (dense (m, n_i, d) or ``EllPartitions``
+    planes; (m, n_i) ±1 labels with 0 on pad rows). ``root`` is the
+    checkpoint directory the serving side watches. ``segment_iters`` sets
+    the publish cadence; ``quantize`` (None | "int8") and ``keep`` pass
+    through to :func:`~repro.serve.snapshot.to_checkpoint`.
+
+    Lifecycle: ``start()`` launches the daemon thread and returns ``self``;
+    ``join()`` blocks until training converges (or ``cfg.max_iters``) and
+    returns the final :class:`~repro.core.gadget.SegmentResult`, re-raising
+    any training-thread exception. ``published`` grows by one step number
+    per flushed checkpoint (monotone — append-only under the GIL, safe to
+    read concurrently); ``wait(timeout)`` parks on the done event without
+    consuming the error.
+    """
+
+    def __init__(self, X_parts, y_parts, cfg: GadgetConfig = GadgetConfig(), *,
+                 root: str, segment_iters: int, n_counts=None,
+                 quantize: str | None = None, keep: int = 0):
+        self.root = root
+        self.cfg = cfg
+        self.segment_iters = int(segment_iters)
+        self.quantize = quantize
+        self.keep = int(keep)
+        self._data = (X_parts, y_parts, n_counts)
+        self.published: list[int] = []
+        self.final: SegmentResult | None = None
+        self.error: BaseException | None = None
+        self._done = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="gadget-train-publisher")
+
+    # ----------------------------------------------------------- lifecycle
+
+    def start(self) -> "TrainPublisher":
+        """Launch the training thread (idempotence not attempted — one
+        publisher is one training run). Returns ``self`` for chaining."""
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        X_parts, y_parts, n_counts = self._data
+        try:
+            for seg in gadget_train_stream(X_parts, y_parts, self.cfg,
+                                           segment_iters=self.segment_iters,
+                                           n_counts=n_counts):
+                self._publish(seg)
+                self.final = seg
+        except BaseException as e:  # surfaced via join()/error, never lost
+            self.error = e
+        finally:
+            self._done.set()
+
+    def _publish(self, seg: SegmentResult) -> None:
+        snap = Snapshot(iteration=seg.iteration, w=seg.w_consensus,
+                        objective=seg.objective)
+        to_checkpoint(snap, self.root, quantize=self.quantize,
+                      keep=self.keep, lam=self.cfg.lam)
+        self.published.append(seg.iteration)
+
+    def wait(self, timeout: float | None = None) -> bool:
+        """Block until training finishes (or ``timeout`` seconds); True when
+        done. Does not raise the captured error — use :meth:`join` for that."""
+        return self._done.wait(timeout)
+
+    def join(self, timeout: float | None = None) -> SegmentResult | None:
+        """Join the training thread and return the final segment result.
+
+        Re-raises a training-thread exception here, on the caller's thread.
+        Returns None only when ``timeout`` expired before completion."""
+        self._thread.join(timeout)
+        if self.error is not None:
+            raise RuntimeError("training thread failed") from self.error
+        return self.final if self._done.is_set() else None
+
+    @property
+    def running(self) -> bool:
+        """True while the training thread is alive."""
+        return self._thread.is_alive()

@@ -50,10 +50,12 @@ class Snapshot:
 
     @property
     def d(self) -> int:
+        """Feature dimension of the snapshotted weights (last axis of w)."""
         return self.w.shape[-1]
 
     @property
     def n_classes(self) -> int:
+        """1 for a binary (d,) snapshot, C for a multiclass (C, d) one."""
         return 1 if self.w.ndim == 1 else self.w.shape[0]
 
 

@@ -1,0 +1,330 @@
+"""The live train-to-serve loop, end to end and at its edges: segmented
+streaming trainer vs gadget_train (bit-identical trajectories), background
+publisher (monotone versions, LATEST pointer discipline), hot-swap under load
+(compile count flat, no dropped in-flight requests), torn-checkpoint
+invisibility, version skip + rollback, and the streaming CSR query path
+(dump_libsvm → iter_libsvm_chunks → submit_csr round trip)."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.checkpoint import io as ckpt_io
+from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_stream
+from repro.data.libsvm import dump_libsvm, iter_libsvm_chunks
+from repro.serve import (MicroBatcher, SvmServer, TrainPublisher,
+                         bucket_ladder, from_checkpoint)
+
+
+def _toy_parts(m=3, n_i=20, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    X = rng.normal(size=(m * n_i, d)).astype(np.float32)
+    y = np.sign(X @ w_true).astype(np.float32)
+    return jnp.asarray(X.reshape(m, n_i, d)), jnp.asarray(y.reshape(m, n_i))
+
+
+def _toy_cfg(max_iters=24, **kw):
+    base = dict(lam=1e-3, batch_size=3, gossip_rounds=2, max_iters=max_iters,
+                check_every=10, epsilon=0.0, use_kernels=False)
+    base.update(kw)
+    return GadgetConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Segmented streaming trainer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("segment_iters", [5, 7, 24, 40])
+def test_stream_trajectory_bitmatches_gadget_train(segment_iters):
+    """Segment boundaries (divisor, non-divisor, exact, over-length) never
+    perturb the trajectory: final weights bit-match one gadget_train call."""
+    X, y = _toy_parts()
+    cfg = _toy_cfg()
+    ref = gadget_train(X, y, cfg)
+    segs = list(gadget_train_stream(X, y, cfg, segment_iters=segment_iters))
+    assert segs[-1].done and not any(s.done for s in segs[:-1])
+    assert segs[-1].iteration == ref.iters
+    assert bool(jnp.all(segs[-1].W == ref.W))
+    np.testing.assert_array_equal(segs[-1].w_consensus,
+                                  np.asarray(ref.w_consensus))
+    its = [s.iteration for s in segs]
+    assert its == sorted(its) and len(set(its)) == len(its)  # monotone
+
+
+def test_stream_epsilon_stop_and_validation():
+    X, y = _toy_parts()
+    # epsilon huge -> first segment converges and is marked done
+    segs = list(gadget_train_stream(X, y, _toy_cfg(epsilon=1e9),
+                                    segment_iters=4))
+    assert len(segs) == 1 and segs[0].done and segs[0].iteration == 4
+    with pytest.raises(ValueError):
+        next(gadget_train_stream(X, y, _toy_cfg(), segment_iters=0))
+    with pytest.raises(ValueError):
+        next(gadget_train_stream(X, y, _toy_cfg(max_iters=0), segment_iters=4))
+
+
+# ---------------------------------------------------------------------------
+# Publisher + LATEST pointer
+# ---------------------------------------------------------------------------
+
+
+def test_publisher_publishes_monotone_versions(tmp_path):
+    X, y = _toy_parts()
+    root = str(tmp_path / "ckpts")
+    pub = TrainPublisher(X, y, _toy_cfg(max_iters=20), root=root,
+                         segment_iters=5).start()
+    final = pub.join()
+    assert pub.error is None and not pub.running
+    assert pub.published == [5, 10, 15, 20] == sorted(pub.published)
+    assert final.iteration == 20 and final.done
+    assert ckpt.read_latest(root) == 20
+    # every published version is a complete, loadable serving export
+    for step in pub.published:
+        w, extra = from_checkpoint(root, step)
+        assert extra["iteration"] == step and w.shape == (32,)
+        assert extra["lam"] == pytest.approx(1e-3)
+    # keep=0 retained every version (no rotation races for readers)
+    assert ckpt.latest_step(root) == 20 and len(pub.published) == 4
+
+
+def test_publisher_surfaces_training_errors(tmp_path):
+    X, y = _toy_parts()
+    bad = _toy_cfg()._replace(topology="not-a-topology")
+    pub = TrainPublisher(X, y, bad, root=str(tmp_path), segment_iters=5).start()
+    assert pub.wait(timeout=30)
+    assert pub.error is not None
+    with pytest.raises(RuntimeError):
+        pub.join()
+
+
+def test_save_advances_pointer_monotonically(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 7, {"w": np.ones(4, np.float32)}, keep=0)
+    ckpt.save(root, 9, {"w": np.ones(4, np.float32)}, keep=0)
+    assert ckpt.read_latest(root) == 9
+    # saving an *older* step never moves the pointer backward
+    ckpt.save(root, 3, {"w": np.ones(4, np.float32)}, keep=0)
+    assert ckpt.read_latest(root) == 9
+    # explicit rollback does
+    ckpt.point_latest(root, 3)
+    assert ckpt.read_latest(root) == 3
+    with pytest.raises(FileNotFoundError):
+        ckpt.point_latest(root, 555)
+
+
+def test_corrupt_pointer_falls_back_to_scan(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 4, {"w": np.ones(4, np.float32)})
+    with open(os.path.join(root, "LATEST"), "w") as fh:
+        fh.write("not-a-step\n")
+    assert ckpt.read_latest(root) == 4  # unparseable pointer -> scan
+    with open(os.path.join(root, "LATEST"), "w") as fh:
+        fh.write("999\n")
+    assert ckpt.read_latest(root) == 4  # dangling pointer -> scan
+
+
+# ---------------------------------------------------------------------------
+# Torn checkpoints are invisible
+# ---------------------------------------------------------------------------
+
+
+def _tear(root, step, keep_file):
+    """Fabricate a torn step dir: only ``keep_file`` of the two files."""
+    path = os.path.join(root, f"step_{step:09d}")
+    os.makedirs(path)
+    if keep_file == "manifest":
+        with open(os.path.join(path, "manifest.json"), "w") as fh:
+            json.dump({"version": 1, "step": step, "n_leaves": 1}, fh)
+    elif keep_file == "arrays":
+        np.savez(os.path.join(path, "arrays.npz"), leaf_0=np.ones(4))
+    return path
+
+
+@pytest.mark.parametrize("keep_file", ["manifest", "arrays", "neither"])
+def test_torn_checkpoint_never_loaded(tmp_path, keep_file):
+    root = str(tmp_path)
+    ckpt.save(root, 5, {"w": np.ones(4, np.float32)})
+    _tear(root, 8, keep_file)  # newer but torn
+    assert ckpt.latest_step(root) == 5
+    assert ckpt.read_latest(root) == 5
+    with pytest.raises(FileNotFoundError):
+        ckpt.point_latest(root, 8)  # cannot aim the pointer at a torn dir
+
+
+def test_staging_dirs_invisible_to_discovery(tmp_path):
+    root = str(tmp_path)
+    ckpt.save(root, 2, {"w": np.ones(4, np.float32)})
+    os.makedirs(os.path.join(root, ".tmp_ckpt_inflight"))
+    np.savez(os.path.join(root, ".tmp_ckpt_inflight", "arrays.npz"),
+             leaf_0=np.ones(4))
+    assert ckpt.latest_step(root) == 2
+    assert ckpt.read_latest(root) == 2
+
+
+# ---------------------------------------------------------------------------
+# Hot swap: watch / maybe_reload / swap_weights
+# ---------------------------------------------------------------------------
+
+
+def _publish_run(tmp_path, max_iters=20, segment_iters=5):
+    X, y = _toy_parts()
+    root = str(tmp_path / "ckpts")
+    pub = TrainPublisher(X, y, _toy_cfg(max_iters=max_iters), root=root,
+                         segment_iters=segment_iters).start()
+    pub.join()
+    return root, pub
+
+
+def test_watch_skip_and_rollback(tmp_path):
+    root, pub = _publish_run(tmp_path)
+    ckpt.point_latest(root, pub.published[0])
+    srv = SvmServer.watch(root, use_kernels=False)
+    assert srv.meta["iteration"] == pub.published[0]
+    assert srv.maybe_reload() is None  # unchanged pointer -> no-op
+    # version skip: jump straight past intermediate versions to the newest
+    ckpt.point_latest(root, pub.published[-1])
+    assert srv.maybe_reload() == pub.published[-1]
+    assert srv.meta["iteration"] == pub.published[-1]
+    # rollback: pointer moves backward, server follows
+    ckpt.point_latest(root, pub.published[1])
+    assert srv.maybe_reload() == pub.published[1]
+    assert srv.stats()["swaps"] == 2 and srv.stats()["reload_errors"] == 0
+
+
+def test_maybe_reload_survives_bad_checkpoint(tmp_path):
+    root, pub = _publish_run(tmp_path)
+    srv = SvmServer.watch(root, use_kernels=False)
+    w_before = srv.W.copy()
+    # a structurally-complete dir with garbage arrays: discovery accepts it,
+    # restore fails — the server must keep serving and count the error
+    path = os.path.join(root, "step_000000099")
+    os.makedirs(path)
+    with open(os.path.join(path, "manifest.json"), "w") as fh:
+        fh.write("{ not json")
+    with open(os.path.join(path, "arrays.npz"), "w") as fh:
+        fh.write("not an npz")
+    ckpt_io._write_pointer(root, 99)
+    assert srv.maybe_reload() is None
+    assert srv.stats()["reload_errors"] == 1
+    np.testing.assert_array_equal(srv.W, w_before)
+    # a later good publish recovers the watcher
+    ckpt.point_latest(root, pub.published[0])
+    assert srv.maybe_reload() == pub.published[0]
+
+
+def test_unwatched_server_refuses_maybe_reload():
+    srv = SvmServer(np.zeros(8, np.float32), use_kernels=False)
+    with pytest.raises(RuntimeError):
+        srv.maybe_reload()
+
+
+def test_swap_rejects_shape_change():
+    srv = SvmServer(np.zeros(8, np.float32), use_kernels=False)
+    with pytest.raises(ValueError):
+        srv.swap_weights(np.zeros(16, np.float32))
+    with pytest.raises(ValueError):
+        srv.swap_weights(np.zeros((2, 8), np.float32))
+
+
+def test_swap_under_load_no_recompile_no_drops(tmp_path):
+    """The acceptance-criteria test: ≥2 hot swaps under live traffic leave
+    ``distinct_shapes`` (the measured compile count) unchanged, and every
+    in-flight request is answered exactly once."""
+    d = 32
+    root, pub = _publish_run(tmp_path)
+    ckpt.point_latest(root, pub.published[0])
+    srv = SvmServer.watch(root, use_kernels=False, blk_d=16)
+    mb = MicroBatcher(buckets=bucket_ladder(12, rows=4, min_k=4, d=d, blk_d=16))
+    rng = np.random.default_rng(1)
+
+    def some_queries(n):
+        out = []
+        for _ in range(n):
+            nnz = int(rng.integers(1, 9))
+            cols = rng.choice(d, size=nnz, replace=False).astype(np.int32)
+            out.append((cols, rng.normal(size=nnz).astype(np.float32)))
+        return out
+
+    answered = set()
+    submitted = []
+    # warm every rung's shape once, then measure the compile count
+    for b in mb.buckets:
+        cols = rng.choice(d, size=b.k, replace=False).astype(np.int32)
+        submitted.append(mb.submit(cols, rng.normal(size=b.k)
+                                   .astype(np.float32)))
+    for cols, vals in some_queries(6):
+        submitted.append(mb.submit(cols, vals))
+    answered |= set(mb.drain(srv.scorer_for()))
+    shapes_before = srv.stats()["distinct_shapes"]
+    assert shapes_before >= 1
+
+    steps = pub.published[1:]  # >= 2 further versions to swap through
+    assert len(steps) >= 2
+    for step in steps:
+        # requests in flight *across* the swap: submitted before, drained after
+        for cols, vals in some_queries(5):
+            submitted.append(mb.submit(cols, vals))
+        ckpt.point_latest(root, step)
+        assert srv.maybe_reload() == step
+        out = mb.drain(srv.scorer_for())
+        assert not (answered & set(out))  # no rid answered twice
+        answered |= set(out)
+
+    assert srv.stats()["swaps"] == len(steps)
+    assert srv.stats()["distinct_shapes"] == shapes_before  # no recompiles
+    assert answered == set(submitted)  # no request dropped
+    assert mb.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Streaming query path: dump -> chunks -> submit_csr
+# ---------------------------------------------------------------------------
+
+
+def test_dump_iter_submit_csr_roundtrip(tmp_path):
+    d = 32
+    rng = np.random.default_rng(2)
+    Xq = rng.normal(size=(13, d)).astype(np.float32)
+    Xq[np.abs(Xq) < 1.1] = 0.0  # ragged sparsity, incl. possibly-empty rows
+    w = rng.normal(size=d).astype(np.float32)
+    yq = np.where(Xq @ w >= 0, 1.0, -1.0).astype(np.float32)
+    path = str(tmp_path / "q.svm")
+    dump_libsvm(path, Xq, yq)
+
+    srv = SvmServer(w, use_kernels=False, blk_d=16)
+    mb = MicroBatcher(buckets=bucket_ladder(d, rows=4, d=d, blk_d=16))
+    got_scores, got_labels = {}, []
+    row = 0
+    for csr, labels in iter_libsvm_chunks(path, d, chunk_rows=5):
+        assert labels.shape[0] == csr.shape[0] <= 5
+        rids = mb.submit_csr(csr)
+        out = mb.drain(srv.scorer_for())
+        assert set(rids) <= set(out)
+        for rid in rids:
+            got_scores[row] = out[rid][0]
+            row += 1
+        got_labels.extend(labels)
+    assert row == 13
+    # scores match the dense model applied to the original rows
+    want = Xq @ w
+    got = np.array([float(np.asarray(got_scores[i]).reshape(())) for i in range(13)])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_labels), yq)
+
+
+def test_submit_csr_rejects_oversize_rows():
+    mb = MicroBatcher(buckets=bucket_ladder(4, rows=2, min_k=2, d=64))
+
+    class FatCSR:
+        data = np.ones(8, np.float32)
+        indices = np.arange(8, dtype=np.int32)
+        indptr = np.array([0, 8], np.int64)
+
+    with pytest.raises(ValueError):
+        mb.submit_csr(FatCSR())
+    assert mb.pending == 0  # nothing half-enqueued

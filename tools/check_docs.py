@@ -1,0 +1,72 @@
+"""Execute the documented quickstarts so the docs cannot rot.
+
+Extracts every fenced ```python block from README.md and
+docs/ARCHITECTURE.md and exec's each one in a fresh namespace (CI runs this
+in the test job with the package installed). Blocks tagged
+```python no-run   are extracted but skipped — for illustrative fragments
+that are not self-contained.
+
+Usage:
+    PYTHONPATH=src python tools/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+
+DOCS = ["README.md", "docs/ARCHITECTURE.md"]
+FENCE = re.compile(r"^```python[ \t]*(?P<tag>no-run)?[ \t]*$")
+
+
+def extract_blocks(path: str) -> list[tuple[int, str, bool]]:
+    """Return (start_line, source, runnable) for every python fence in path."""
+    blocks = []
+    lines = open(path, encoding="utf-8").read().splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE.match(lines[i])
+        if m:
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and lines[i].rstrip() != "```":
+                body.append(lines[i])
+                i += 1
+            blocks.append((start + 1, "\n".join(body), m.group("tag") is None))
+        i += 1
+    return blocks
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or DOCS
+    n_run = n_skip = 0
+    failures = []
+    for path in paths:
+        for lineno, src, runnable in extract_blocks(path):
+            label = f"{path}:{lineno}"
+            if not runnable:
+                print(f"SKIP  {label} (no-run)")
+                n_skip += 1
+                continue
+            t0 = time.time()
+            try:
+                exec(compile(src, label, "exec"), {"__name__": "__docs__"})
+            except Exception as e:  # noqa: BLE001 — report every doc failure
+                failures.append(f"{label}: {type(e).__name__}: {e}")
+                print(f"FAIL  {label}: {type(e).__name__}: {e}")
+            else:
+                print(f"OK    {label} ({time.time() - t0:.1f}s)")
+                n_run += 1
+    if failures:
+        print(f"\ncheck_docs: {len(failures)} documented example(s) broken")
+        return 1
+    if n_run == 0:
+        print("check_docs: no runnable python blocks found — docs drifted?")
+        return 1
+    print(f"check_docs: {n_run} block(s) executed, {n_skip} skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
