@@ -56,7 +56,11 @@ SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
                "quantized_label_agreement", "queries_per_sec",
                "wall_s", "served_accuracy", "version", "live",
                "n_queries_at_version", "n_swaps", "n_live_passes",
-               "requests_total"}
+               "requests_total",
+               # fault_bench: float-accumulation-sensitive measurements (the
+               # bench's own asserts are the regression surface for these)
+               "faulty_parity_max_abs_diff", "consensus_spread", "mass_min",
+               "objective", "accuracy_degradation_link_0.2"}
 # the fingerprint subtree identifies the runner; it is compared as a whole,
 # never leaf-by-leaf (a different cpu_count is not a "structural change")
 RUNNER_KEY = "runner"

@@ -1,0 +1,202 @@
+"""Chaos bench: GADGET training under injected faults — graceful degradation,
+measured.
+
+One Reuters-shaped run per fault regime, all through the fused device path
+(``GadgetConfig(faults=FaultPlan(...))``):
+
+  * **clean** — the fault-free baseline every regime is judged against;
+  * **link drops** at 0.1 / 0.2 / 0.4 — ack'd-link model, mass conserved
+    exactly, convergence merely slows;
+  * **message drops** at 0.2 — UDP model, mass measurably leaks;
+  * **dead nodes** (1 and 2 of m crashed from iteration 0) — their data is
+    simply gone, survivors carry the consensus.
+
+Asserted on every run (the acceptance criteria, not just reported):
+
+  * fused-vs-host-reference parity at drop 0.2 link: consensus weights agree
+    to <= 1e-5 — the fault layer never changes *what* is computed;
+  * Push-Sum mass: every link-mode regime retains >= 1 - 1e-4 of its mass at
+    every ε-check (exact conservation to float-sum tolerance); the
+    message-mode regime visibly leaks (min mass < 0.999);
+  * kill-and-resume at drop 0.2 link: a stream stopped at the halfway
+    segment and resumed from its TrainState finishes bit-identical to the
+    uninterrupted run;
+  * graceful degradation: test accuracy at drop 0.2 (link) stays within 2
+    points of the fault-free baseline.
+
+Wall-clock leaves ride the usual check_regression gate; the per-regime
+accuracy/spread numbers are deterministic at fixed seeds on one platform and
+diff as structural leaves.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fault_bench [--quick] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro.core.faults import FaultPlan
+from repro.core.gadget import (GadgetConfig, TrainState, gadget_train,
+                               gadget_train_reference, gadget_train_stream)
+from repro.data.svm_datasets import make_dataset, partition
+
+DROP_RATES = (0.1, 0.2, 0.4)
+DEGRADE_BUDGET = 0.02  # accuracy points drop 0.2 (link) may cost vs clean
+
+
+def _accuracy(w, X, y) -> float:
+    return float(np.mean(np.sign(np.asarray(X) @ np.asarray(w)) == np.asarray(y)))
+
+
+def _spread(res) -> float:
+    """Max per-node distance from the consensus — the disagreement the fault
+    regime leaves behind (relative L2)."""
+    W = np.asarray(res.W, np.float64)
+    w = np.asarray(res.w_consensus, np.float64)
+    num = np.sqrt(((W - w) ** 2).sum(axis=1)).max()
+    return float(num / (np.linalg.norm(w) + 1e-30))
+
+
+def _point(tag, res, ds, seconds) -> dict:
+    acc = _accuracy(res.w_consensus, ds.X_test, ds.y_test)
+    mass_min = float(res.mass_trace.min()) if res.mass_trace.size else 1.0
+    emit(f"faults/{tag}", seconds * 1e6,
+         f"acc={acc:.3f};mass_min={mass_min:.4f};spread={_spread(res):.3g}")
+    return {
+        "accuracy": acc,
+        "objective": float(res.objective_trace[-1]),
+        "mass_min": mass_min,
+        "consensus_spread": _spread(res),
+        "iters": int(res.iters),
+        "seconds": seconds,
+    }
+
+
+def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
+        max_iters: int | None = None, json_path: str | None = None) -> dict:
+    if scale is None:
+        scale = 0.15 if quick else 0.6
+    if max_iters is None:
+        max_iters = 80 if quick else 300
+
+    t0 = time.time()
+    ds = make_dataset("reuters", scale=scale, seed=0)
+    X_parts, y_parts, n_counts = partition(ds.X_train, ds.y_train, n_nodes,
+                                           seed=0)
+    X_parts, y_parts = jnp.asarray(X_parts), jnp.asarray(y_parts)
+    base = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=2,
+                        topology="exponential", max_iters=max_iters,
+                        check_every=max(1, max_iters // 8), epsilon=0.0)
+
+    def train(faults=None):
+        cfg = base._replace(faults=faults)
+        t = time.time()
+        res = gadget_train(X_parts, y_parts, cfg, n_counts=n_counts)
+        return cfg, res, time.time() - t
+
+    points: dict[str, dict] = {}
+
+    _, clean, dt = train()
+    points["clean"] = _point("clean", clean, ds, dt)
+    assert clean.mass_trace.min() >= 1.0 - 1e-4, "clean run leaked mass"
+
+    for p in DROP_RATES:
+        _, res, dt = train(FaultPlan(drop_prob=p, drop="link", seed=13))
+        points[f"link_{p}"] = _point(f"link_{p}", res, ds, dt)
+        assert res.mass_trace.min() >= 1.0 - 1e-4, (
+            f"link mode must conserve mass, leaked at drop {p}: "
+            f"{res.mass_trace.min()}")
+
+    _, msg, dt = train(FaultPlan(drop_prob=0.2, drop="message", seed=13))
+    points["message_0.2"] = _point("message_0.2", msg, ds, dt)
+    assert points["message_0.2"]["mass_min"] < 0.999, (
+        "message mode at drop 0.2 should measurably leak mass")
+
+    for n_dead in (1, 2):
+        dead = tuple(range(n_dead))
+        _, res, dt = train(FaultPlan(drop_prob=0.1, drop="link",
+                                     dead_nodes=dead, seed=13))
+        points[f"dead_{n_dead}"] = _point(f"dead_{n_dead}", res, ds, dt)
+        # crashed nodes stay bit-frozen at their (zero) init
+        W = np.asarray(res.W)
+        assert all(np.abs(W[i]).max() == 0.0 for i in dead)
+
+    # ---- parity oracle: fused faulty path vs host-loop reference
+    cfg02 = base._replace(faults=FaultPlan(drop_prob=0.2, drop="link",
+                                           seed=13))
+    t = time.time()
+    ref = gadget_train_reference(X_parts, y_parts, cfg02, n_counts=n_counts)
+    ref_dt = time.time() - t
+    dev02 = gadget_train(X_parts, y_parts, cfg02, n_counts=n_counts)
+    parity = float(jnp.max(jnp.abs(dev02.w_consensus - ref.w_consensus)))
+    assert parity <= 1e-5, f"fused/reference parity broke under faults: {parity}"
+    emit("faults/parity", ref_dt * 1e6, f"max_abs_diff={parity:.3g}")
+
+    # ---- kill-and-resume: bit-identical under faults
+    seg_iters = max(1, max_iters // 2)
+    full = list(gadget_train_stream(X_parts, y_parts, cfg02,
+                                    segment_iters=seg_iters,
+                                    n_counts=n_counts))
+    first = next(iter(gadget_train_stream(X_parts, y_parts, cfg02,
+                                          segment_iters=seg_iters,
+                                          n_counts=n_counts)))
+    ts = TrainState(iteration=first.iteration, W=first.W, W_sum=first.W_sum)
+    resumed = list(gadget_train_stream(X_parts, y_parts, cfg02,
+                                       segment_iters=seg_iters,
+                                       n_counts=n_counts, resume=ts))
+    resume_ok = bool(jnp.all(resumed[-1].W == full[-1].W)) and np.array_equal(
+        np.asarray(resumed[-1].w_consensus), np.asarray(full[-1].w_consensus))
+    assert resume_ok, "kill-and-resume trajectory diverged under faults"
+    emit("faults/resume", 0.0, "bit_identical=1")
+
+    # ---- graceful degradation: the headline number
+    degrade = points["clean"]["accuracy"] - points["link_0.2"]["accuracy"]
+    assert degrade <= DEGRADE_BUDGET, (
+        f"drop 0.2 (link) cost {degrade:.3f} accuracy points "
+        f"(budget {DEGRADE_BUDGET}) — degradation is not graceful")
+    emit("faults/degradation", 0.0,
+         f"clean={points['clean']['accuracy']:.3f}"
+         f";link_0.2={points['link_0.2']['accuracy']:.3f};delta={degrade:.3f}")
+
+    out = {
+        "quick": quick,
+        "scale": scale,
+        "runner": runner_fingerprint(),
+        "model": {"d": ds.d, "n_nodes": n_nodes, "max_iters": max_iters},
+        "points": points,
+        "asserts": {
+            "faulty_parity_max_abs_diff": parity,
+            "parity_ok": int(parity <= 1e-5),
+            "link_mass_conserved": 1,
+            "message_mass_leaks": int(points["message_0.2"]["mass_min"] < 0.999),
+            "resume_bit_identical": int(resume_ok),
+            "accuracy_degradation_link_0.2": degrade,
+            "degradation_within_budget": int(degrade <= DEGRADE_BUDGET),
+        },
+        "total": {"seconds": time.time() - t0},
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (tiny row count, same d/sparsity)")
+    ap.add_argument("--scale", type=float, default=None,
+                    help="Reuters row-count scale")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--iters", dest="max_iters", type=int, default=None)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, scale=args.scale, n_nodes=args.nodes,
+        max_iters=args.max_iters, json_path=args.json_path)

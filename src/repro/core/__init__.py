@@ -7,6 +7,8 @@ learning — as composable JAX modules.
 * pegasos       — centralized baseline solver
 * gadget        — the distributed GADGET SVM algorithm
 * consensus     — gossip vs all-reduce strategies for deep-net training
+* faults        — device-resident fault injection (FaultPlan) for gossip
+* resilience    — host-side faulty Push-Sum simulator over the same plan
 """
 from repro.core.topology import (  # noqa: F401
     TOPOLOGIES,
@@ -22,6 +24,13 @@ from repro.core.push_sum import (  # noqa: F401
     push_sum_mesh,
     push_sum_round,
 )
-from repro.core.gadget import GadgetConfig, GadgetResult, gadget_train  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    FaultPlan,
+    apply_faults,
+    faulty_rounds,
+    validate_plan,
+)
+from repro.core.resilience import FaultySim  # noqa: F401
+from repro.core.gadget import GadgetConfig, GadgetResult, TrainState, gadget_train  # noqa: F401
 from repro.core.pegasos import PegasosResult, pegasos_train  # noqa: F401
 from repro.core.consensus import ConsensusConfig, allreduce_grads, gossip_mix, mix_params  # noqa: F401

@@ -1,0 +1,157 @@
+"""Device-resident fault injection for gossip training — the paper's §5
+"resilience to node failures" made a first-class, measured dimension.
+
+A :class:`FaultPlan` is a tiny hashable NamedTuple (it rides inside
+``GadgetConfig`` and therefore inside jit cache keys) describing one fault
+regime:
+
+* ``drop_prob`` — per-round, per-directed-link iid Bernoulli failure
+  probability on every off-diagonal share of the mixing matrix;
+* ``drop`` — what a failure means. ``"link"`` is the ack'd/TCP model: the
+  sender detects the failure and keeps the undeliverable share on its own
+  diagonal, so every row still sums to 1 and Push-Sum mass is conserved
+  *exactly*. ``"message"`` is the UDP model: the share vanishes in flight,
+  rows sum to < 1 and mass leaks — but because value and weight mass vanish
+  *together*, every surviving v/w ratio remains an unbiased convex
+  combination of the inputs (Kempe et al. 2003 §3.3);
+* ``dead_nodes`` — permanently crashed nodes. A dead node's row collapses to
+  e_d (it sends nothing, trains nothing, its mass freezes on its diagonal)
+  and every link *into* it fails (in link mode the sender keeps those shares
+  — still exact conservation; in message mode they are lost);
+* ``seed`` — the fault PRNG stream. Salted so it never collides with the
+  data/mixing streams even when the integer seed matches ``cfg.seed``.
+
+Faulty matrices are generated *on device* with ``jax.random`` keyed on
+``(seed, iteration t, round r)``: :func:`faulty_rounds` maps a clean
+(R, m, m) per-round stack to its faulty counterpart inside the jitted step,
+and the result still composes with ``push_sum.collapse_rounds`` — the fused
+one-matmul gossip path survives fault injection (the product is simply
+folded per-iteration on device, the same pattern the random topology already
+uses, instead of precomputed on host).
+
+The host-side :class:`repro.core.resilience.FaultySim` delegates to the same
+:func:`apply_faults` so host and device share one fault model bit-for-bit
+(pinned by tests/test_resilience.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultPlan",
+    "DROP_MODES",
+    "validate_plan",
+    "fault_stream_key",
+    "dead_mask",
+    "apply_faults",
+    "faulty_rounds",
+    "faulty_matrix_host",
+    "round_fail_key",
+]
+
+DROP_MODES = ("link", "message")
+
+# Domain-separation salt for the fault PRNG stream: fold_in'd once onto
+# PRNGKey(plan.seed) so a FaultPlan(seed=s) never replays the data or mixing
+# draws of a GadgetConfig(seed=s).
+_FAULT_SALT = 0x0FA17
+
+
+class FaultPlan(NamedTuple):
+    """One fault regime for gossip training. Hashable (rides in
+    ``GadgetConfig`` and keys jit caches — note this means the fault *seed*
+    is baked into the compiled step, unlike ``cfg.seed``); validate/normalize
+    with :func:`validate_plan` before use."""
+
+    drop_prob: float = 0.0       # per-round per-link Bernoulli failure prob
+    drop: str = "link"           # "link" (sender keeps) | "message" (lost)
+    dead_nodes: tuple[int, ...] = ()  # permanently crashed node ids
+    seed: int = 0                # fault PRNG stream (salted, see module doc)
+
+
+def validate_plan(plan: FaultPlan, m: int) -> FaultPlan:
+    """Check a plan against an m-node network and return it normalized
+    (canonical sorted-unique dead tuple, plain python scalars) so equal plans
+    hash equal and share compiled executables."""
+    if plan.drop not in DROP_MODES:
+        raise ValueError(f"unknown drop mode {plan.drop!r}; expected one of {DROP_MODES}")
+    p = float(plan.drop_prob)
+    if not (0.0 <= p < 1.0):
+        raise ValueError(f"drop_prob must lie in [0, 1), got {p}")
+    dead = tuple(sorted({int(d) for d in plan.dead_nodes}))
+    if dead and (dead[0] < 0 or dead[-1] >= m):
+        raise ValueError(f"dead_nodes must lie in [0, {m}), got {dead}")
+    if len(dead) >= m:
+        raise ValueError(f"all {m} nodes dead — nothing left to train")
+    return FaultPlan(drop_prob=p, drop=str(plan.drop), dead_nodes=dead,
+                     seed=int(plan.seed))
+
+
+def fault_stream_key(plan: FaultPlan) -> jax.Array:
+    """Base PRNG key of the plan's fault stream (salted off the data/mixing
+    streams)."""
+    return jax.random.fold_in(jax.random.PRNGKey(plan.seed), _FAULT_SALT)
+
+
+def round_fail_key(plan: FaultPlan, t, r) -> jax.Array:
+    """Key of the failure draw at (iteration t, gossip round r) — the single
+    derivation the simulator matrices, the host FaultySim and the mesh path's
+    per-node fail bits all hang off, so every execution path sees the same
+    fault stream."""
+    return jax.random.fold_in(jax.random.fold_in(fault_stream_key(plan), t), r)
+
+
+def dead_mask(plan: FaultPlan, m: int) -> jax.Array:
+    """(m,) bool — True on crashed nodes. Built from the static plan tuple,
+    constant-folded inside jitted steps."""
+    mask = jnp.zeros((m,), bool)
+    if plan.dead_nodes:
+        mask = mask.at[jnp.asarray(plan.dead_nodes, jnp.int32)].set(True)
+    return mask
+
+
+def apply_faults(B: jax.Array, key: jax.Array, plan: FaultPlan) -> jax.Array:
+    """One faulty mixing matrix: dead rows collapse to e_d, then every
+    off-diagonal share fails iid Bernoulli(drop_prob) — plus every share into
+    a dead node — under ``key``. ``"link"`` returns lost shares to the
+    sender's diagonal (rows still sum to 1: exact mass conservation);
+    ``"message"`` drops them (rows sum to < 1: measured leakage). Diagonal
+    self-shares never fail — a node cannot lose mass to itself."""
+    m = B.shape[-1]
+    B = B.astype(jnp.float32)
+    dead = dead_mask(plan, m)
+    eye = jnp.eye(m, dtype=B.dtype)
+    B = jnp.where(dead[:, None], eye, B)  # dead sender: mass frozen on diag
+    fail = jax.random.bernoulli(key, plan.drop_prob, (m, m))
+    fail = (fail | dead[None, :]) & ~jnp.eye(m, dtype=bool)
+    lost = jnp.where(fail, B, 0.0)
+    B = jnp.where(fail, 0.0, B)
+    if plan.drop == "link":
+        B = B + eye * jnp.sum(lost, axis=1, keepdims=True)
+    return B
+
+
+def faulty_rounds(Bs: jax.Array, plan: FaultPlan, t) -> jax.Array:
+    """Map a clean (R, m, m) per-round stack to its faulty counterpart for
+    iteration ``t`` (traced ok), each round drawing its own failure pattern
+    from :func:`round_fail_key`. The result feeds ``mix_rounds`` directly or
+    ``collapse_rounds`` for the fused one-matmul path."""
+    R = Bs.shape[0]
+    keys = jax.vmap(lambda r: round_fail_key(plan, t, r))(jnp.arange(R))
+    return jax.vmap(lambda B, k: apply_faults(B, k, plan))(Bs, keys)
+
+
+def faulty_matrix_host(B: np.ndarray, plan: FaultPlan, t: int,
+                       r: int = 0) -> np.ndarray:
+    """Host-convenience twin of :func:`apply_faults` for a single round:
+    numpy in, numpy out, same device code underneath (this IS the device
+    fault model, just executed eagerly). Used by ``resilience.FaultySim`` so
+    the orphaned host simulator and the training loop share one fault
+    model."""
+    out = apply_faults(jnp.asarray(B, jnp.float32),
+                       round_fail_key(plan, t, r), plan)
+    return np.asarray(out)

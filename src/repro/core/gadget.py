@@ -68,8 +68,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as flt
 from repro.core import svm_objective as obj
 from repro.core import topology as topo
+from repro.core.faults import FaultPlan
 from repro.core.push_sum import (PushSumState, collapse_rounds, exponential_schedule,
                                  mix_collapsed, mix_rounds, push_sum_round)
 from repro.kernels.hinge_subgrad import ops as hinge_ops
@@ -80,6 +82,7 @@ __all__ = [
     "GadgetResult",
     "SegmentResult",
     "SnapshotRing",
+    "TrainState",
     "gadget_train",
     "gadget_train_stream",
     "gadget_train_reference",
@@ -125,6 +128,15 @@ class GadgetConfig(NamedTuple):
     # exactly when the data-derived block bound makes it cheaper in w-lanes.
     # Ignored on the dense path and on the jnp (use_kernels=False) path.
     sparse_schedule: str = "auto"
+    # Fault injection (repro.core.faults.FaultPlan): per-round link/message
+    # drops + dead nodes, generated on device inside the jitted step. None
+    # (default) is the perfect-network path — bit-identical to pre-fault
+    # builds. With faults, deterministic topologies upload the per-round
+    # matrix cycle instead of the precomputed product cycle and fold the
+    # faulty rounds on device per iteration (the fused path keeps its
+    # one-matmul mix). Note the plan — including its fault seed — is baked
+    # into the compiled step (unlike cfg.seed).
+    faults: FaultPlan | None = None
 
 
 class SnapshotRing(NamedTuple):
@@ -162,6 +174,11 @@ class GadgetResult(NamedTuple):
     # (Pegasos' Theorem-2-style guarantee bounds the averaged iterate, not the
     # last one — same reason pegasos_train exposes w_avg)
     snapshots: SnapshotRing | None = None  # anytime export (snapshot_every=K)
+    # (n_checks,) minimum per-iteration Push-Sum mass retention over each
+    # ε-check chunk: sum of post-mix mass weights / sum of initial mass
+    # (Σ n_i). Exactly 1.0 (to float-sum tolerance) on the perfect network and
+    # under FaultPlan(drop="link"); < 1 measures the leakage of drop="message".
+    mass_trace: np.ndarray | None = None
 
 
 class SegmentResult(NamedTuple):
@@ -177,6 +194,27 @@ class SegmentResult(NamedTuple):
     objective: float        # primal objective of w_consensus
     epsilon: float          # max_i ‖Δŵ_i‖ across the segment
     done: bool              # ε-converged or cfg.max_iters reached
+    # (m, d) running iterate sum — with ``iteration`` and ``W`` this is the
+    # full resumable TrainState at the boundary (crash-resume support)
+    W_sum: jax.Array | None = None
+    # min per-iteration Push-Sum mass retention across the segment (1.0 on a
+    # perfect network / link-mode faults; < 1 measures message-mode leakage)
+    mass: float = float("nan")
+
+
+class TrainState(NamedTuple):
+    """Resumable trainer state at a segment boundary: ``iteration`` completed
+    global iterations plus the (m, d) per-node weights and running iterate
+    sum. Feed to ``gadget_train_stream(..., resume=...)`` to continue a run —
+    because every PRNG draw keys on the *global* iteration counter, the
+    resumed trajectory is bit-identical to the uninterrupted one.
+    ``repro.serve.snapshot.to_checkpoint(..., train_state=...)`` persists it
+    alongside the servable weights and ``train_state_from_checkpoint``
+    restores it."""
+
+    iteration: int
+    W: jax.Array            # (m, d) per-node weights
+    W_sum: jax.Array        # (m, d) running sum of iterates
 
 
 # Host↔device traffic instrumentation, read by benchmarks/gossip_device_bench.py:
@@ -282,24 +320,33 @@ def _batch_ids(data_key: jax.Array, t: jax.Array, n_counts: jax.Array, batch_siz
 
 
 def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
-                 m: int, R: int, topology: str, fused: bool) -> jax.Array:
+                 m: int, R: int, topology: str, fused: bool,
+                 faults: FaultPlan | None = None) -> jax.Array:
     """Mixing for iteration t (1-based), fully on device: the (R, m, m)
     per-round stack, or — when ``fused`` — the single collapsed (m, m) product
-    ``P_t = (B_1 ⋯ B_R)^T``. Deterministic topologies index the precomputed
-    product cycle (``B_stack`` then IS topology.build_product_stack); the
-    random protocol draws the same R matrices either way (same PRNG stream as
-    the sequential path) and folds them on device."""
+    ``P_t = (B_1 ⋯ B_R)^T``. Fault-free deterministic topologies index the
+    precomputed product cycle (``B_stack`` then IS
+    topology.build_product_stack); the random protocol draws the same R
+    matrices either way (same PRNG stream as the sequential path) and folds
+    them on device. With ``faults`` the per-round matrices (``B_stack`` is
+    then the *matrix* cycle) pass through :func:`repro.core.faults.
+    faulty_rounds` before the fold — fault injection composes with the fused
+    one-matmul mix by collapsing the faulty rounds on device per iteration,
+    exactly the pattern the random topology already uses."""
     if topology == "random":
         kt = jax.random.fold_in(mix_key, t)
         Bs = jax.vmap(
             lambda r: topo.random_neighbor_matrix_device(jax.random.fold_in(kt, r), m)
         )(jnp.arange(R))
-        return collapse_rounds(Bs) if fused else Bs
-    T = B_stack.shape[0]
-    if fused:
-        return B_stack[(t - 1) % T]
-    idx = ((t - 1) * R + jnp.arange(R)) % T
-    return B_stack[idx]
+    else:
+        T = B_stack.shape[0]
+        if fused and faults is None:
+            return B_stack[(t - 1) % T]
+        idx = ((t - 1) * R + jnp.arange(R)) % T
+        Bs = B_stack[idx]
+    if faults is not None:
+        Bs = flt.faulty_rounds(Bs, faults, t)
+    return collapse_rounds(Bs) if fused else Bs
 
 
 # ---------------------------------------------------------------------------
@@ -318,7 +365,15 @@ def _gossip_step(cfg: GadgetConfig, m: int,
     n_blocks_max cap for the prefetch kernel schedule (host-derived from the
     partition planes — formats.minibatch_block_bound). The single shared step
     body — the device loop and the host-loop reference differ only in
-    orchestration (where Bs comes from, where the ε-check runs)."""
+    orchestration (where Bs comes from, where the ε-check runs).
+
+    Returns ``(W_new, W_sum + W_new, mass)`` where ``mass`` is this
+    iteration's Push-Sum mass retention Σ post-mix weights / Σ n_i — exactly
+    1.0 (to float-sum tolerance) on a perfect network or under link-mode
+    faults, < 1 under message-mode leakage. With ``cfg.faults`` dead nodes
+    are frozen bit-exactly: their half-step is suppressed (W_half ← W) and
+    their mixing row is e_d, so W_new equals W on dead rows (project_ball is
+    exact identity on an already-projected weight)."""
     tf = t.astype(jnp.float32)
     ids = _batch_ids(data_key, t, n_counts, cfg.batch_size)
 
@@ -357,10 +412,16 @@ def _gossip_step(cfg: GadgetConfig, m: int,
     # rounds collapsed into one fused mix-and-renormalize matmul when fused.
     mix = mix_collapsed if cfg.fused else mix_rounds
     vals, wts = mix(W_half * n_counts[:, None], n_counts, Bs)
+    mass = jnp.sum(wts) / jnp.sum(n_counts)
     W_new = vals / wts[:, None]
     if cfg.project_after_gossip:
         W_new = jax.vmap(lambda w: obj.project_ball(w, cfg.lam))(W_new)
-    return W_new, W_sum + W_new
+    if cfg.faults is not None and cfg.faults.dead_nodes:
+        # crashed nodes neither train nor receive: their mixing row is e_d
+        # (nothing reaches the others), and the bit-exact freeze of their own
+        # row happens here, after the mix's renormalizing divide
+        W_new = jnp.where(flt.dead_mask(cfg.faults, m)[:, None], W, W_new)
+    return W_new, W_sum + W_new, mass
 
 
 def _one_iteration(cfg: GadgetConfig, m: int,
@@ -369,9 +430,11 @@ def _one_iteration(cfg: GadgetConfig, m: int,
                    W: jax.Array, W_sum: jax.Array, t: jax.Array,
                    sparse_block_bound: int | None = None):
     """One fully device-resident iteration: derive this iteration's mixing
-    (stack slice, product-cycle slice, or in-step draw), then the shared step."""
+    (stack slice, product-cycle slice, or in-step draw — faults applied on
+    device when cfg.faults), then the shared step. Returns
+    ``(W, W_sum, mass)``."""
     Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology,
-                      cfg.fused)
+                      cfg.fused, cfg.faults)
     return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs,
                         sparse_block_bound)
 
@@ -436,12 +499,14 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
         def step(carry, _):
             W, W_sum, t, snaps = carry
             active = t <= cfg.max_iters
-            W, W_sum = jax.lax.cond(
+            # inactive tail iterations report full mass so the per-chunk min
+            # below only reflects iterations that actually gossiped
+            W, W_sum, mass = jax.lax.cond(
                 active,
                 lambda a: _one_iteration(cfg, m, X, y, n_counts,
                                          data_key, mix_key, B_stack, *a,
                                          sparse_block_bound=sparse_block_bound),
-                lambda a: (a[0], a[1]),
+                lambda a: (a[0], a[1], jnp.float32(1.0)),
                 (W, W_sum, t),
             )
             if snap_every:
@@ -454,22 +519,23 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
 
                 snaps = jax.lax.cond(active & (t % snap_every == 0),
                                      do_snap, lambda op: op[0], (snaps, W))
-            return (W, W_sum, jnp.where(active, t + 1, t), snaps), None
+            return (W, W_sum, jnp.where(active, t + 1, t), snaps), mass
 
         def chunk_body(carry):
-            W, W_sum, t, snaps, ci, _, obj_tr, it_tr, eps_tr = carry
+            W, W_sum, t, snaps, ci, _, obj_tr, it_tr, eps_tr, mass_tr = carry
             W_prev = W
-            (W, W_sum, t, snaps), _ = jax.lax.scan(
+            (W, W_sum, t, snaps), masses = jax.lax.scan(
                 step, (W, W_sum, t, snaps), None, length=chunk)
             eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
             w_cons = consensus_of(W)
             obj_tr = obj_tr.at[ci].set(objective_of(w_cons))
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
-            return W, W_sum, t, snaps, ci + 1, eps, obj_tr, it_tr, eps_tr
+            mass_tr = mass_tr.at[ci].set(jnp.min(masses))
+            return W, W_sum, t, snaps, ci + 1, eps, obj_tr, it_tr, eps_tr, mass_tr
 
         def cond(carry):
-            _, _, t, _, ci, eps, _, _, _ = carry
+            _, _, t, _, ci, eps, _, _, _, _ = carry
             return (ci < n_chunks) & (eps >= cfg.epsilon) & (t <= cfg.max_iters)
 
         snaps0 = (jnp.zeros((snap_slots, d), jnp.float32),
@@ -480,13 +546,14 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                 jnp.float32(jnp.inf),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.zeros((n_chunks,), jnp.int32),
+                jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32))
         (W, W_sum, t, snaps, ci, eps,
-         obj_tr, it_tr, eps_tr) = jax.lax.while_loop(cond, chunk_body, init)
+         obj_tr, it_tr, eps_tr, mass_tr) = jax.lax.while_loop(cond, chunk_body, init)
         w_cons = consensus_of(W)
         final_obj = objective_of(w_cons) if snap_every else jnp.float32(jnp.nan)
         return (W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr,
-                snaps, final_obj)
+                mass_tr, snaps, final_obj)
 
     # Buffer donation is a no-op (with a warning) on CPU — only request it
     # where the runtime honors it.
@@ -497,6 +564,19 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
 def _validate_topology(cfg: GadgetConfig) -> None:
     if cfg.topology not in topo.TOPOLOGIES:
         raise ValueError(f"unknown topology {cfg.topology!r}")
+
+
+def _resolve_faults(cfg: GadgetConfig, m: int) -> GadgetConfig:
+    """Validate + canonicalize cfg.faults against the m-node fleet (sorted
+    dead tuple, plain scalars) so equal plans key one compiled executable.
+    A fully inert plan (no drops, no dead) is normalized to None — it must
+    hit the bit-identical perfect-network path, not a faulty recompile."""
+    if cfg.faults is None:
+        return cfg
+    plan = flt.validate_plan(cfg.faults, m)
+    if plan.drop_prob == 0.0 and not plan.dead_nodes:
+        return cfg._replace(faults=None)
+    return cfg._replace(faults=plan)
 
 
 # Default anytime-export ring capacity: enough history for serve-side A/B
@@ -524,6 +604,7 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
     Requires cfg.max_iters > 0."""
     X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     cfg = _resolve_kernels(cfg)
+    cfg = _resolve_faults(cfg, m)
     snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)
     n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
@@ -533,9 +614,13 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
         B_stack = None
     else:
         # fused: upload the per-iteration collapsed-product cycle (R× smaller
-        # per iteration consumed) instead of the per-round matrix cycle
+        # per iteration consumed) instead of the per-round matrix cycle.
+        # Under faults the product can no longer be precomputed on host (each
+        # round's matrix mutates per iteration), so the per-round matrix
+        # cycle is uploaded and the faulty product is folded on device.
+        use_product = cfg.fused and cfg.faults is None
         stack = (topo.build_product_stack(cfg.topology, m, cfg.gossip_rounds)
-                 if cfg.fused else topo.build_matrix_stack(cfg.topology, m))
+                 if use_product else topo.build_matrix_stack(cfg.topology, m))
         B_stack = jnp.asarray(stack)
         transfer_stats["matrix_uploads"] += 1  # the only upload, ever
 
@@ -603,13 +688,13 @@ def gadget_train(
                             iters=0, epsilon=float("inf"),
                             objective_trace=empty, time_trace=empty.astype(np.int32),
                             eps_trace=empty, W_avg=jnp.zeros((m, d), dtype),
-                            snapshots=ring)
+                            snapshots=ring, mass_trace=empty)
 
     train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts,
                                         snapshot_every, snapshot_slots)
     out = train(*args)
     (W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr,
-     snaps, final_obj) = jax.block_until_ready(out)
+     mass_tr, snaps, final_obj) = jax.block_until_ready(out)
     transfer_stats["host_syncs"] += 1  # single post-termination sync
 
     n_done = int(n_done)
@@ -632,6 +717,7 @@ def gadget_train(
         eps_trace=np.asarray(eps_tr)[:n_done],
         W_avg=W_sum / max(iters, 1),
         snapshots=ring,
+        mass_trace=np.asarray(mass_tr)[:n_done],
     )
 
 
@@ -660,22 +746,22 @@ def _make_segment_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
         def step(carry, _):
             W, W_sum, t = carry
             active = t <= cfg.max_iters
-            W, W_sum = jax.lax.cond(
+            W, W_sum, mass = jax.lax.cond(
                 active,
                 lambda a: _one_iteration(cfg, m, X, y, n_counts,
                                          data_key, mix_key, B_stack, *a,
                                          sparse_block_bound=sparse_block_bound),
-                lambda a: (a[0], a[1]),
+                lambda a: (a[0], a[1], jnp.float32(1.0)),
                 (W, W_sum, t),
             )
-            return (W, W_sum, jnp.where(active, t + 1, t)), None
+            return (W, W_sum, jnp.where(active, t + 1, t)), mass
 
         W_prev = W
-        (W, W_sum, t), _ = jax.lax.scan(step, (W, W_sum, t0), None,
-                                        length=seg_len)
+        (W, W_sum, t), masses = jax.lax.scan(step, (W, W_sum, t0), None,
+                                             length=seg_len)
         eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
         w_cons = consensus_of(W)
-        return W, W_sum, t, w_cons, objective_of(w_cons), eps
+        return W, W_sum, t, w_cons, objective_of(w_cons), eps, jnp.min(masses)
 
     donate = (6, 7) if jax.default_backend() != "cpu" else ()
     return jax.jit(segment, donate_argnums=donate)
@@ -688,6 +774,7 @@ def gadget_train_stream(
     *,
     segment_iters: int,
     n_counts=None,
+    resume: TrainState | None = None,
 ):
     """Generator twin of :func:`gadget_train`: yield a :class:`SegmentResult`
     every ``segment_iters`` iterations while training stays device-resident.
@@ -704,6 +791,14 @@ def gadget_train_stream(
     (that last result carries ``done=True``). Accepts the same dense
     (m, n_i, d) / ``EllPartitions`` data and ``n_counts`` conventions as
     ``gadget_train``. One host sync per segment, by construction.
+
+    ``resume`` (optional :class:`TrainState`, e.g. from
+    ``repro.serve.snapshot.train_state_from_checkpoint``): continue a
+    previous run from its last completed iteration. Because every PRNG draw
+    keys on the *global* iteration counter and segments reuse one compiled
+    executable with that counter as a runtime argument, a killed-and-resumed
+    run's trajectory is **bit-identical** to the uninterrupted one — the
+    crash-recovery half of the fault story (tests pin this).
     """
     _validate_topology(cfg)
     if int(segment_iters) < 1:
@@ -713,6 +808,7 @@ def gadget_train_stream(
                          "(use gadget_train for the zero-iteration case)")
     X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     cfg = _resolve_kernels(cfg)
+    cfg = _resolve_faults(cfg, m)
     y = jnp.asarray(y_parts)
     n_counts = _partition_counts(y, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
@@ -721,19 +817,31 @@ def gadget_train_stream(
     if cfg.topology == "random":
         B_stack = None
     else:
+        use_product = cfg.fused and cfg.faults is None
         stack = (topo.build_product_stack(cfg.topology, m, cfg.gossip_rounds)
-                 if cfg.fused else topo.build_matrix_stack(cfg.topology, m))
+                 if use_product else topo.build_matrix_stack(cfg.topology, m))
         B_stack = jnp.asarray(stack)
         transfer_stats["matrix_uploads"] += 1  # one upload, same as gadget_train
 
     segment = _make_segment_train(_cache_cfg(cfg), m, n_i, d,
                                   int(segment_iters), sparse_block_bound)
-    W = jnp.zeros((m, d), dtype)
-    W_sum = jnp.zeros((m, d), dtype)
-    t = jnp.int32(1)
+    if resume is not None:
+        W = jnp.asarray(resume.W, dtype)
+        W_sum = jnp.asarray(resume.W_sum, dtype)
+        if W.shape != (m, d) or W_sum.shape != (m, d):
+            raise ValueError(
+                f"resume state shape {W.shape}/{W_sum.shape} does not match "
+                f"the ({m}, {d}) fleet")
+        if int(resume.iteration) < 0:
+            raise ValueError(f"resume iteration must be >= 0, got {resume.iteration}")
+        t = jnp.int32(int(resume.iteration) + 1)
+    else:
+        W = jnp.zeros((m, d), dtype)
+        W_sum = jnp.zeros((m, d), dtype)
+        t = jnp.int32(1)
     while True:
         out = segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t)
-        W, W_sum, t, w_cons, objective, eps = jax.block_until_ready(out)
+        W, W_sum, t, w_cons, objective, eps, mass = jax.block_until_ready(out)
         transfer_stats["host_syncs"] += 1  # one sync per segment boundary
         iteration = int(t) - 1
         eps_f = float(eps)
@@ -741,7 +849,7 @@ def gadget_train_stream(
         yield SegmentResult(iteration=iteration, W=W,
                             w_consensus=np.asarray(w_cons),
                             objective=float(objective), epsilon=eps_f,
-                            done=done)
+                            done=done, W_sum=W_sum, mass=float(mass))
         if done:
             return
 
@@ -767,7 +875,11 @@ def _make_reference_step(cfg: GadgetConfig, m: int, n_i: int, d: int,
     def step(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs):
         if cfg.topology == "random":
             Bs = _iter_mixing(mix_key, None, t, m, cfg.gossip_rounds,
-                              cfg.topology, cfg.fused)
+                              cfg.topology, cfg.fused, cfg.faults)
+        elif cfg.faults is not None:
+            # host-uploaded clean rounds, device-applied faults — the same
+            # (seed, t, r) fault stream the fused path consumes
+            Bs = flt.faulty_rounds(Bs, cfg.faults, t)
         return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs,
                             sparse_block_bound)
 
@@ -797,6 +909,7 @@ def gadget_train_reference(
     X, m, n_i, d, dtype = _unpack_partitions(X_parts)
     _validate_topology(cfg)
     cfg = _resolve_kernels(cfg)._replace(fused=False)
+    cfg = _resolve_faults(cfg, m)
     n_counts = _partition_counts(y_parts, n_counts)
     data_key, mix_key = _stream_keys(cfg.seed)
     stack = None if cfg.topology == "random" else topo.build_matrix_stack(cfg.topology, m)
@@ -816,12 +929,13 @@ def gadget_train_reference(
 
     W = jnp.zeros((m, d), dtype)
     W_sum = jnp.zeros((m, d), dtype)
-    obj_trace, time_trace, eps_trace = [], [], []
+    obj_trace, time_trace, eps_trace, mass_trace = [], [], [], []
     eps = float("inf")
     it = 0
     while it < cfg.max_iters:
         chunk = min(cfg.check_every, cfg.max_iters - it)
         W_prev = W
+        chunk_masses = []
         for s in range(chunk):
             t = jnp.int32(it + s + 1)
             if stack is not None:
@@ -830,7 +944,9 @@ def gadget_train_reference(
                 transfer_stats["matrix_uploads"] += 1
             else:
                 Bs = None  # drawn in-step, same as the device path
-            W, W_sum = one_iter(X, y, n_counts, data_key, mix_key, W, W_sum, t, Bs)
+            W, W_sum, mass = one_iter(X, y, n_counts, data_key, mix_key,
+                                      W, W_sum, t, Bs)
+            chunk_masses.append(mass)  # device scalar; min'd at the ε-check
             if snap_every and (it + s + 1) % snap_every == 0:
                 w_snap = jnp.sum(W * n_counts[:, None], axis=0) / total_n
                 slot = snap_count % snapshot_slots
@@ -846,6 +962,7 @@ def gadget_train_reference(
         transfer_stats["host_syncs"] += 1  # objective pull is a second blocking sync
         time_trace.append(it)
         eps_trace.append(eps)
+        mass_trace.append(float(jnp.min(jnp.stack(chunk_masses))))
         if eps < cfg.epsilon:
             break
 
@@ -866,6 +983,7 @@ def gadget_train_reference(
         eps_trace=np.asarray(eps_trace),
         W_avg=W_sum / max(it, 1),
         snapshots=ring,
+        mass_trace=np.asarray(mass_trace, np.float32),
     )
 
 
@@ -896,12 +1014,44 @@ def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int],
     traces the same grid), and only the dense w crosses the mesh in gossip.
     Kernel-backed steps need ``shard_map(..., check_rep=False)`` — jax has no
     replication rule for ``pallas_call`` yet (tests pin this).
+
+    ``cfg.faults`` injects the same fault model as the simulator path, as
+    masked ``ppermute`` sends: each round every node draws a fail bit from
+    the plan's salted ``(seed, t, round, node)`` stream and its outgoing
+    share is zeroed before the permute (kept locally in ``"link"`` mode,
+    dropped in ``"message"`` mode); sends to or from a dead node always
+    fail, and dead nodes are frozen entirely. Node ids in
+    ``plan.dead_nodes`` index the *linearized* position over ``axis_sizes``
+    in dict order (row-major), matching the simulator's node axis for a
+    single-axis mesh.
     """
     cfg = _resolve_kernels(cfg)
     sched = exponential_schedule(axis_sizes)
     R = len(sched) if cfg.gossip_rounds is None else cfg.gossip_rounds
     if not sched:
         R = 0  # single-node mesh: no neighbors to gossip with
+
+    n_total = 1
+    for n_ax in axis_sizes.values():
+        n_total *= int(n_ax)
+    faults = None
+    if cfg.faults is not None:
+        faults = flt.validate_plan(cfg.faults, n_total)
+        if faults.drop_prob == 0.0 and not faults.dead_nodes:
+            faults = None  # inert plan: keep the unmasked collective path
+    dead_ids = (jnp.asarray(faults.dead_nodes, jnp.int32)
+                if faults is not None and faults.dead_nodes else None)
+    axes = list(axis_sizes)
+    strides = {}
+    acc = 1
+    for ax in reversed(axes):  # row-major linearization over axis_sizes order
+        strides[ax] = acc
+        acc *= int(axis_sizes[ax])
+
+    def _is_dead(lin):
+        if dead_ids is None:
+            return jnp.bool_(False)
+        return jnp.any(lin == dead_ids)
 
     def step(w: jax.Array, X_local, y_local: jax.Array,
              t: jax.Array, key: jax.Array) -> jax.Array:
@@ -928,11 +1078,30 @@ def make_gadget_mesh_step(cfg: GadgetConfig, axis_sizes: dict[str, int],
                                       tf, cfg.project_before_gossip,
                                       cfg.use_kernels)
         state = PushSumState(values=(w_half,), weight=jnp.float32(1.0))
+        if faults is not None:
+            coords = {ax: jax.lax.axis_index(ax) for ax in axes}
+            lin = jnp.int32(0)
+            for ax in axes:
+                lin = lin * axis_sizes[ax] + coords[ax]
+            dead = _is_dead(lin)
         for k in range(R):
-            state = push_sum_round(state, sched[k % len(sched)])
+            rnd = sched[k % len(sched)]
+            if faults is None:
+                state = push_sum_round(state, rnd)
+                continue
+            c = coords[rnd.axis]
+            partner_lin = lin + (((c + rnd.hop) % axis_sizes[rnd.axis]) - c) * strides[rnd.axis]
+            fail = jax.random.bernoulli(
+                jax.random.fold_in(flt.round_fail_key(faults, t, k), lin),
+                faults.drop_prob)
+            fail = fail | dead | _is_dead(partner_lin)
+            state = push_sum_round(state, rnd,
+                                   fault=(fail, dead, faults.drop))
         (w_new,) = state.estimate()
         if cfg.project_after_gossip:
             w_new = obj.project_ball(w_new, cfg.lam)
+        if faults is not None:
+            w_new = jnp.where(dead, w, w_new)  # crashed nodes are frozen
         return w_new
 
     return step

@@ -207,9 +207,19 @@ def push_sum_round(
     rnd: GossipRound,
     *,
     self_share: float = 0.5,
+    fault: tuple | None = None,
 ) -> PushSumState:
     """One Push-Sum round inside ``shard_map``: keep ``self_share`` of the
-    local mass, ppermute the rest ``hop`` steps along ``rnd.axis``."""
+    local mass, ppermute the rest ``hop`` steps along ``rnd.axis``.
+
+    ``fault`` (optional) injects the :mod:`repro.core.faults` model into the
+    collective as a masked send: a ``(fail_send, dead, drop)`` triple where
+    ``fail_send`` is this shard's scalar bool — its outgoing share this round
+    is zeroed before the permute (every shard still executes the ppermute, so
+    the collective stays uniform across the mesh); ``drop="link"`` folds the
+    undeliverable share back into the local mass (exact conservation),
+    ``drop="message"`` loses it. ``dead`` freezes this shard's values and
+    weight entirely — a crashed node neither mixes nor accumulates."""
     # jax.lax.axis_size only exists on newer jax; psum of 1 is the portable
     # spelling (constant-folded at trace time, no collective is emitted)
     axis_size = getattr(jax.lax, "axis_size", None)
@@ -223,12 +233,30 @@ def push_sum_round(
     def _shift(x):
         return jax.lax.ppermute(x, rnd.axis, pairs)
 
+    if fault is None:
+        def _mix(v):
+            v32 = v.astype(jnp.float32)
+            return (v32 * self_share + _shift(v32 * send)).astype(v.dtype)
+
+        values = jax.tree.map(_mix, state.values)
+        weight = state.weight * self_share + _shift(state.weight * send)
+        return PushSumState(values, weight)
+
+    fail_send, dead, drop = fault
+    fail_send = fail_send | dead  # dead nodes never deliver
+    send_gate = jnp.where(fail_send, 0.0, send)
+    # "link": the sender detects the failure and keeps its share; "message":
+    # the share is lost in flight (value and weight mass vanish together)
+    keep = self_share + (jnp.where(fail_send, send, 0.0) if drop == "link" else 0.0)
+
     def _mix(v):
         v32 = v.astype(jnp.float32)
-        return (v32 * self_share + _shift(v32 * send)).astype(v.dtype)
+        out = v32 * keep + _shift(v32 * send_gate)
+        return jnp.where(dead, v32, out).astype(v.dtype)
 
     values = jax.tree.map(_mix, state.values)
-    weight = state.weight * self_share + _shift(state.weight * send)
+    w = state.weight
+    weight = jnp.where(dead, w, w * keep + _shift(w * send_gate))
     return PushSumState(values, weight)
 
 

@@ -20,8 +20,16 @@ true average. Both models are implemented:
   (TCP/ack-style); exact mass conservation, convergence merely slows by
   the drop rate.
 
-Node *crashes* are permanent outages of all links of a node; the simulator
-marks nodes dead and their mass frozen (measured, not hidden).
+Node *crashes* are permanent outages of all links of a node; dead nodes are
+frozen with their mass on the diagonal (measured, not hidden), and links
+*into* a dead node fail like any other (kept by the sender in link mode).
+
+Since the fault layer went device-resident this simulator is a thin host
+shell over :mod:`repro.core.faults` — ``matrix(t)`` is ``apply_faults`` on
+the clean topology matrix, same PRNG stream, same semantics — so anything
+validated here transfers verbatim to the fused training path
+(``GadgetConfig(faults=FaultPlan(...))``); tests pin the two matrix
+generators against each other at fixed seeds.
 """
 from __future__ import annotations
 
@@ -31,14 +39,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.push_sum import PushSumState
+from repro.core import faults as flt
 from repro.core import topology as topo
+from repro.core.push_sum import PushSumState
 
 __all__ = ["FaultySim"]
 
 
 class FaultySim:
-    """Matrix-form Push-Sum with per-round random link failures / dead nodes."""
+    """Matrix-form Push-Sum with per-round random link failures / dead nodes.
+
+    A thin host wrapper over the device fault model: ``matrix(t)`` builds the
+    clean round-t topology matrix and pushes it through
+    :func:`repro.core.faults.apply_faults` under the plan's salted PRNG
+    stream — the exact transformation the fused trainer applies on device."""
 
     def __init__(self, n_nodes: int, topology: str = "random", seed: int = 0,
                  drop_prob: float = 0.0,
@@ -47,30 +61,27 @@ class FaultySim:
         self.n = int(n_nodes)
         self.topology = topology
         self.seed = int(seed)
-        self.drop_prob = float(drop_prob)
-        self.drop = drop
-        self.dead = set(int(d) for d in dead_nodes)
+        self.plan = flt.validate_plan(
+            flt.FaultPlan(drop_prob=drop_prob, drop=drop,
+                          dead_nodes=tuple(dead_nodes), seed=seed), self.n)
+
+    @property
+    def drop_prob(self) -> float:
+        return self.plan.drop_prob
+
+    @property
+    def drop(self) -> str:
+        return self.plan.drop
+
+    @property
+    def dead(self) -> set[int]:
+        return set(self.plan.dead_nodes)
 
     def matrix(self, t: int) -> np.ndarray:
         rng = np.random.default_rng((self.seed, t))
         B = topo.build_matrix(self.topology, self.n,
                               t=t, rng=rng if self.topology == "random" else None)
-        B = B.copy()
-        # dead nodes: no sends, no receives; their mass freezes on the diagonal
-        for d in self.dead:
-            B[d, :] = 0.0
-            B[:, d] = 0.0
-            B[d, d] = 1.0
-        # link failures on off-diagonal shares
-        fail = rng.random((self.n, self.n)) < self.drop_prob
-        np.fill_diagonal(fail, False)
-        lost = np.where(fail, B, 0.0)
-        B = np.where(fail, 0.0, B)
-        if self.drop == "link":
-            # sender keeps the undeliverable share: exact mass conservation
-            B[np.arange(self.n), np.arange(self.n)] += lost.sum(axis=1)
-        # drop == "message": mass vanishes (rows no longer sum to 1)
-        return B
+        return flt.faulty_matrix_host(B, self.plan, t)
 
     def init(self, values) -> PushSumState:
         return PushSumState(values=values, weight=jnp.ones((self.n,), jnp.float32))

@@ -65,10 +65,14 @@ class SvmServer:
 
     def __init__(self, W, *, meta: dict | None = None,
                  blk_d: int = DEFAULT_BUCKET_BLK_D,
-                 use_kernels: bool | None = None):
+                 use_kernels: bool | None = None,
+                 reload_quarantine: int = 3):
         W = np.asarray(W, np.float32)
         if W.ndim not in (1, 2):
             raise ValueError(f"W must be (d,) or (C, d), got {W.shape}")
+        if reload_quarantine < 1:
+            raise ValueError(
+                f"reload_quarantine must be >= 1, got {reload_quarantine}")
         self.W = W
         self.binary = W.ndim == 1
         self.d = int(W.shape[-1])
@@ -79,14 +83,17 @@ class SvmServer:
         if use_kernels is None:
             use_kernels = not hinge_ops.default_interpret()
         self.use_kernels = bool(use_kernels)
+        self.reload_quarantine = int(reload_quarantine)
         self._W_dev = jnp.asarray(W)
         self._compiled: dict[tuple, object] = {}
         self._watch_root: str | None = None
         self._watch_step: int | None = None
+        self._reload_failures: dict[int, int] = {}
         self._stats = {
             "queries": 0, "batches": 0, "sparse_batches": 0,
             "blocks_visited": 0, "dense_block_equivalent": 0,
             "cap_overflows": 0, "swaps": 0, "reload_errors": 0,
+            "quarantined": 0,
         }
 
     # ------------------------------------------------------------- loading
@@ -154,22 +161,46 @@ class SvmServer:
         file read, no array I/O). Any failure mid-reload (pointer damage, a
         checkpoint deleted between pointer read and restore, a bad export)
         counts ``stats()["reload_errors"]`` and keeps serving the current
-        model — a live replica must never wedge on a bad publish."""
+        model — a live replica must never wedge on a bad publish.
+
+        A step that fails to load ``reload_quarantine`` times is
+        *quarantined*: the server stops retrying it every poll (no repeated
+        array I/O against a known-bad export, counted once in
+        ``stats()["quarantined"]``) while continuing to watch the pointer —
+        the next *different* published step gets a fresh chance, and an
+        operator rollback to a good older step swaps normally."""
         if self._watch_root is None:
             raise RuntimeError(
                 "server is not watching a checkpoint root — construct it "
                 "with SvmServer.watch(root)")
         try:
             step = ckpt.read_latest(self._watch_root)
-            if step is None or step == self._watch_step:
-                return None
-            w, extra = snap_mod.from_checkpoint(self._watch_root, step)
-            self.swap_weights(w, meta=extra)
-            self._watch_step = step
-            return step
         except Exception:
             self._stats["reload_errors"] += 1
             return None
+        if step is None or step == self._watch_step:
+            return None
+        fails = self._reload_failures.get(step, 0)
+        if fails >= self.reload_quarantine:
+            return None
+        try:
+            w, extra = snap_mod.from_checkpoint(self._watch_root, step)
+            self.swap_weights(w, meta=extra)
+        except Exception:
+            self._stats["reload_errors"] += 1
+            self._reload_failures[step] = fails + 1
+            if fails + 1 == self.reload_quarantine:
+                self._stats["quarantined"] += 1
+            return None
+        self._watch_step = step
+        self._reload_failures.pop(step, None)
+        return step
+
+    @property
+    def quarantined_steps(self) -> list[int]:
+        """Checkpoint steps the watcher has given up retrying (sorted)."""
+        return sorted(s for s, n in self._reload_failures.items()
+                      if n >= self.reload_quarantine)
 
     # ------------------------------------------------------------- scoring
 
@@ -273,8 +304,8 @@ class SvmServer:
     def stats(self) -> dict:
         """Serving counters: queries/batches served, ``distinct_shapes``
         (jit-cache size — the compile count asserted flat across hot swaps),
-        ``swaps`` / ``reload_errors`` from the watch path, and the sparse
-        blocks-visited accounting vs a dense sweep."""
+        ``swaps`` / ``reload_errors`` / ``quarantined`` from the watch path,
+        and the sparse blocks-visited accounting vs a dense sweep."""
         s = dict(self._stats)
         s["distinct_shapes"] = len(self._compiled)
         s["blocks_visited_ratio"] = (

@@ -17,16 +17,32 @@ boundary exports the current consensus model through
 Publish cadence is ``segment_iters`` (training iterations per checkpoint);
 ``keep=0`` (the default here, unlike the offline exporter) retains every
 version so a reader can never race a rotation and rollback targets survive.
-Exceptions in the training thread are captured, surfaced by :meth:`join`,
-and flagged via :attr:`error` — the publisher never kills the serving
-process that owns it.
+
+Hardening (the fault-tolerance layer):
+
+  * **Publish retries** — transient checkpoint-write failures (full disk,
+    flaky network filesystem) are retried with capped exponential backoff
+    before the run is declared failed; attempts are counted in
+    :attr:`publish_retries_used`.
+  * **Error surfacing** — a training-thread exception is captured, flagged
+    via :attr:`error`, and re-raised by *both* :meth:`join` and :meth:`wait`
+    — a supervisor parked on either call can never mistake a crashed run for
+    a finished one. The publisher itself never kills the serving process
+    that owns it.
+  * **Crash-resume** — ``save_train_state=True`` embeds the full per-node
+    :class:`~repro.core.gadget.TrainState` in every checkpoint, and
+    ``resume="latest"`` (or an explicit ``TrainState``) continues a killed
+    run from its last published state, bit-identical to the uninterrupted
+    trajectory (the stream keys its PRNG on the global iteration counter).
 """
 from __future__ import annotations
 
 import threading
+import time
 
-from repro.core.gadget import GadgetConfig, SegmentResult, gadget_train_stream
-from repro.serve.snapshot import Snapshot, to_checkpoint
+from repro.core.gadget import (GadgetConfig, SegmentResult, TrainState,
+                               gadget_train_stream)
+from repro.serve.snapshot import (Snapshot, latest_train_state, to_checkpoint)
 
 __all__ = ["TrainPublisher"]
 
@@ -41,23 +57,52 @@ class TrainPublisher:
     the publish cadence; ``quantize`` (None | "int8") and ``keep`` pass
     through to :func:`~repro.serve.snapshot.to_checkpoint`.
 
+    Fault tolerance:
+
+    * ``publish_retries`` / ``publish_backoff`` / ``publish_backoff_cap`` —
+      each checkpoint write gets ``1 + publish_retries`` attempts, sleeping
+      ``publish_backoff * 2**k`` (capped) between them; only the final
+      failure propagates. :attr:`publish_retries_used` counts retries spent.
+    * ``save_train_state=True`` embeds the resumable
+      :class:`~repro.core.gadget.TrainState` in every checkpoint.
+    * ``resume`` — an explicit ``TrainState``, or ``"latest"`` to probe
+      ``root`` for the newest embedded state (falling back to a fresh run
+      when none exists); the resolved choice is recorded in
+      :attr:`resumed_from` (the resume iteration, or None for fresh).
+
     Lifecycle: ``start()`` launches the daemon thread and returns ``self``;
     ``join()`` blocks until training converges (or ``cfg.max_iters``) and
-    returns the final :class:`~repro.core.gadget.SegmentResult`, re-raising
-    any training-thread exception. ``published`` grows by one step number
-    per flushed checkpoint (monotone — append-only under the GIL, safe to
-    read concurrently); ``wait(timeout)`` parks on the done event without
-    consuming the error.
+    returns the final :class:`~repro.core.gadget.SegmentResult`. Both
+    ``join()`` and a completed ``wait(timeout)`` re-raise a training-thread
+    exception. ``published`` grows by one step number per flushed checkpoint
+    (monotone — append-only under the GIL, safe to read concurrently).
     """
 
     def __init__(self, X_parts, y_parts, cfg: GadgetConfig = GadgetConfig(), *,
                  root: str, segment_iters: int, n_counts=None,
-                 quantize: str | None = None, keep: int = 0):
+                 quantize: str | None = None, keep: int = 0,
+                 save_train_state: bool = False,
+                 resume: TrainState | str | None = None,
+                 publish_retries: int = 3, publish_backoff: float = 0.05,
+                 publish_backoff_cap: float = 1.0):
+        if resume is not None and resume != "latest" \
+                and not isinstance(resume, TrainState):
+            raise ValueError(
+                f"resume must be None, 'latest', or a TrainState; got {resume!r}")
+        if publish_retries < 0:
+            raise ValueError(f"publish_retries must be >= 0, got {publish_retries}")
         self.root = root
         self.cfg = cfg
         self.segment_iters = int(segment_iters)
         self.quantize = quantize
         self.keep = int(keep)
+        self.save_train_state = bool(save_train_state)
+        self.resume = resume
+        self.resumed_from: int | None = None
+        self.publish_retries = int(publish_retries)
+        self.publish_backoff = float(publish_backoff)
+        self.publish_backoff_cap = float(publish_backoff_cap)
+        self.publish_retries_used = 0
         self._data = (X_parts, y_parts, n_counts)
         self.published: list[int] = []
         self.final: SegmentResult | None = None
@@ -74,15 +119,25 @@ class TrainPublisher:
         self._thread.start()
         return self
 
+    def _resolve_resume(self) -> TrainState | None:
+        """Materialize the ``resume`` argument into a TrainState (or None)."""
+        if self.resume is None:
+            return None
+        state = (latest_train_state(self.root) if self.resume == "latest"
+                 else self.resume)
+        self.resumed_from = None if state is None else int(state.iteration)
+        return state
+
     def _run(self) -> None:
         X_parts, y_parts, n_counts = self._data
         try:
             for seg in gadget_train_stream(X_parts, y_parts, self.cfg,
                                            segment_iters=self.segment_iters,
-                                           n_counts=n_counts):
+                                           n_counts=n_counts,
+                                           resume=self._resolve_resume()):
                 self._publish(seg)
                 self.final = seg
-        except BaseException as e:  # surfaced via join()/error, never lost
+        except BaseException as e:  # surfaced via join()/wait()/error
             self.error = e
         finally:
             self._done.set()
@@ -90,14 +145,37 @@ class TrainPublisher:
     def _publish(self, seg: SegmentResult) -> None:
         snap = Snapshot(iteration=seg.iteration, w=seg.w_consensus,
                         objective=seg.objective)
-        to_checkpoint(snap, self.root, quantize=self.quantize,
-                      keep=self.keep, lam=self.cfg.lam)
+        train_state = None
+        if self.save_train_state:
+            train_state = TrainState(iteration=seg.iteration, W=seg.W,
+                                     W_sum=seg.W_sum)
+        for attempt in range(self.publish_retries + 1):
+            try:
+                to_checkpoint(snap, self.root, quantize=self.quantize,
+                              keep=self.keep, lam=self.cfg.lam,
+                              train_state=train_state)
+                break
+            except OSError:
+                if attempt == self.publish_retries:
+                    raise
+                self.publish_retries_used += 1
+                time.sleep(min(self.publish_backoff * 2 ** attempt,
+                               self.publish_backoff_cap))
         self.published.append(seg.iteration)
+
+    def _raise_error(self) -> None:
+        if self.error is not None:
+            raise RuntimeError("training thread failed") from self.error
 
     def wait(self, timeout: float | None = None) -> bool:
         """Block until training finishes (or ``timeout`` seconds); True when
-        done. Does not raise the captured error — use :meth:`join` for that."""
-        return self._done.wait(timeout)
+        done. Re-raises the captured training-thread error once the run is
+        done, so a supervisor parked here cannot mistake a crash for
+        success; a timeout returns False without consuming the error."""
+        done = self._done.wait(timeout)
+        if done:
+            self._raise_error()
+        return done
 
     def join(self, timeout: float | None = None) -> SegmentResult | None:
         """Join the training thread and return the final segment result.
@@ -105,8 +183,7 @@ class TrainPublisher:
         Re-raises a training-thread exception here, on the caller's thread.
         Returns None only when ``timeout`` expired before completion."""
         self._thread.join(timeout)
-        if self.error is not None:
-            raise RuntimeError("training thread failed") from self.error
+        self._raise_error()
         return self.final if self._done.is_set() else None
 
     @property

@@ -25,11 +25,12 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro import checkpoint as ckpt
-from repro.core.gadget import SnapshotRing
+from repro.core.gadget import SnapshotRing, TrainState
 
 __all__ = [
     "Snapshot", "snapshots_from", "latest",
     "to_checkpoint", "from_checkpoint",
+    "train_state_from_checkpoint", "latest_train_state",
     "quantize_int8", "dequantize_int8",
     "SERVE_KIND", "SERVE_FORMAT_VERSION",
 ]
@@ -129,7 +130,8 @@ def dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
 
 def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
                   step: int | None = None, keep: int = 3,
-                  lam: float | None = None) -> str:
+                  lam: float | None = None,
+                  train_state: TrainState | None = None) -> str:
     """Export one snapshot as a servable checkpoint under ``root``.
 
     ``quantize``: ``None`` ships f32 weights; ``"int8"`` ships the int8+scale
@@ -139,6 +141,13 @@ def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
     dtype, shape, iteration, objective — so :func:`from_checkpoint` (and the
     serving engine) can rebuild the restore tree without out-of-band
     knowledge. ``step`` defaults to the snapshot's iteration.
+
+    ``train_state`` (optional :class:`repro.core.gadget.TrainState`) rides
+    along as extra ``train_W`` / ``train_W_sum`` leaves plus a
+    ``train_state`` manifest record — enough for
+    :func:`train_state_from_checkpoint` to rebuild the exact per-node solver
+    state, so a crashed trainer can resume bit-identically from its last
+    published model instead of restarting from zero.
     """
     if quantize not in (None, "int8"):
         raise ValueError(f"unknown quantize mode {quantize!r}")
@@ -159,6 +168,19 @@ def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
     }
     if lam is not None:
         extra["lam"] = float(lam)
+    if train_state is not None:
+        W = np.asarray(train_state.W)
+        W_sum = np.asarray(train_state.W_sum)
+        if W.shape != W_sum.shape:
+            raise ValueError(
+                f"train_state W/W_sum shapes differ: {W.shape} vs {W_sum.shape}")
+        tree["train_W"] = W
+        tree["train_W_sum"] = W_sum
+        extra["train_state"] = {
+            "iteration": int(train_state.iteration),
+            "shape": list(W.shape),
+            "dtype": str(W.dtype),
+        }
     return ckpt.save(root, snap.iteration if step is None else step, tree,
                      keep=keep, extra=extra)
 
@@ -186,7 +208,72 @@ def from_checkpoint(root: str, step: int | None = None
     if extra["dtype"] == "int8":
         like = {"w": np.zeros(w_shape, np.int8),
                 "scale": np.zeros(() if binary else (C,), np.float32)}
-        tree = ckpt.restore(root, like, step)
+    else:
+        like = {"w": np.zeros(w_shape, np.float32)}
+    like.update(_train_like(extra))
+    tree = ckpt.restore(root, like, step)
+    if extra["dtype"] == "int8":
         return dequantize_int8(tree["w"], tree["scale"]), extra
-    tree = ckpt.restore(root, {"w": np.zeros(w_shape, np.float32)}, step)
     return np.asarray(tree["w"]), extra
+
+
+def _train_like(extra: dict) -> dict:
+    """Template leaves for an embedded train state (empty when absent).
+
+    ``repro.checkpoint.restore`` validates the *full* treedef, so a serving
+    load of a resume-capable checkpoint must name the train leaves even when
+    it only wants ``w``."""
+    ts = extra.get("train_state")
+    if not ts:
+        return {}
+    shape, dtype = tuple(ts["shape"]), np.dtype(ts["dtype"])
+    return {"train_W": np.zeros(shape, dtype),
+            "train_W_sum": np.zeros(shape, dtype)}
+
+
+def train_state_from_checkpoint(root: str, step: int | None = None) -> TrainState:
+    """Rebuild the solver :class:`TrainState` embedded in a checkpoint.
+
+    Raises ``ValueError`` when the checkpoint is not a serving export or was
+    written without ``train_state=`` — resume needs the full per-node state,
+    not just the consensus weights."""
+    manifest = ckpt.read_manifest(root, step)
+    extra = manifest.get("extra") or {}
+    if extra.get("kind") != SERVE_KIND:
+        raise ValueError(
+            f"checkpoint under {root} is not a serving export "
+            f"(manifest extra: {extra!r})")
+    ts = extra.get("train_state")
+    if not ts:
+        raise ValueError(
+            f"checkpoint step {manifest.get('step')} under {root} carries no "
+            "train state — publish with TrainPublisher(save_train_state=True) "
+            "or to_checkpoint(..., train_state=...) to enable crash-resume")
+    d, C, binary = extra["d"], extra["n_classes"], extra["binary"]
+    w_shape = (d,) if binary else (C, d)
+    if extra["dtype"] == "int8":
+        like = {"w": np.zeros(w_shape, np.int8),
+                "scale": np.zeros(() if binary else (C,), np.float32)}
+    else:
+        like = {"w": np.zeros(w_shape, np.float32)}
+    like.update(_train_like(extra))
+    tree = ckpt.restore(root, like, step)
+    return TrainState(iteration=int(ts["iteration"]),
+                      W=tree["train_W"], W_sum=tree["train_W_sum"])
+
+
+def latest_train_state(root: str) -> TrainState | None:
+    """Lenient resume probe: the latest embedded train state, else ``None``.
+
+    Unlike :func:`train_state_from_checkpoint` this swallows *expected*
+    cold-start conditions — no checkpoint directory yet, no published step,
+    or a latest step written without train state — so a restarting publisher
+    can call it unconditionally and fall back to a fresh run."""
+    step = ckpt.read_latest(root)
+    if step is None:
+        return None
+    try:
+        return train_state_from_checkpoint(root, step)
+    except (ValueError, FileNotFoundError):
+        # not a serve export / no embedded state / step rotated away mid-probe
+        return None

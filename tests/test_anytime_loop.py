@@ -96,10 +96,67 @@ def test_publisher_surfaces_training_errors(tmp_path):
     X, y = _toy_parts()
     bad = _toy_cfg()._replace(topology="not-a-topology")
     pub = TrainPublisher(X, y, bad, root=str(tmp_path), segment_iters=5).start()
-    assert pub.wait(timeout=30)
+    # both supervisor entry points surface the crash: a completed wait()
+    # raises (a parked supervisor can't mistake a crash for success) ...
+    with pytest.raises(RuntimeError):
+        pub.wait(timeout=30)
     assert pub.error is not None
+    # ... and join() raises on the caller's thread
     with pytest.raises(RuntimeError):
         pub.join()
+
+
+def test_publisher_poisoned_root_retries_then_fails(tmp_path):
+    """Regression: a checkpoint root that can never be created (a regular
+    file squats on the path) must fail the run loudly after exhausting the
+    publish retries — not hang, not pass silently."""
+    X, y = _toy_parts()
+    blocker = tmp_path / "not-a-dir"
+    blocker.write_text("")
+    pub = TrainPublisher(X, y, _toy_cfg(max_iters=10), root=str(blocker),
+                         segment_iters=5, publish_retries=2,
+                         publish_backoff=0.001).start()
+    with pytest.raises(RuntimeError):
+        pub.join()
+    assert isinstance(pub.error, OSError)
+    assert pub.publish_retries_used == 2  # all retries spent on segment 1
+    assert pub.published == []
+
+
+def test_publisher_retry_recovers_transient_failure(tmp_path, monkeypatch):
+    """A transient write failure (first N attempts raise OSError) is absorbed
+    by the backoff loop: the run completes, every version lands."""
+    from repro.serve import publisher as pub_mod
+    real = pub_mod.to_checkpoint
+    fail_twice = {"left": 2}
+
+    def flaky(*a, **kw):
+        if fail_twice["left"] > 0:
+            fail_twice["left"] -= 1
+            raise OSError("transient write failure")
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pub_mod, "to_checkpoint", flaky)
+    X, y = _toy_parts()
+    root = str(tmp_path / "ckpts")
+    pub = TrainPublisher(X, y, _toy_cfg(max_iters=10), root=root,
+                         segment_iters=5, publish_retries=3,
+                         publish_backoff=0.001).start()
+    final = pub.join()
+    assert pub.error is None and final.done
+    assert pub.published == [5, 10]
+    assert pub.publish_retries_used == 2
+    assert ckpt.read_latest(root) == 10
+
+
+def test_publisher_rejects_bad_resume_and_retries():
+    X, y = _toy_parts()
+    with pytest.raises(ValueError):
+        TrainPublisher(X, y, _toy_cfg(), root="/tmp/x", segment_iters=5,
+                       resume="not-latest")
+    with pytest.raises(ValueError):
+        TrainPublisher(X, y, _toy_cfg(), root="/tmp/x", segment_iters=5,
+                       publish_retries=-1)
 
 
 def test_save_advances_pointer_monotonically(tmp_path):
@@ -279,6 +336,154 @@ def test_swap_under_load_no_recompile_no_drops(tmp_path):
     assert srv.stats()["distinct_shapes"] == shapes_before  # no recompiles
     assert answered == set(submitted)  # no request dropped
     assert mb.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Crash-resume: embedded train state + resume="latest"
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_train_state_roundtrip(tmp_path):
+    from repro.core.gadget import TrainState
+    from repro.serve.snapshot import (Snapshot, latest_train_state,
+                                      to_checkpoint, train_state_from_checkpoint)
+    root = str(tmp_path)
+    m, d = 3, 8
+    ts = TrainState(iteration=7,
+                    W=np.arange(m * d, dtype=np.float32).reshape(m, d),
+                    W_sum=np.full((m, d), 2.5, np.float32))
+    snap = Snapshot(iteration=7, w=np.arange(d, dtype=np.float32), objective=0.5)
+    to_checkpoint(snap, root, train_state=ts, lam=0.1)
+    # serving load is unchanged by the extra leaves
+    w, extra = from_checkpoint(root)
+    np.testing.assert_array_equal(w, snap.w)
+    assert extra["train_state"]["iteration"] == 7
+    # exact train-state round trip
+    back = train_state_from_checkpoint(root)
+    assert back.iteration == 7
+    np.testing.assert_array_equal(np.asarray(back.W), np.asarray(ts.W))
+    np.testing.assert_array_equal(np.asarray(back.W_sum), np.asarray(ts.W_sum))
+    assert latest_train_state(root).iteration == 7
+    # int8 export carries train state too (weights quantize, state doesn't)
+    root_q = str(tmp_path / "q")
+    to_checkpoint(snap, root_q, quantize="int8", train_state=ts)
+    np.testing.assert_array_equal(
+        np.asarray(train_state_from_checkpoint(root_q).W), np.asarray(ts.W))
+
+
+def test_train_state_probe_cold_start_paths(tmp_path):
+    from repro.serve.snapshot import (Snapshot, latest_train_state,
+                                      to_checkpoint, train_state_from_checkpoint)
+    # no directory / no checkpoint yet -> lenient None
+    assert latest_train_state(str(tmp_path / "nowhere")) is None
+    # checkpoint without embedded state -> lenient None, strict ValueError
+    root = str(tmp_path)
+    to_checkpoint(Snapshot(3, np.ones(4, np.float32), 0.1), root)
+    assert latest_train_state(root) is None
+    with pytest.raises(ValueError, match="no train state"):
+        train_state_from_checkpoint(root)
+
+
+def test_publisher_kill_and_resume_bit_identical(tmp_path):
+    """The acceptance-criteria test: a publisher killed between segments and
+    restarted with ``resume="latest"`` finishes with weights bit-identical to
+    the uninterrupted run."""
+    from repro.core.gadget import TrainState
+    from repro.serve.snapshot import Snapshot, to_checkpoint
+    X, y = _toy_parts()
+    cfg = _toy_cfg(max_iters=20)
+    # uninterrupted run
+    root_full = str(tmp_path / "full")
+    pub_full = TrainPublisher(X, y, cfg, root=root_full, segment_iters=5,
+                              save_train_state=True).start()
+    final_full = pub_full.join()
+    # "crashed" run: publish exactly one segment, then die
+    root = str(tmp_path / "crashed")
+    for seg in gadget_train_stream(X, y, cfg, segment_iters=5):
+        to_checkpoint(Snapshot(seg.iteration, np.asarray(seg.w_consensus),
+                               seg.objective), root, lam=cfg.lam,
+                      train_state=TrainState(seg.iteration, seg.W, seg.W_sum))
+        break
+    # restart from the published state
+    pub2 = TrainPublisher(X, y, cfg, root=root, segment_iters=5,
+                          save_train_state=True, resume="latest").start()
+    final2 = pub2.join()
+    assert pub2.resumed_from == 5
+    assert pub2.published == [10, 15, 20]  # continues, never re-publishes 5
+    assert final2.iteration == final_full.iteration
+    np.testing.assert_array_equal(np.asarray(final2.w_consensus),
+                                  np.asarray(final_full.w_consensus))
+    assert bool(jnp.all(final2.W == final_full.W))
+
+
+def test_publisher_resume_latest_falls_back_to_fresh(tmp_path):
+    """resume="latest" on an empty root (or one whose checkpoints carry no
+    train state) starts from scratch instead of failing."""
+    X, y = _toy_parts()
+    root = str(tmp_path / "ckpts")
+    pub = TrainPublisher(X, y, _toy_cfg(max_iters=10), root=root,
+                         segment_iters=5, resume="latest").start()
+    final = pub.join()
+    assert pub.resumed_from is None
+    assert pub.published == [5, 10] and final.done
+
+
+# ---------------------------------------------------------------------------
+# Reload quarantine
+# ---------------------------------------------------------------------------
+
+
+def _poison_step(root, step):
+    """A structurally-complete step dir whose contents can never load."""
+    path = os.path.join(root, f"step_{step:09d}")
+    os.makedirs(path)
+    with open(os.path.join(path, "manifest.json"), "w") as fh:
+        fh.write("{ not json")
+    with open(os.path.join(path, "arrays.npz"), "w") as fh:
+        fh.write("not an npz")
+    ckpt_io._write_pointer(root, step)
+
+
+def test_watcher_quarantines_repeated_bad_step(tmp_path):
+    root, pub = _publish_run(tmp_path)
+    srv = SvmServer.watch(root, use_kernels=False, reload_quarantine=3)
+    w_before = srv.W.copy()
+    _poison_step(root, 99)
+    # three strikes, each counted, model untouched
+    for k in range(3):
+        assert srv.maybe_reload() is None
+        assert srv.stats()["reload_errors"] == k + 1
+    assert srv.stats()["quarantined"] == 1
+    assert srv.quarantined_steps == [99]
+    # quarantined: further polls stop burning I/O on the bad step
+    assert srv.maybe_reload() is None
+    assert srv.stats()["reload_errors"] == 3
+    np.testing.assert_array_equal(srv.W, w_before)
+    # rollback to a known-good step still swaps normally
+    ckpt.point_latest(root, pub.published[0])
+    assert srv.maybe_reload() == pub.published[0]
+    assert srv.stats()["swaps"] == 1
+
+
+def test_quarantine_scoped_per_step(tmp_path):
+    """A new (different) published step gets a fresh chance after an earlier
+    step was quarantined."""
+    root, pub = _publish_run(tmp_path)
+    ckpt.point_latest(root, pub.published[0])
+    srv = SvmServer.watch(root, use_kernels=False, reload_quarantine=1)
+    _poison_step(root, 99)
+    assert srv.maybe_reload() is None
+    assert srv.quarantined_steps == [99]
+    # a later good publish supersedes the quarantined one
+    ckpt.point_latest(root, pub.published[-1])
+    assert srv.maybe_reload() == pub.published[-1]
+    assert srv.stats()["swaps"] == 1 and srv.stats()["quarantined"] == 1
+
+
+def test_server_rejects_bad_quarantine():
+    with pytest.raises(ValueError):
+        SvmServer(np.zeros(8, np.float32), use_kernels=False,
+                  reload_quarantine=0)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,15 @@
 """Fault-tolerant Push-Sum (paper §5 future work): link failures, message
-loss, and dead nodes — the mass-conservation algebra under each model."""
+loss, and dead nodes — the mass-conservation algebra under each model, plus
+the matrix-level properties of the device fault generator
+(:mod:`repro.core.faults`) that the training-path guarantees rest on."""
+import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.core import faults as flt
+from repro.core import topology as topo
+from repro.core.faults import FaultPlan
 from repro.core.resilience import FaultySim
 
 
@@ -56,3 +63,121 @@ def test_zero_drop_matches_clean_pushsum():
     a = FaultySim(8, "random", drop_prob=0.0, seed=7).run((x[:8],), 40)
     b = PushSumSim(8, "random", seed=7).run((x[:8],), 40)
     assert np.allclose(np.asarray(a.estimate()[0]), np.asarray(b.estimate()[0]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Matrix-level properties of the device fault generator
+# ---------------------------------------------------------------------------
+# Convention reminder: B[i, j] is the share node i pushes to node j and one
+# round applies x' = B^T x, so *row* sums of B are each sender's outgoing
+# mass — row-stochasticity is exactly mass conservation.
+
+
+def _clean(topology, m, t, seed=0):
+    rng = np.random.default_rng((seed, t)) if topology == "random" else None
+    return topo.build_matrix(topology, m, t=t, rng=rng)
+
+
+@pytest.mark.parametrize("topology", ["exponential", "random"])
+def test_link_mode_rows_stochastic_exactly(topology):
+    """Link-mode faulty matrices stay row-stochastic for every draw — the
+    sender keeps each undeliverable share, so conservation is exact, not
+    statistical."""
+    m = 8
+    plan = flt.validate_plan(FaultPlan(drop_prob=0.4, drop="link",
+                                       dead_nodes=(2,), seed=11), m)
+    for t in range(20):
+        B = flt.faulty_matrix_host(_clean(topology, m, t), plan, t)
+        np.testing.assert_allclose(B.sum(axis=1), np.ones(m), atol=1e-6)
+        assert np.all(B >= 0)
+
+
+@pytest.mark.parametrize("topology", ["exponential", "random"])
+def test_message_mode_leakage_bounded_by_drop_prob(topology):
+    """Message-mode rows sum to < 1 only by what failed links carried: each
+    row keeps at least its diagonal self-share (the diagonal never fails),
+    and the *average* leaked fraction matches drop_prob x (off-diagonal
+    mass) to statistical tolerance."""
+    m = 8
+    p = 0.25
+    plan = flt.validate_plan(FaultPlan(drop_prob=p, drop="message", seed=12), m)
+    leaked, offdiag = [], []
+    for t in range(300):
+        B0 = _clean(topology, m, t)
+        B = flt.faulty_matrix_host(B0, plan, t)
+        assert np.all(B.sum(axis=1) <= 1.0 + 1e-6)
+        # the self-share survives every draw
+        assert np.all(np.diag(B) >= np.diag(B0) - 1e-6)
+        leaked.append(1.0 - B.sum(axis=1))
+        offdiag.append(B0.sum(axis=1) - np.diag(B0))
+    rate = np.mean(leaked) / np.mean(offdiag)
+    assert rate == pytest.approx(p, abs=0.02), rate
+
+
+def test_dead_rows_collapse_and_inbound_links_fail():
+    m = 6
+    for drop in ("link", "message"):
+        plan = flt.validate_plan(
+            FaultPlan(drop_prob=0.0, drop=drop, dead_nodes=(1, 4), seed=0), m)
+        B = flt.faulty_matrix_host(_clean("exponential", m, 3), plan, 3)
+        for d in (1, 4):
+            np.testing.assert_array_equal(B[d], np.eye(m, dtype=B.dtype)[d])
+            # nothing is delivered *to* a dead node either
+            off = np.delete(B[:, d], d)
+            np.testing.assert_array_equal(off, np.zeros(m - 1, B.dtype))
+        if drop == "link":  # shares into the dead nodes returned to senders
+            np.testing.assert_allclose(B.sum(axis=1), np.ones(m), atol=1e-6)
+
+
+def test_dead_node_mass_frozen_through_rounds():
+    """A dead node's Push-Sum mass weight stays exactly at its initial value
+    through arbitrarily many faulty rounds (its row is e_d and inbound links
+    fail), and its value mass never moves."""
+    m, d = 8, 3
+    x = _vals(n=m, d=d, seed=9)
+    sim = FaultySim(m, "exponential", drop_prob=0.3, drop="link",
+                    dead_nodes=(5,), seed=6)
+    st = sim.run((x,), 60)
+    assert float(st.weight[5]) == 1.0
+    np.testing.assert_array_equal(np.asarray(st.values[0][5]), np.asarray(x[5]))
+
+
+@pytest.mark.parametrize("topology", ["exponential", "random"])
+def test_host_and_device_fault_matrices_identical(topology):
+    """The pinning test behind 'one fault model': FaultySim's host matrix and
+    the jitted on-device faulty_rounds stack are byte-identical at fixed
+    seeds — whatever the simulator validates transfers verbatim to the fused
+    trainer."""
+    m, R = 8, 3
+    sim = FaultySim(m, topology, drop_prob=0.35, drop="message",
+                    dead_nodes=(0, 3), seed=21)
+    for t in (1, 7, 19):
+        clean = np.stack([_clean(topology, m, t, seed=21) if topology == "random"
+                          else _clean(topology, m, t) for _ in range(1)])
+        # r=0 slice via the host shell...
+        host = flt.faulty_matrix_host(clean[0], sim.plan, t, r=0)
+        # ...vs the device vmap the training step folds
+        dev = np.asarray(jax.jit(
+            lambda Bs: flt.faulty_rounds(Bs, sim.plan, t))(
+                jnp.asarray(np.broadcast_to(clean[0], (R, m, m)))))
+        np.testing.assert_array_equal(host, dev[0])
+        # FaultySim.matrix goes through the same path end to end
+        if topology == "random":
+            np.testing.assert_array_equal(sim.matrix(t), host)
+
+
+def test_validate_plan_errors_and_normalization():
+    with pytest.raises(ValueError, match="drop mode"):
+        flt.validate_plan(FaultPlan(drop="udp"), 4)
+    with pytest.raises(ValueError, match="drop_prob"):
+        flt.validate_plan(FaultPlan(drop_prob=1.0), 4)
+    with pytest.raises(ValueError, match="dead_nodes"):
+        flt.validate_plan(FaultPlan(dead_nodes=(4,)), 4)
+    with pytest.raises(ValueError, match="all 4 nodes dead"):
+        flt.validate_plan(FaultPlan(dead_nodes=(0, 1, 2, 3)), 4)
+    norm = flt.validate_plan(
+        FaultPlan(drop_prob=np.float64(0.2), dead_nodes=(3, 1, 3)), 4)
+    assert norm.dead_nodes == (1, 3) and isinstance(norm.drop_prob, float)
+    # canonical plans hash equal -> shared jit cache entries
+    assert norm == flt.validate_plan(FaultPlan(drop_prob=0.2,
+                                               dead_nodes=(1, 3, 1)), 4)
