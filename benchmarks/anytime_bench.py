@@ -45,6 +45,7 @@ import numpy as np
 from benchmarks.common import emit, runner_fingerprint
 from repro import checkpoint as ckpt
 from repro import serve
+from repro import telemetry as tm
 from repro.core.gadget import GadgetConfig
 from repro.data.libsvm import dump_libsvm, iter_libsvm_chunks
 from repro.data.svm_datasets import make_dataset, partition
@@ -112,6 +113,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
     rows = 4 if quick else 8
 
     t0 = time.time()
+    tm.reset()  # the JSON's telemetry section covers this run only
     ds = make_dataset("ccat", scale=scale, seed=0, sparse=True)
     Pe, yp, nc = partition(ds.X_train, ds.y_train, n_nodes, seed=0)
     cfg = GadgetConfig(lam=ds.lam, batch_size=4, gossip_rounds=4,
@@ -131,9 +133,14 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
         dump_libsvm(qpath, ell_q.to_csr(), y_q)  # the on-disk streaming source
         root = os.path.join(td, "ckpts")
 
+        # the whole train-to-serve loop reports into ONE flight recorder:
+        # publisher spans + per-segment train readings, server counters +
+        # kernel accounting, batcher latency histograms
         pub = serve.TrainPublisher(Pe, yp, cfg, root=root,
                                    segment_iters=segment_iters,
-                                   n_counts=nc).start()
+                                   n_counts=nc,
+                                   telemetry=tm.TrainTelemetry(),
+                                   registry=tm.default_registry()).start()
         # serving comes up as soon as the FIRST version lands
         deadline = time.time() + FIRST_CKPT_TIMEOUT_S
         while ckpt.read_latest(root) is None:
@@ -142,7 +149,8 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
             if time.time() > deadline:
                 raise TimeoutError("no checkpoint published within timeout")
             time.sleep(0.02)
-        srv = serve.SvmServer.watch(root, use_kernels=True)
+        srv = serve.SvmServer.watch(root, use_kernels=True,
+                                    registry=tm.default_registry())
 
         # bucket ladder calibrated on the query planes themselves — the block
         # cap is then sound for every batch, so no cap-overflow shapes can
@@ -151,7 +159,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
             serve.bucket_ladder(ell_q.k_max, rows=rows,
                                 min_k=max(8, ell_q.k_max // 4), d=ds.d),
             ell_q.cols, ell_q.vals, ds.d)
-        mb = serve.MicroBatcher(buckets)
+        mb = serve.MicroBatcher(buckets, registry=tm.default_registry())
         for b in buckets:  # warm every rung before measuring compile flatness
             srv.score_sparse(np.zeros((b.rows, b.k), np.int32),
                              np.zeros((b.rows, b.k), np.float32),
@@ -211,6 +219,11 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
             f"{st['distinct_shapes']}")
         assert st["reload_errors"] == 0
         assert mb.pending == 0
+        # the registry's publish counter must agree with the publisher's list
+        published_counted = int(tm.default_registry().value("publish.segments"))
+        assert published_counted == len(pub.published), (
+            f"registry counted {published_counted} published segments, "
+            f"publisher recorded {len(pub.published)}")
 
         if verbose:
             for p in points:
@@ -251,6 +264,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
                 "final_accuracy": final_accuracy,
                 "timeline": points,
             },
+            "telemetry": tm.default_registry().values(),
             "total": {"seconds": time.time() - t0},
         }
     if json_path:

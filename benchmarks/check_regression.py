@@ -60,7 +60,16 @@ SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
                # fault_bench: float-accumulation-sensitive measurements (the
                # bench's own asserts are the regression surface for these)
                "faulty_parity_max_abs_diff", "consensus_spread", "mass_min",
-               "objective", "accuracy_degradation_link_0.2"}
+               "objective", "accuracy_degradation_link_0.2",
+               "disagreement", "leakage",
+               # telemetry_overhead_bench: ratios of two small wall-clocks —
+               # the bench's own <= 5% assert is the gate, never the diff
+               "overhead_ratio", "overhead_ratio_sum"}
+# whole subtrees that are observability output, not a regression surface:
+# the flight-recorder snapshot's counter values scale with how much traffic
+# the run happened to push (live-pass races, rep counts), so leaves under
+# these keys are reported in the JSON but never diffed
+SKIP_PARENTS = {"telemetry"}
 # the fingerprint subtree identifies the runner; it is compared as a whole,
 # never leaf-by-leaf (a different cpu_count is not a "structural change")
 RUNNER_KEY = "runner"
@@ -131,7 +140,8 @@ def compare(fresh: dict, baseline: dict, threshold: float
     for path, base_val in _leaves(baseline):
         name = ".".join(path)
         leaf = path[-1]
-        if leaf in SKIP_LEAVES or path[0] == RUNNER_KEY:
+        if leaf in SKIP_LEAVES or path[0] == RUNNER_KEY \
+                or set(path[:-1]) & SKIP_PARENTS:
             continue
         is_time = leaf in WALLCLOCK_LEAVES or bool(set(path) & WALLCLOCK_PARENTS)
         if path not in fresh_map:

@@ -7,9 +7,18 @@ One Reuters-shaped run per fault regime, all through the fused device path
   * **clean** — the fault-free baseline every regime is judged against;
   * **link drops** at 0.1 / 0.2 / 0.4 — ack'd-link model, mass conserved
     exactly, convergence merely slows;
-  * **message drops** at 0.2 — UDP model, mass measurably leaks;
+  * **message drops** at 0.1 / 0.2 / 0.4 — UDP model, mass measurably leaks,
+    and the leakage gauge (1 - min mass, read from the flight-recorder trace
+    ring) must grow strictly with drop_prob;
   * **dead nodes** (1 and 2 of m crashed from iteration 0) — their data is
     simply gone, survivors carry the consensus.
+
+Every run trains with the on-device telemetry ring attached
+(``telemetry=TrainTelemetry(every=1, slots=max_iters)`` — never wraps), so
+per-regime mass extrema, consensus disagreement, and fault-drop counts are
+read from ``GadgetResult.telemetry``, not recomputed; the JSON's
+``telemetry`` section snapshots the default registry (iterations, gossip
+bytes, cumulative fault drops) after the sweep.
 
 Asserted on every run (the acceptance criteria, not just reported):
 
@@ -41,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, runner_fingerprint
+from repro import telemetry as tm
 from repro.core.faults import FaultPlan
 from repro.core.gadget import (GadgetConfig, TrainState, gadget_train,
                                gadget_train_reference, gadget_train_stream)
@@ -65,7 +75,8 @@ def _spread(res) -> float:
 
 def _point(tag, res, ds, seconds) -> dict:
     acc = _accuracy(res.w_consensus, ds.X_test, ds.y_test)
-    mass_min = float(res.mass_trace.min()) if res.mass_trace.size else 1.0
+    tr = res.telemetry  # flight recorder: mass/disagreement/drops per iter
+    mass_min = float(np.min(tr.mass_min)) if tr.count else 1.0
     emit(f"faults/{tag}", seconds * 1e6,
          f"acc={acc:.3f};mass_min={mass_min:.4f};spread={_spread(res):.3g}")
     return {
@@ -73,6 +84,8 @@ def _point(tag, res, ds, seconds) -> dict:
         "objective": float(res.objective_trace[-1]),
         "mass_min": mass_min,
         "consensus_spread": _spread(res),
+        "disagreement": float(tr.final_disagreement),
+        "fault_drops": int(np.sum(tr.drops)),
         "iters": int(res.iters),
         "seconds": seconds,
     }
@@ -86,6 +99,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
         max_iters = 80 if quick else 300
 
     t0 = time.time()
+    tm.reset()  # the JSON's telemetry section covers this sweep only
     ds = make_dataset("reuters", scale=scale, seed=0)
     X_parts, y_parts, n_counts = partition(ds.X_train, ds.y_train, n_nodes,
                                            seed=0)
@@ -94,10 +108,13 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
                         topology="exponential", max_iters=max_iters,
                         check_every=max(1, max_iters // 8), epsilon=0.0)
 
+    ring = tm.TrainTelemetry(every=1, slots=max_iters)  # never wraps
+
     def train(faults=None):
         cfg = base._replace(faults=faults)
         t = time.time()
-        res = gadget_train(X_parts, y_parts, cfg, n_counts=n_counts)
+        res = gadget_train(X_parts, y_parts, cfg, n_counts=n_counts,
+                           telemetry=ring)
         return cfg, res, time.time() - t
 
     points: dict[str, dict] = {}
@@ -105,6 +122,8 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
     _, clean, dt = train()
     points["clean"] = _point("clean", clean, ds, dt)
     assert clean.mass_trace.min() >= 1.0 - 1e-4, "clean run leaked mass"
+    assert points["clean"]["mass_min"] >= 1.0 - 1e-4
+    assert points["clean"]["fault_drops"] == 0, "clean run counted drops"
 
     for p in DROP_RATES:
         _, res, dt = train(FaultPlan(drop_prob=p, drop="link", seed=13))
@@ -112,11 +131,27 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
         assert res.mass_trace.min() >= 1.0 - 1e-4, (
             f"link mode must conserve mass, leaked at drop {p}: "
             f"{res.mass_trace.min()}")
+        assert points[f"link_{p}"]["fault_drops"] > 0, (
+            f"telemetry ring saw no drops at link drop {p}")
 
-    _, msg, dt = train(FaultPlan(drop_prob=0.2, drop="message", seed=13))
-    points["message_0.2"] = _point("message_0.2", msg, ds, dt)
+    # ---- message-mode leakage sweep: the gauge must track drop_prob
+    leakage: dict[float, float] = {}
+    for p in DROP_RATES:
+        _, msg, dt = train(FaultPlan(drop_prob=p, drop="message", seed=13))
+        pt = _point(f"message_{p}", msg, ds, dt)
+        pt["leakage"] = leakage[p] = 1.0 - pt["mass_min"]
+        points[f"message_{p}"] = pt
+        # ring vs ε-check trace: two decimations of one mass series — the
+        # ring (every iteration) can only see deeper minima
+        assert pt["mass_min"] <= float(msg.mass_trace.min()) + 1e-6
     assert points["message_0.2"]["mass_min"] < 0.999, (
         "message mode at drop 0.2 should measurably leak mass")
+    leak_seq = [leakage[p] for p in DROP_RATES]
+    assert leak_seq == sorted(leak_seq) and leak_seq[0] < leak_seq[-1], (
+        f"mass leakage should grow with drop_prob, got {leakage}")
+    drop_seq = [points[f"message_{p}"]["fault_drops"] for p in DROP_RATES]
+    assert drop_seq == sorted(drop_seq) and drop_seq[0] < drop_seq[-1], (
+        f"fault-drop counts should grow with drop_prob, got {drop_seq}")
 
     for n_dead in (1, 2):
         dead = tuple(range(n_dead))
@@ -175,10 +210,13 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
             "parity_ok": int(parity <= 1e-5),
             "link_mass_conserved": 1,
             "message_mass_leaks": int(points["message_0.2"]["mass_min"] < 0.999),
+            "leakage_monotone_in_drop_prob": 1,
+            "drop_counts_monotone_in_drop_prob": 1,
             "resume_bit_identical": int(resume_ok),
             "accuracy_degradation_link_0.2": degrade,
             "degradation_within_budget": int(degrade <= DEGRADE_BUDGET),
         },
+        "telemetry": tm.default_registry().values(),
         "total": {"seconds": time.time() - t0},
     }
     if json_path:

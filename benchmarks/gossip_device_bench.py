@@ -24,7 +24,9 @@ Measures, on the 32-node simulator at d=4096 (paper-scale weight dimension):
     raise, so a clean pass certifies the loop is device-resident.
 
 Emits CSV rows via benchmarks.common.emit and optionally a JSON file
-(CI diffs it against the committed BENCH_gossip_device.json baseline).
+(CI diffs it against the committed BENCH_gossip_device.json baseline); the
+JSON includes a registry-backed ``telemetry`` section (flight-recorder
+iteration/gossip-byte counters accumulated across the measured runs).
 """
 from __future__ import annotations
 
@@ -37,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, runner_fingerprint
+from repro import telemetry as tm
 from repro.core import gadget
 from repro.core.gadget import GadgetConfig, gadget_train, gadget_train_reference
 
@@ -75,6 +78,7 @@ def _transfer_guard_proof(Xp, yp, cfg) -> bool:
 
 def run(n_nodes=32, d=4096, n_i=64, n_iters=200, check_every=50,
         topology="exponential", verbose=True, json_path=None):
+    tm.reset()  # the JSON's telemetry section covers this run only
     cfg = GadgetConfig(lam=1e-3, batch_size=8, gossip_rounds=4, topology=topology,
                        max_iters=n_iters, check_every=check_every, epsilon=0.0)
     cfg_pr1 = cfg._replace(fused=False)
@@ -123,6 +127,7 @@ def run(n_nodes=32, d=4096, n_i=64, n_iters=200, check_every=50,
         "consensus_max_abs_diff": consensus_diff,
         "fused_vs_pr1_max_abs_diff": fused_vs_pr1,
         "transfer_guard_clean": guard_ok,
+        "telemetry": tm.default_registry().values(),
     }
     if verbose:
         emit(f"gossip_device/{topology}(m={n_nodes},d={d})", fused_s * 1e6,

@@ -4,7 +4,10 @@ This container executes Pallas in interpret mode (CPU), so absolute kernel
 wall-times are NOT TPU numbers; what is measured and reported:
   * oracle (pure-jnp, XLA-compiled) latency — the measurable baseline,
   * interpret-mode kernel vs oracle allclose (correctness re-check),
-  * per-call HLO flops/bytes of the oracle (roofline inputs for the op).
+  * per-call HLO flops/bytes of the oracle (roofline inputs for the op),
+  * a registry-backed ``telemetry`` section: the eager interpret-mode kernel
+    calls self-record launch/bytes/flops series into the flight recorder
+    (``kernel.launches{kernel=...}`` etc.), snapshotted into the JSON.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, runner_fingerprint
+from repro import telemetry as tm
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hinge_subgrad import ops as hinge_ops
 from repro.kernels.hinge_subgrad.ref import (ell_fleet_half_step_ref,
@@ -40,6 +44,7 @@ def _time(fn, *args, iters=5):
 
 def run(verbose=True, quick=False, json_path=None):
     rng = np.random.default_rng(0)
+    tm.reset()  # the JSON's telemetry section covers this run only
     rows = {}
     # --quick shrinks every shape ~4x so the CI smoke job finishes in seconds
     # while still exercising the same jitted code paths.
@@ -142,7 +147,9 @@ def run(verbose=True, quick=False, json_path=None):
     if json_path:
         with open(json_path, "w") as fh:
             json.dump({"quick": quick, "runner": runner_fingerprint(),
-                       "us_per_call": rows}, fh, indent=2)
+                       "us_per_call": rows,
+                       "telemetry": tm.default_registry().values()},
+                      fh, indent=2)
     return rows
 
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from benchmarks.common import emit, runner_fingerprint
 from repro import serve
+from repro import telemetry as tm
 from repro.core.gadget import GadgetConfig, gadget_train
 from repro.data.svm_datasets import make_dataset, partition
 from repro.serve import snapshot as snap_mod
@@ -98,13 +99,16 @@ def bench_batcher(snap, Pe, ell_test, rows: int, n_queries: int,
     """Ragged traffic through the bucketed batcher on a fresh engine:
     latency/throughput accounting + the compile-count and block-ratio
     assertions (fresh engine so ``distinct_shapes`` counts only this path)."""
-    srv = serve.SvmServer.from_snapshot(snap, use_kernels=True)
+    # shared flight-recorder registry: server counters, kernel launch/bytes
+    # accounting, and batcher latency histograms land in one dump
+    srv = serve.SvmServer.from_snapshot(snap, use_kernels=True,
+                                        registry=tm.default_registry())
     k_max = ell_test.k_max
     buckets = serve.calibrate_buckets(
         serve.bucket_ladder(k_max, rows=rows, min_k=max(8, k_max // 4), d=snap.d),
         Pe.cols.reshape(-1, Pe.cols.shape[-1])[:2000],
         Pe.vals.reshape(-1, Pe.vals.shape[-1])[:2000], snap.d)
-    mb = serve.MicroBatcher(buckets)
+    mb = serve.MicroBatcher(buckets, registry=tm.default_registry())
 
     # warm each bucket's executable before the timed traffic so latency
     # percentiles measure steady-state serving, not first-batch compiles
@@ -161,8 +165,12 @@ def bench_batcher(snap, Pe, ell_test, rows: int, n_queries: int,
         "pad_fraction": round(st_mb["pad_fraction"], 4),
         "latency": {"us_per_call": {
             "p50": st_mb["latency_p50_ms"] * 1e3,
+            "p90": st_mb["latency_p90_ms"] * 1e3,
             "p99": st_mb["latency_p99_ms"] * 1e3,
         }},
+        # deterministic per-rung routing counts (latencies stay wall-clock)
+        "bucket_requests": {k: v["count"]
+                            for k, v in st_mb["per_bucket_latency_ms"].items()},
         "throughput": {"queries_per_sec": st_mb["queries_per_sec"]},
         "blocks": {
             "visited": blocks_visited,
@@ -184,6 +192,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
     n_queries = 48 if quick else 256
 
     t0 = time.time()
+    tm.reset()  # the JSON's telemetry section covers this run only
     ds = make_dataset("ccat", scale=scale, seed=0, sparse=True)
     t_gen = time.time() - t0
     res, Pe, t_train = _train_snapshot(ds, n_nodes, n_iters)
@@ -214,6 +223,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 4,
                                    min(32, ds.X_test.shape[0]), verbose),
             "batcher": bench_batcher(snap, Pe, ds.X_test, rows, n_queries,
                                      verbose),
+            "telemetry": tm.default_registry().values(),
         }
     if json_path:
         with open(json_path, "w") as fh:

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, runner_fingerprint
+from repro import telemetry as tm
 # _batch_ids/_stream_keys are the training loop's own sampling: the schedule
 # metrics below are measured over the exact minibatches training draws
 from repro.core.gadget import (GadgetConfig, _batch_ids, _stream_keys,
@@ -248,6 +249,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
         scale = 0.002 if quick else 1.0
     if n_iters is None:
         n_iters = 10 if quick else 40
+    tm.reset()  # the JSON's telemetry section covers this run only
     ds, t_gen = _gen_ccat(scale)  # one generation, shared by both CCAT benches
     out = {
         "quick": quick,
@@ -257,6 +259,7 @@ def run(quick: bool = False, scale: float | None = None, n_nodes: int = 8,
         "parity": bench_parity(verbose),
         "schedules": bench_schedules(ds, scale, n_nodes,
                                      max(4, n_iters // 2), verbose),
+        "telemetry": tm.default_registry().values(),
     }
     if json_path:
         with open(json_path, "w") as fh:

@@ -1,0 +1,164 @@
+"""Flight-recorder overhead: training with the telemetry ring on vs off.
+
+The telemetry contract has two halves and this bench prices both:
+
+  * **bit-identity** — ``telemetry=None`` must trace the exact
+    pre-telemetry program, and attaching a ring must never change *what* is
+    computed: the per-node weights and consensus of the on/off arms are
+    asserted ``np.array_equal`` (not allclose).
+  * **overhead <= 5%** — the ring adds one ``lax.cond``-gated record branch
+    per iteration plus ONE extra device→host sync after termination. The
+    record branch is priced by its full-data objective pass (~2 plain
+    iterations' work), so the budget is a statement about cadence: at the
+    bench's 20-records-per-run cadence (``every = max_iters // 20``, the
+    ε-check ballpark) the amortized cost must stay <= OVERHEAD_BUDGET.
+    Measured as interleaved repetitions of the same two compiled
+    executables; the asserted ratio is min(on)/min(off) — best observed
+    time per arm — because additive scheduler noise at this run length
+    (~100ms) is the same order as the budget and min() filters it while
+    the multiplicative overhead survives.
+
+The JSON carries the assertions as structural leaves
+(``overhead_within_budget`` / ``bit_identical``), the raw per-arm seconds
+as wall-clock leaves, and the usual registry-backed ``telemetry`` section.
+``overhead_ratio`` (and the noisier ``overhead_ratio_sum``, the ratio of
+summed times) are listed in check_regression's SKIP_LEAVES — ratios of
+small wall-clocks are too noisy to diff, the in-run assert is the gate.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.telemetry_overhead_bench [--quick] \
+        [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro import telemetry as tm
+from repro.core.gadget import GadgetConfig, gadget_train
+
+OVERHEAD_BUDGET = 0.05  # telemetry-on may cost at most 5% wall-clock
+
+
+def _make_parts(m: int, n_i: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=d)
+    X = rng.normal(size=(m * n_i, d)).astype(np.float32)
+    y = np.sign(X @ w_true).astype(np.float32)
+    return (jnp.asarray(X.reshape(m, n_i, d)), jnp.asarray(y.reshape(m, n_i)))
+
+
+def _timed(Xp, yp, cfg, ring):
+    t0 = time.time()
+    res = gadget_train(Xp, yp, cfg, telemetry=ring)
+    jax.block_until_ready(res.W)
+    return res, time.time() - t0
+
+
+def run(quick: bool = False, n_nodes: int = 8, d: int | None = None,
+        n_i: int | None = None, max_iters: int | None = None,
+        reps: int | None = None, json_path: str | None = None,
+        verbose: bool = True) -> dict:
+    """Interleaved A/B of gadget_train with and without the trace ring."""
+    if d is None:
+        d = 1024 if quick else 2048
+    if n_i is None:
+        n_i = 32
+    if max_iters is None:
+        max_iters = 2000 if quick else 3000
+    if reps is None:
+        reps = 8
+
+    t0 = time.time()
+    tm.reset()
+    Xp, yp = _make_parts(n_nodes, n_i, d)
+    cfg = GadgetConfig(lam=1e-3, batch_size=8, gossip_rounds=2,
+                       topology="exponential", max_iters=max_iters,
+                       check_every=max(1, max_iters // 4), epsilon=0.0)
+    # 20 records per run regardless of length — the ε-check-scale cadence
+    # the budget is stated at (per-record cost is ~2 iterations' work, so
+    # this amortizes to ~2% before scheduler noise)
+    ring = tm.TrainTelemetry(every=max(1, max_iters // 20), slots=32)
+
+    # warm-up: compile both executables before any timing
+    res_off, _ = _timed(Xp, yp, cfg, None)
+    res_on, _ = _timed(Xp, yp, cfg, ring)
+
+    bit_identical = (np.array_equal(np.asarray(res_on.W), np.asarray(res_off.W))
+                     and np.array_equal(np.asarray(res_on.w_consensus),
+                                        np.asarray(res_off.w_consensus)))
+    assert bit_identical, (
+        "attaching the telemetry ring changed the training trajectory")
+    tr = res_on.telemetry
+    assert tr is not None and tr.count > 0, "ring recorded nothing"
+    assert res_off.telemetry is None
+
+    # interleaved reps: off/on alternate inside one loop so slow ticks
+    # (GC, turbo, noisy neighbours) cannot land on one arm only
+    off_times, on_times = [], []
+    for _ in range(reps):
+        _, s_off = _timed(Xp, yp, cfg, None)
+        _, s_on = _timed(Xp, yp, cfg, ring)
+        off_times.append(s_off)
+        on_times.append(s_on)
+    off_s, on_s = min(off_times), min(on_times)
+    overhead = on_s / off_s
+    overhead_sum = sum(on_times) / sum(off_times)
+    assert overhead <= 1.0 + OVERHEAD_BUDGET, (
+        f"telemetry overhead {overhead:.3f}x exceeds the "
+        f"{1.0 + OVERHEAD_BUDGET:.2f}x budget (on={on_s:.4f}s off={off_s:.4f}s)")
+
+    if verbose:
+        emit(f"telemetry/overhead(m={n_nodes},d={d},T={max_iters})",
+             on_s * 1e6,
+             f"ratio={overhead:.3f}x;sum_ratio={overhead_sum:.3f}x"
+             f";off={off_s*1e3:.1f}ms;on={on_s*1e3:.1f}ms"
+             f";ring_count={tr.count};bit_identical={int(bit_identical)}")
+
+    out = {
+        "quick": quick,
+        "runner": runner_fingerprint(),
+        "config": {"n_nodes": n_nodes, "d": d, "n_i": n_i,
+                   "max_iters": max_iters, "reps": reps,
+                   "tele_every": ring.every},
+        "points": {
+            "off": {"seconds": off_s},
+            "on": {"seconds": on_s, "ring_count": int(tr.count)},
+        },
+        "overhead_ratio": overhead,
+        "overhead_ratio_sum": overhead_sum,
+        "asserts": {
+            "overhead_within_budget": int(overhead <= 1.0 + OVERHEAD_BUDGET),
+            "bit_identical": int(bit_identical),
+            "ring_recorded": int(tr.count > 0),
+        },
+        "telemetry": tm.default_registry().values(),
+        "total": {"seconds": time.time() - t0},
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: d=1024, 2000 iterations, 8 reps")
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=None)
+    ap.add_argument("--rows-per-node", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, n_nodes=args.nodes, d=args.dim,
+        n_i=args.rows_per_node, max_iters=args.iters, reps=args.reps,
+        json_path=args.json_path)

@@ -51,6 +51,7 @@ __all__ = [
     "faulty_rounds",
     "faulty_matrix_host",
     "round_fail_key",
+    "count_drops",
 ]
 
 DROP_MODES = ("link", "message")
@@ -143,6 +144,29 @@ def faulty_rounds(Bs: jax.Array, plan: FaultPlan, t) -> jax.Array:
     R = Bs.shape[0]
     keys = jax.vmap(lambda r: round_fail_key(plan, t, r))(jnp.arange(R))
     return jax.vmap(lambda B, k: apply_faults(B, k, plan))(Bs, keys)
+
+
+def count_drops(Bs: jax.Array, plan: FaultPlan, t) -> jax.Array:
+    """Number of messages lost to faults at iteration ``t`` (traced ok).
+
+    Replays the exact per-round failure draws of :func:`faulty_rounds` on the
+    *clean* (R, m, m) stack and counts only failures that destroy a real
+    share: live-sender rows (a dead sender's off-diagonal is already zero)
+    whose clean share is nonzero (sparse topologies don't "lose" edges they
+    never had). This is the telemetry counter behind the training trace
+    ring's ``drops`` series — int32 scalar, zero for an inert plan."""
+    R, m = Bs.shape[0], Bs.shape[-1]
+    dead = dead_mask(plan, m)
+    eye = jnp.eye(m, dtype=bool)
+
+    def one_round(B, key):
+        fail = jax.random.bernoulli(key, plan.drop_prob, (m, m))
+        fail = (fail | dead[None, :]) & ~eye
+        real = fail & ~dead[:, None] & (B != 0)
+        return jnp.sum(real.astype(jnp.int32))
+
+    keys = jax.vmap(lambda r: round_fail_key(plan, t, r))(jnp.arange(R))
+    return jnp.sum(jax.vmap(one_round)(Bs, keys))
 
 
 def faulty_matrix_host(B: np.ndarray, plan: FaultPlan, t: int,

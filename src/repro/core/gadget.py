@@ -76,6 +76,8 @@ from repro.core.push_sum import (PushSumState, collapse_rounds, exponential_sche
                                  mix_collapsed, mix_rounds, push_sum_round)
 from repro.kernels.hinge_subgrad import ops as hinge_ops
 from repro.kernels.hinge_subgrad import ref as hinge_ref
+from repro.telemetry import registry as tmr
+from repro.telemetry import train as tmt
 
 __all__ = [
     "GadgetConfig",
@@ -179,6 +181,11 @@ class GadgetResult(NamedTuple):
     # (Σ n_i). Exactly 1.0 (to float-sum tolerance) on the perfect network and
     # under FaultPlan(drop="link"); < 1 measures the leakage of drop="message".
     mass_trace: np.ndarray | None = None
+    # Decoded on-device training trace ring (telemetry=TrainTelemetry(...)):
+    # per-record consensus disagreement, windowed Push-Sum mass extrema,
+    # objective, fault-drop counts. None when telemetry is off — and the
+    # telemetry=None trajectory is bit-identical to pre-telemetry builds.
+    telemetry: tmt.TrainTrace | None = None
 
 
 class SegmentResult(NamedTuple):
@@ -200,6 +207,10 @@ class SegmentResult(NamedTuple):
     # min per-iteration Push-Sum mass retention across the segment (1.0 on a
     # perfect network / link-mode faults; < 1 measures message-mode leakage)
     mass: float = float("nan")
+    # Per-segment telemetry (gadget_train_stream(..., telemetry=...)):
+    # boundary disagreement/objective + active-iteration mass extrema and
+    # fault-drop counts. None when telemetry is off.
+    telemetry: tmt.SegmentTelemetry | None = None
 
 
 class TrainState(NamedTuple):
@@ -321,7 +332,8 @@ def _batch_ids(data_key: jax.Array, t: jax.Array, n_counts: jax.Array, batch_siz
 
 def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
                  m: int, R: int, topology: str, fused: bool,
-                 faults: FaultPlan | None = None) -> jax.Array:
+                 faults: FaultPlan | None = None,
+                 count_drops: bool = False):
     """Mixing for iteration t (1-based), fully on device: the (R, m, m)
     per-round stack, or — when ``fused`` — the single collapsed (m, m) product
     ``P_t = (B_1 ⋯ B_R)^T``. Fault-free deterministic topologies index the
@@ -332,7 +344,12 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
     then the *matrix* cycle) pass through :func:`repro.core.faults.
     faulty_rounds` before the fold — fault injection composes with the fused
     one-matmul mix by collapsing the faulty rounds on device per iteration,
-    exactly the pattern the random topology already uses."""
+    exactly the pattern the random topology already uses.
+
+    ``count_drops`` (telemetry) additionally returns the iteration's faulted
+    message count (:func:`repro.core.faults.count_drops` on the clean rounds
+    — int32 0 when fault-free) as a second output. The default single-output
+    form is byte-identical to pre-telemetry builds."""
     if topology == "random":
         kt = jax.random.fold_in(mix_key, t)
         Bs = jax.vmap(
@@ -341,12 +358,19 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
     else:
         T = B_stack.shape[0]
         if fused and faults is None:
-            return B_stack[(t - 1) % T]
+            P = B_stack[(t - 1) % T]
+            return (P, jnp.int32(0)) if count_drops else P
         idx = ((t - 1) * R + jnp.arange(R)) % T
         Bs = B_stack[idx]
+    drops = None
     if faults is not None:
+        if count_drops:
+            drops = flt.count_drops(Bs, faults, t)
         Bs = flt.faulty_rounds(Bs, faults, t)
-    return collapse_rounds(Bs) if fused else Bs
+    mix = collapse_rounds(Bs) if fused else Bs
+    if count_drops:
+        return mix, (jnp.int32(0) if drops is None else drops)
+    return mix
 
 
 # ---------------------------------------------------------------------------
@@ -428,11 +452,20 @@ def _one_iteration(cfg: GadgetConfig, m: int,
                    X: jax.Array, y: jax.Array, n_counts: jax.Array,
                    data_key: jax.Array, mix_key: jax.Array, B_stack: jax.Array | None,
                    W: jax.Array, W_sum: jax.Array, t: jax.Array,
-                   sparse_block_bound: int | None = None):
+                   sparse_block_bound: int | None = None,
+                   count_drops: bool = False):
     """One fully device-resident iteration: derive this iteration's mixing
     (stack slice, product-cycle slice, or in-step draw — faults applied on
     device when cfg.faults), then the shared step. Returns
-    ``(W, W_sum, mass)``."""
+    ``(W, W_sum, mass)`` — or ``(W, W_sum, mass, drops)`` with the
+    iteration's faulted-message count when ``count_drops`` (telemetry)."""
+    if count_drops:
+        Bs, drops = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds,
+                                 cfg.topology, cfg.fused, cfg.faults,
+                                 count_drops=True)
+        W, W_sum, mass = _gossip_step(cfg, m, X, y, n_counts, data_key, W,
+                                      W_sum, t, Bs, sparse_block_bound)
+        return W, W_sum, mass, drops
     Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds, cfg.topology,
                       cfg.fused, cfg.faults)
     return _gossip_step(cfg, m, X, y, n_counts, data_key, W, W_sum, t, Bs,
@@ -480,7 +513,8 @@ def _cache_cfg(cfg: GadgetConfig) -> GadgetConfig:
 def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                        n_chunks: int, chunk: int,
                        sparse_block_bound: int | None = None,
-                       snap_every: int = 0, snap_slots: int = 0):
+                       snap_every: int = 0, snap_slots: int = 0,
+                       tele_every: int = 0, tele_slots: int = 0):
     """Jitted whole-training function: while_loop over ε-check chunks, scan
     over iterations inside each chunk, donated weight buffers, on-device
     objective/ε traces. Returns arrays only — the caller syncs once.
@@ -489,26 +523,52 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
     the loop: every K-th iteration writes (consensus w, iteration, objective)
     into slot ``count % snap_slots`` under a ``lax.cond`` — non-snapshot
     iterations pay nothing, and the whole ring stays on device until the
-    single post-termination sync."""
+    single post-termination sync.
+
+    ``tele_every`` > 0 threads the telemetry trace ring the same way: every
+    K-th active iteration records (iteration, consensus disagreement,
+    windowed mass min/max, objective, windowed fault-drop count) into slot
+    ``count % tele_slots``; the window accumulators reset at each record.
+    With ``tele_every == 0`` the telemetry carry is the empty tuple — no
+    pytree leaves, so the traced program (and the trajectory) is
+    bit-identical to the telemetry-free build."""
+    # drop counting re-draws the fault stream per iteration — only pay for
+    # it when there is both a telemetry ring and a fault plan to observe
+    tele_drops = bool(tele_every) and cfg.faults is not None
 
     def train(X, y, B_stack, data_key, mix_key, n_counts, W0, W_sum0):
         # padded rows of non-uniform partitions are masked out of the trace
         objective_of, consensus_of = _trace_closures(cfg, X, y, n_counts,
                                                      m, n_i, d)
 
+        def disagreement_of(W_now, w_cons):
+            return jnp.max(jnp.linalg.norm(W_now - w_cons[None, :], axis=1))
+
         def step(carry, _):
-            W, W_sum, t, snaps = carry
+            W, W_sum, t, snaps, tele = carry
             active = t <= cfg.max_iters
             # inactive tail iterations report full mass so the per-chunk min
             # below only reflects iterations that actually gossiped
-            W, W_sum, mass = jax.lax.cond(
-                active,
-                lambda a: _one_iteration(cfg, m, X, y, n_counts,
-                                         data_key, mix_key, B_stack, *a,
-                                         sparse_block_bound=sparse_block_bound),
-                lambda a: (a[0], a[1], jnp.float32(1.0)),
-                (W, W_sum, t),
-            )
+            if tele_drops:
+                W, W_sum, mass, drops = jax.lax.cond(
+                    active,
+                    lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                             data_key, mix_key, B_stack, *a,
+                                             sparse_block_bound=sparse_block_bound,
+                                             count_drops=True),
+                    lambda a: (a[0], a[1], jnp.float32(1.0), jnp.int32(0)),
+                    (W, W_sum, t),
+                )
+            else:
+                W, W_sum, mass = jax.lax.cond(
+                    active,
+                    lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                             data_key, mix_key, B_stack, *a,
+                                             sparse_block_bound=sparse_block_bound),
+                    lambda a: (a[0], a[1], jnp.float32(1.0)),
+                    (W, W_sum, t),
+                )
+                drops = jnp.int32(0)
             if snap_every:
                 def do_snap(op):
                     (sw, si, so, sc), W_now = op
@@ -519,41 +579,81 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
 
                 snaps = jax.lax.cond(active & (t % snap_every == 0),
                                      do_snap, lambda op: op[0], (snaps, W))
-            return (W, W_sum, jnp.where(active, t + 1, t), snaps), mass
+            if tele_every:
+                ti, tdis, tmn, tmx, tob, tdr, tc, wmin, wmax, wdr = tele
+                # window accumulators only see iterations that gossiped
+                wmin = jnp.where(active, jnp.minimum(wmin, mass), wmin)
+                wmax = jnp.where(active, jnp.maximum(wmax, mass), wmax)
+                wdr = wdr + jnp.where(active, drops, 0)
+
+                def do_rec(op):
+                    (ti, tdis, tmn, tmx, tob, tdr, tc), (W_now, wmin, wmax, wdr) = op
+                    w_cons = consensus_of(W_now)
+                    slot = tc % tele_slots
+                    ring = (ti.at[slot].set(t),
+                            tdis.at[slot].set(disagreement_of(W_now, w_cons)),
+                            tmn.at[slot].set(wmin), tmx.at[slot].set(wmax),
+                            tob.at[slot].set(objective_of(w_cons)),
+                            tdr.at[slot].set(wdr), tc + 1)
+                    # record consumed the window: reset the accumulators
+                    return ring, (jnp.float32(jnp.inf), jnp.float32(-jnp.inf),
+                                  jnp.int32(0))
+
+                ring, (wmin, wmax, wdr) = jax.lax.cond(
+                    active & (t % tele_every == 0), do_rec,
+                    lambda op: (op[0], op[1][1:]),
+                    ((ti, tdis, tmn, tmx, tob, tdr, tc), (W, wmin, wmax, wdr)))
+                tele = ring + (wmin, wmax, wdr)
+            return (W, W_sum, jnp.where(active, t + 1, t), snaps, tele), mass
 
         def chunk_body(carry):
-            W, W_sum, t, snaps, ci, _, obj_tr, it_tr, eps_tr, mass_tr = carry
+            W, W_sum, t, snaps, tele, ci, _, obj_tr, it_tr, eps_tr, mass_tr = carry
             W_prev = W
-            (W, W_sum, t, snaps), masses = jax.lax.scan(
-                step, (W, W_sum, t, snaps), None, length=chunk)
+            (W, W_sum, t, snaps, tele), masses = jax.lax.scan(
+                step, (W, W_sum, t, snaps, tele), None, length=chunk)
             eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
             w_cons = consensus_of(W)
             obj_tr = obj_tr.at[ci].set(objective_of(w_cons))
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
             mass_tr = mass_tr.at[ci].set(jnp.min(masses))
-            return W, W_sum, t, snaps, ci + 1, eps, obj_tr, it_tr, eps_tr, mass_tr
+            return (W, W_sum, t, snaps, tele, ci + 1, eps, obj_tr, it_tr,
+                    eps_tr, mass_tr)
 
         def cond(carry):
-            _, _, t, _, ci, eps, _, _, _, _ = carry
+            _, _, t, _, _, ci, eps, _, _, _, _ = carry
             return (ci < n_chunks) & (eps >= cfg.epsilon) & (t <= cfg.max_iters)
 
         snaps0 = (jnp.zeros((snap_slots, d), jnp.float32),
                   jnp.zeros((snap_slots,), jnp.int32),
                   jnp.full((snap_slots,), jnp.nan, jnp.float32),
                   jnp.int32(0))
-        init = (W0, W_sum0, jnp.int32(1), snaps0, jnp.int32(0),
+        if tele_every:
+            tele0 = (jnp.zeros((tele_slots,), jnp.int32),
+                     jnp.full((tele_slots,), jnp.nan, jnp.float32),
+                     jnp.full((tele_slots,), jnp.nan, jnp.float32),
+                     jnp.full((tele_slots,), jnp.nan, jnp.float32),
+                     jnp.full((tele_slots,), jnp.nan, jnp.float32),
+                     jnp.zeros((tele_slots,), jnp.int32),
+                     jnp.int32(0),
+                     jnp.float32(jnp.inf), jnp.float32(-jnp.inf), jnp.int32(0))
+        else:
+            tele0 = ()
+        init = (W0, W_sum0, jnp.int32(1), snaps0, tele0, jnp.int32(0),
                 jnp.float32(jnp.inf),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.zeros((n_chunks,), jnp.int32),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32))
-        (W, W_sum, t, snaps, ci, eps,
+        (W, W_sum, t, snaps, tele, ci, eps,
          obj_tr, it_tr, eps_tr, mass_tr) = jax.lax.while_loop(cond, chunk_body, init)
         w_cons = consensus_of(W)
         final_obj = objective_of(w_cons) if snap_every else jnp.float32(jnp.nan)
+        # ONE extra reduction at the already-synced boundary — the telemetry
+        # ring adds no mid-loop host traffic
+        tele_out = tele + (disagreement_of(W, w_cons),) if tele_every else ()
         return (W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr,
-                mass_tr, snaps, final_obj)
+                mass_tr, snaps, tele_out, final_obj)
 
     # Buffer donation is a no-op (with a warning) on CPU — only request it
     # where the runtime honors it.
@@ -596,7 +696,8 @@ def _validate_snapshotting(snapshot_every, snapshot_slots) -> int:
 
 def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Array,
                           n_counts=None, snapshot_every=None,
-                          snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS):
+                          snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS,
+                          telemetry: tmt.TrainTelemetry | None = None):
     """Build the exact (jitted train fn, argument tuple) pair `gadget_train`
     executes: resolved config, one stacked-matrix upload, PRNG streams, fresh
     (donatable) weight buffers. The transfer-guard benchmark calls this too,
@@ -624,14 +725,68 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
         B_stack = jnp.asarray(stack)
         transfer_stats["matrix_uploads"] += 1  # the only upload, ever
 
+    tele = tmt.validate_telemetry(telemetry)
     chunk = min(cfg.check_every, cfg.max_iters)
     n_chunks = -(-cfg.max_iters // chunk)
     train = _make_device_train(_cache_cfg(cfg), m, n_i, d, n_chunks, chunk,
                                sparse_block_bound, snap_every,
-                               int(snapshot_slots) if snap_every else 0)
+                               int(snapshot_slots) if snap_every else 0,
+                               tele.every if tele else 0,
+                               tele.slots if tele else 0)
     args = (X, jnp.asarray(y_parts), B_stack, data_key, mix_key,
             n_counts, jnp.zeros((m, d), dtype), jnp.zeros((m, d), dtype))
     return train, args
+
+
+@functools.lru_cache(maxsize=64)
+def _gossip_bytes_per_iter(topology: str, m: int, R: int, d: int) -> int:
+    """Analytic gossip payload bytes one iteration moves: R rounds × live
+    off-diagonal links per round × (d weight floats + 1 mass float) × 4.
+    Deterministic topologies count their matrix cycle's mean off-diagonal
+    support; the random protocol pushes to exactly one neighbor per node per
+    round. Feeds the ``train.gossip_bytes`` counter."""
+    if topology == "random":
+        links = float(m)
+    else:
+        stack = np.asarray(topo.build_matrix_stack(topology, m))
+        offdiag = (stack != 0).sum(axis=(1, 2)) - (
+            np.diagonal(stack, axis1=1, axis2=2) != 0).sum(axis=1)
+        links = float(offdiag.mean())
+    return int(round(R * links * (d + 1) * 4))
+
+
+def _record_train_telemetry(cfg: GadgetConfig, m: int, d: int, X,
+                            sparse_block_bound, n_iters: int,
+                            registry=None) -> None:
+    """Registry accounting for ``n_iters`` finished training iterations.
+
+    The jitted loop cannot count its own kernel launches, so the host mirrors
+    what the traced program dispatches per iteration — iteration and
+    gossip-byte counters always, kernel launch/bytes/FLOPs series when the
+    Pallas path is active — onto the (default) registry. Pure host-side
+    bookkeeping: it never touches the traced program or the trajectory."""
+    if n_iters <= 0:
+        return
+    reg = tmr.default_registry() if registry is None else registry
+    reg.counter("train.iterations").inc(n_iters)
+    reg.counter("train.gossip_bytes").inc(
+        n_iters * _gossip_bytes_per_iter(cfg.topology, m, cfg.gossip_rounds, d))
+    if not cfg.use_kernels:
+        return
+    B = cfg.batch_size
+    if isinstance(X, tuple):
+        k = int(X[0].shape[-1])
+        schedule, blk_d, n_blocks_max = hinge_ops.resolve_ell_schedule(
+            cfg.sparse_schedule, B=B, k=k, d=d, n_blocks_max=sparse_block_bound)
+        hinge_ops.record_launch("ell_fleet_half_step", n_iters, registry=reg,
+                                m=m, B=B, k=k, d=d, schedule=schedule,
+                                blk_d=blk_d, n_blocks_max=n_blocks_max)
+    elif cfg.fused:
+        hinge_ops.record_launch("fleet_half_step", n_iters, registry=reg,
+                                m=m, B=B, d=d)
+    else:
+        hinge_ops.record_launch("local_half_step", n_iters * m, registry=reg,
+                                B=B, d=d)
 
 
 def gadget_train(
@@ -642,6 +797,7 @@ def gadget_train(
     n_counts=None,
     snapshot_every: int | None = None,
     snapshot_slots: int = DEFAULT_SNAPSHOT_SLOTS,
+    telemetry: tmt.TrainTelemetry | None = None,
 ) -> GadgetResult:
     """Simulator-path GADGET over m nodes. X_parts: (m, n_i, d) dense, or a
     ``repro.sparse.EllPartitions`` of stacked padded-ELL planes (sparse local
@@ -665,13 +821,35 @@ def gadget_train(
     the same single post-termination sync; decode with
     ``repro.serve.snapshot.snapshots_from``. K > the realized iteration count
     simply yields the final snapshot alone.
+
+    ``telemetry`` (optional :class:`repro.telemetry.TrainTelemetry`): thread
+    the flight-recorder trace ring through the same jitted loop — consensus
+    disagreement, windowed Push-Sum mass extrema, objective, and fault-drop
+    counts every ``telemetry.every`` iterations into ``telemetry.slots`` ring
+    slots, decoded into ``result.telemetry`` (:class:`repro.telemetry.
+    TrainTrace`) in the same single sync and mirrored onto the default
+    registry. ``telemetry=None`` (default) leaves the traced program — and
+    therefore the trajectory — bit-identical to builds without the ring
+    (asserted in tests).
     """
     _validate_topology(cfg)
+    tele_cfg = tmt.validate_telemetry(telemetry)
 
     empty = np.zeros((0,), np.float32)
     if cfg.max_iters <= 0:  # zero-iteration call: return the initial state
         snap_every = _validate_snapshotting(snapshot_every, snapshot_slots)
         _, m, n_i, d, dtype = _unpack_partitions(X_parts)
+        trace = None
+        if tele_cfg:
+            # W = 0 everywhere: disagreement is exactly 0, nothing recorded
+            empty_i = np.zeros((0,), np.int64)
+            empty_f = np.zeros((0,), np.float64)
+            trace = tmt.TrainTrace(every=tele_cfg.every, iterations=empty_i,
+                                   disagreement=empty_f, mass_min=empty_f,
+                                   mass_max=empty_f, objective=empty_f,
+                                   drops=empty_i, final_iteration=0,
+                                   final_disagreement=0.0)
+            tmt.publish_trace(trace)
         ring = None
         if snap_every:
             # empty ring, initial state as the final iterate: w = 0 scores
@@ -688,17 +866,29 @@ def gadget_train(
                             iters=0, epsilon=float("inf"),
                             objective_trace=empty, time_trace=empty.astype(np.int32),
                             eps_trace=empty, W_avg=jnp.zeros((m, d), dtype),
-                            snapshots=ring, mass_trace=empty)
+                            snapshots=ring, mass_trace=empty, telemetry=trace)
 
     train, args = _prepare_device_train(cfg, X_parts, y_parts, n_counts,
-                                        snapshot_every, snapshot_slots)
+                                        snapshot_every, snapshot_slots,
+                                        telemetry=tele_cfg)
     out = train(*args)
     (W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr,
-     mass_tr, snaps, final_obj) = jax.block_until_ready(out)
+     mass_tr, snaps, tele_out, final_obj) = jax.block_until_ready(out)
     transfer_stats["host_syncs"] += 1  # single post-termination sync
 
     n_done = int(n_done)
     iters = int(iters)
+    trace = None
+    if tele_cfg:
+        ti, tdis, tmn, tmx, tob, tdr, tc, _, _, _, final_dis = tele_out
+        trace = tmt.decode_ring(tele_cfg.every, tele_cfg.slots, int(tc),
+                                ti, tdis, tmn, tmx, tob, tdr,
+                                iters, float(final_dis))
+        tmt.publish_trace(trace)
+    rcfg = _resolve_kernels(cfg)
+    X_in, m_in, _, d_in, _ = _unpack_partitions(X_parts)
+    _record_train_telemetry(rcfg, m_in, d_in, X_in,
+                            _sparse_block_bound(rcfg, X_parts, X_in), iters)
     ring = None
     if snapshot_every:
         sw, si, so, sc = snaps
@@ -718,6 +908,7 @@ def gadget_train(
         W_avg=W_sum / max(iters, 1),
         snapshots=ring,
         mass_trace=np.asarray(mass_tr)[:n_done],
+        telemetry=trace,
     )
 
 
@@ -728,7 +919,8 @@ def gadget_train(
 
 @functools.lru_cache(maxsize=32)
 def _make_segment_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
-                        seg_len: int, sparse_block_bound: int | None = None):
+                        seg_len: int, sparse_block_bound: int | None = None,
+                        tele: bool = False):
     """Jitted ``seg_len``-iteration training segment, compiled once per
     (cfg, shape, seg_len): a ``lax.scan`` over the same ``_one_iteration``
     body as the while-loop trainer, with the global iteration counter ``t0``
@@ -737,7 +929,14 @@ def _make_segment_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
     under ``lax.cond`` (exactly the while-loop trainer's tail handling), and
     because the PRNG streams are keyed on the global ``t``
     (``fold_in(data_key, t)``), a segmented run's trajectory is bit-identical
-    to one uninterrupted ``gadget_train`` call."""
+    to one uninterrupted ``gadget_train`` call.
+
+    ``tele`` additionally returns per-segment telemetry extras — boundary
+    consensus disagreement, Push-Sum mass extrema over the segment's *active*
+    iterations (NaN when the whole segment sat past ``cfg.max_iters``), and
+    the segment's fault-drop count. ``tele=False`` traces the exact
+    pre-telemetry program (bit-identity pinned by tests)."""
+    tele_drops = tele and cfg.faults is not None
 
     def segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t0):
         objective_of, consensus_of = _trace_closures(cfg, X, y, n_counts,
@@ -746,22 +945,51 @@ def _make_segment_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
         def step(carry, _):
             W, W_sum, t = carry
             active = t <= cfg.max_iters
-            W, W_sum, mass = jax.lax.cond(
-                active,
-                lambda a: _one_iteration(cfg, m, X, y, n_counts,
-                                         data_key, mix_key, B_stack, *a,
-                                         sparse_block_bound=sparse_block_bound),
-                lambda a: (a[0], a[1], jnp.float32(1.0)),
-                (W, W_sum, t),
-            )
-            return (W, W_sum, jnp.where(active, t + 1, t)), mass
+            if tele_drops:
+                W, W_sum, mass, drops = jax.lax.cond(
+                    active,
+                    lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                             data_key, mix_key, B_stack, *a,
+                                             sparse_block_bound=sparse_block_bound,
+                                             count_drops=True),
+                    lambda a: (a[0], a[1], jnp.float32(1.0), jnp.int32(0)),
+                    (W, W_sum, t),
+                )
+                ys = (mass, drops)
+            else:
+                W, W_sum, mass = jax.lax.cond(
+                    active,
+                    lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                             data_key, mix_key, B_stack, *a,
+                                             sparse_block_bound=sparse_block_bound),
+                    lambda a: (a[0], a[1], jnp.float32(1.0)),
+                    (W, W_sum, t),
+                )
+                ys = (mass, jnp.int32(0)) if tele else mass
+            return (W, W_sum, jnp.where(active, t + 1, t)), ys
 
         W_prev = W
-        (W, W_sum, t), masses = jax.lax.scan(step, (W, W_sum, t0), None,
-                                             length=seg_len)
+        (W, W_sum, t), ys = jax.lax.scan(step, (W, W_sum, t0), None,
+                                         length=seg_len)
+        masses, drops = ys if tele else (ys, None)
         eps = jnp.max(jnp.linalg.norm(W - W_prev, axis=1))
         w_cons = consensus_of(W)
-        return W, W_sum, t, w_cons, objective_of(w_cons), eps, jnp.min(masses)
+        base = (W, W_sum, t, w_cons, objective_of(w_cons), eps,
+                jnp.min(masses))
+        if not tele:
+            return base
+        # telemetry extras mask out the inactive tail (iterations clamped
+        # past cfg.max_iters report a dummy mass of 1.0)
+        n_active = jnp.clip(cfg.max_iters - (t0 - 1), 0, seg_len)
+        act = jnp.arange(seg_len) < n_active
+        any_act = n_active > 0
+        mass_min = jnp.where(any_act,
+                             jnp.min(jnp.where(act, masses, jnp.inf)), jnp.nan)
+        mass_max = jnp.where(any_act,
+                             jnp.max(jnp.where(act, masses, -jnp.inf)), jnp.nan)
+        dis = jnp.max(jnp.linalg.norm(W - w_cons[None, :], axis=1))
+        return base + (dis, mass_min, mass_max,
+                       jnp.sum(jnp.where(act, drops, 0)))
 
     donate = (6, 7) if jax.default_backend() != "cpu" else ()
     return jax.jit(segment, donate_argnums=donate)
@@ -775,6 +1003,7 @@ def gadget_train_stream(
     segment_iters: int,
     n_counts=None,
     resume: TrainState | None = None,
+    telemetry: tmt.TrainTelemetry | None = None,
 ):
     """Generator twin of :func:`gadget_train`: yield a :class:`SegmentResult`
     every ``segment_iters`` iterations while training stays device-resident.
@@ -799,8 +1028,17 @@ def gadget_train_stream(
     executable with that counter as a runtime argument, a killed-and-resumed
     run's trajectory is **bit-identical** to the uninterrupted one — the
     crash-recovery half of the fault story (tests pin this).
+
+    ``telemetry`` (optional :class:`repro.telemetry.TrainTelemetry`): attach
+    per-segment flight-recorder readings — boundary consensus disagreement,
+    active-iteration Push-Sum mass extrema, fault-drop counts — to each
+    yielded ``SegmentResult.telemetry`` and mirror them onto the default
+    registry (``every``/``slots`` are ring parameters and don't apply here:
+    the segment boundary IS the cadence). ``telemetry=None`` (default)
+    traces the exact pre-telemetry program: trajectories stay bit-identical.
     """
     _validate_topology(cfg)
+    tele_cfg = tmt.validate_telemetry(telemetry)
     if int(segment_iters) < 1:
         raise ValueError(f"segment_iters must be >= 1, got {segment_iters}")
     if cfg.max_iters <= 0:
@@ -824,7 +1062,8 @@ def gadget_train_stream(
         transfer_stats["matrix_uploads"] += 1  # one upload, same as gadget_train
 
     segment = _make_segment_train(_cache_cfg(cfg), m, n_i, d,
-                                  int(segment_iters), sparse_block_bound)
+                                  int(segment_iters), sparse_block_bound,
+                                  tele=tele_cfg is not None)
     if resume is not None:
         W = jnp.asarray(resume.W, dtype)
         W_sum = jnp.asarray(resume.W_sum, dtype)
@@ -840,16 +1079,38 @@ def gadget_train_stream(
         W_sum = jnp.zeros((m, d), dtype)
         t = jnp.int32(1)
     while True:
+        prev_iteration = int(t) - 1
         out = segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t)
-        W, W_sum, t, w_cons, objective, eps, mass = jax.block_until_ready(out)
+        out = jax.block_until_ready(out)
+        seg_tele = None
+        if tele_cfg:
+            (W, W_sum, t, w_cons, objective, eps, mass,
+             dis, seg_mn, seg_mx, seg_drops) = out
+            seg_tele = tmt.SegmentTelemetry(
+                disagreement=float(dis), mass_min=float(seg_mn),
+                mass_max=float(seg_mx), objective=float(objective),
+                drops=int(seg_drops))
+        else:
+            W, W_sum, t, w_cons, objective, eps, mass = out
         transfer_stats["host_syncs"] += 1  # one sync per segment boundary
         iteration = int(t) - 1
+        _record_train_telemetry(cfg, m, d, X, sparse_block_bound,
+                                iteration - prev_iteration)
+        if seg_tele is not None:
+            reg = tmr.default_registry()
+            reg.gauge("train.final_disagreement").set(seg_tele.disagreement)
+            reg.gauge("train.objective").set(seg_tele.objective)
+            if np.isfinite(seg_tele.mass_min):
+                reg.gauge("train.mass_min").set(seg_tele.mass_min)
+                reg.gauge("train.mass_max").set(seg_tele.mass_max)
+            reg.counter("train.fault_drops").inc(seg_tele.drops)
         eps_f = float(eps)
         done = eps_f < cfg.epsilon or iteration >= cfg.max_iters
         yield SegmentResult(iteration=iteration, W=W,
                             w_consensus=np.asarray(w_cons),
                             objective=float(objective), epsilon=eps_f,
-                            done=done, W_sum=W_sum, mass=float(mass))
+                            done=done, W_sum=W_sum, mass=float(mass),
+                            telemetry=seg_tele)
         if done:
             return
 

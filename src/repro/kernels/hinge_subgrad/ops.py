@@ -23,11 +23,13 @@ from repro.kernels.hinge_subgrad import hinge_subgrad as K
 from repro.kernels.hinge_subgrad import predict as P
 from repro.kernels.hinge_subgrad import sparse as S
 from repro.sparse.formats import DEFAULT_BUCKET_BLK_D
+from repro.telemetry import registry as tmr
 
 __all__ = ["pegasos_step", "local_half_step", "fleet_half_step",
            "ell_fleet_half_step", "ell_block_map", "resolve_ell_schedule",
            "dense_predict", "ell_predict", "resolve_block_cap",
            "padded_row_mask", "default_interpret",
+           "launch_cost", "record_launch",
            "FLEET_TILE_BUDGET_BYTES", "ELL_ONEHOT_BUDGET",
            "ELL_PREFETCH_BLK_D"]
 
@@ -47,6 +49,95 @@ def default_interpret() -> bool:
     if env:  # set-but-empty falls through to the auto default
         return env.lower() not in ("0", "false", "off", "no")
     return jax.default_backend() != "tpu"
+
+
+def launch_cost(kind: str, *, m: int = 1, B: int = 0, d: int = 0, k: int = 0,
+                C: int = 1, schedule: str = "sweep", blk_d: int = 0,
+                n_blocks_max: int = 0) -> dict:
+    """Analytic per-call cost of one Pallas entry point, from shapes alone.
+
+    Returns ``{"launches", "bytes", "flops"}`` (plus ``"blocks_visited"``
+    for the block-scheduled sparse kinds) — the single cost model behind the
+    registry's ``kernel.*`` series, shared by the dispatch wrappers, the
+    training loop's host accounting, the serving engine, and the benches
+    (which previously each derived their own). Bytes count f32 data planes
+    crossing HBM per launch (int32 column planes count 4 bytes like values);
+    FLOPs count multiply-add pairs as 2. These are *model* numbers — the
+    roofline/accounting currency, not measured traffic.
+
+    Kinds: ``local_half_step`` (two launches: margins + grad),
+    ``fleet_half_step`` (one fused launch, or the 2m-launch vmapped fallback
+    above ``FLEET_TILE_BUDGET_BYTES`` — the model applies the same cutover),
+    ``ell_fleet_half_step`` (two launches; prefetch visits
+    ``m·n_blocks_max`` w blocks, sweep visits every block),
+    ``dense_predict`` / ``ell_predict`` (one fused launch each).
+    """
+    if kind == "local_half_step":
+        return {"launches": 2, "bytes": 4 * (2 * B * d + 3 * d + 3 * B),
+                "flops": 4 * B * d + 2 * d}
+    if kind == "fleet_half_step":
+        Bp, dp = -(-B // 8) * 8, -(-d // 128) * 128
+        if Bp * dp * 4 > FLEET_TILE_BUDGET_BYTES:  # blocked two-kernel path
+            per = launch_cost("local_half_step", B=B, d=d)
+            return {key: m * v for key, v in per.items()}
+        return {"launches": 1, "bytes": 4 * m * (B * d + 2 * d + 2 * B),
+                "flops": m * (4 * B * d + 2 * d)}
+    if kind == "ell_fleet_half_step":
+        entry_bytes = 16 * m * B * k  # cols+vals, read by both passes
+        if schedule == "prefetch":
+            blocks = m * n_blocks_max
+            w_bytes = 12 * blocks * blk_d + 8 * m * d  # 2R+1W blocks + axpy
+        else:
+            n_d_blocks = -(-d // max(blk_d, 1))
+            blocks = m * n_d_blocks
+            w_bytes = 12 * m * n_d_blocks * max(blk_d, 1)
+        return {"launches": 2, "bytes": entry_bytes + w_bytes,
+                "flops": m * (4 * B * k + 2 * d), "blocks_visited": blocks}
+    if kind == "dense_predict":
+        return {"launches": 1, "bytes": 4 * (B * d + C * d + B * C + B),
+                "flops": 2 * B * C * d}
+    if kind == "ell_predict":
+        blocks = n_blocks_max
+        return {"launches": 1,
+                "bytes": 8 * B * k + 4 * (blocks * blk_d * C + B * C + B),
+                "flops": 2 * C * B * k, "blocks_visited": blocks}
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def record_launch(kind: str, n: int = 1, *, registry=None,
+                  blocks_visited: float | None = None, **shape) -> dict:
+    """Account ``n`` executions of a Pallas entry point on the registry.
+
+    Increments ``kernel.launches`` / ``kernel.bytes`` / ``kernel.flops``
+    (and ``kernel.blocks_visited`` for block-scheduled kinds — pass
+    ``blocks_visited`` to override the static cap with a measured live
+    count), all labeled ``kernel=<kind>``, using :func:`launch_cost` for the
+    per-call numbers. Host-side bookkeeping only; returns the per-call cost
+    dict. Jitted callers account at their host boundary (the wrappers only
+    self-record when executed eagerly — tracing must stay side-effect-free
+    so retraces don't double-count)."""
+    reg = tmr.default_registry() if registry is None else registry
+    cost = launch_cost(kind, **shape)
+    reg.counter("kernel.launches", kernel=kind).inc(n * cost["launches"])
+    reg.counter("kernel.bytes", kernel=kind).inc(n * cost["bytes"])
+    reg.counter("kernel.flops", kernel=kind).inc(n * cost["flops"])
+    bv = cost.get("blocks_visited") if blocks_visited is None else blocks_visited
+    if bv is not None:
+        reg.counter("kernel.blocks_visited", kernel=kind).inc(n * bv)
+    return cost
+
+
+def _maybe_record(kind: str, probe, **shape) -> None:
+    """Self-record one eager execution of a dispatch wrapper.
+
+    ``probe`` is any input array: when it is a tracer the wrapper is being
+    traced into a caller's jit (the body runs once, not per execution), so
+    recording would count compiles, not launches — the caller's host
+    boundary accounts instead (``gadget_train`` post-run, the serving
+    engine per score call)."""
+    if isinstance(probe, jax.core.Tracer):
+        return
+    record_launch(kind, **shape)
 
 
 def _project_ball(w: jax.Array, lam: float) -> jax.Array:
@@ -95,6 +186,7 @@ def local_half_step(w: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     y=0 and so contribute coefficient 0 to the gradient.
     """
     B, d = X.shape
+    _maybe_record("local_half_step", X, B=B, d=d)
     if interpret is None:
         interpret = default_interpret()
     blk_b_, blk_d_ = min(blk_b, B), min(blk_d, d)
@@ -131,6 +223,7 @@ def fleet_half_step(W: jax.Array, X: jax.Array, y: jax.Array, *, lam: float,
     which never needs the whole tile resident.
     """
     m, B, d = X.shape
+    _maybe_record("fleet_half_step", X, m=m, B=B, d=d)
     if interpret is None:
         interpret = default_interpret()
 
@@ -283,6 +376,8 @@ def ell_fleet_half_step(W: jax.Array, cols: jax.Array, vals: jax.Array,
         interpret = default_interpret()
     schedule, blk_d, n_blocks_max = resolve_ell_schedule(
         schedule, B=B, k=k, d=d, n_blocks_max=n_blocks_max, blk_d=blk_d)
+    _maybe_record("ell_fleet_half_step", vals, m=m, B=B, k=k, d=d,
+                  schedule=schedule, blk_d=blk_d, n_blocks_max=n_blocks_max)
 
     colsP = _pad_to(_pad_to(cols.astype(jnp.int32), 8, 1), 128, 2)
     valsP = _pad_to(_pad_to(vals.astype(jnp.float32), 8, 1), 128, 2)
@@ -376,6 +471,7 @@ def dense_predict(W: jax.Array, X: jax.Array, *,
     W2, binary = _as_class_matrix(W)
     C, d = W2.shape
     B = X.shape[0]
+    _maybe_record("dense_predict", X, B=B, d=d, C=C)
     if interpret is None:
         interpret = default_interpret()
     blk_b_ = min(blk_b, -(-B // 8) * 8)
@@ -430,6 +526,8 @@ def ell_predict(W: jax.Array, cols: jax.Array, vals: jax.Array, *,
                                 n_blocks_max=n_blocks_max)
         bids = ell_block_map(colsP[None], valsP[None], blk_d=blk_d,
                              n_d_blocks=n_d_blocks, n_blocks_max=cap)[0]
+    _maybe_record("ell_predict", vals, B=B, k=k, C=C, blk_d=blk_d,
+                  n_blocks_max=int(bids.shape[0]))
     # one extra zero block after the last real one: the sentinel's DMA pad
     Wp = _pad_to(_pad_to(W2.astype(jnp.float32), 128, 0),
                  (n_d_blocks + 1) * blk_d, 1)

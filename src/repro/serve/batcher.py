@@ -20,11 +20,17 @@ buckets fall back to the structural ``min(rows·k, n_d_blocks)``, which is
 correct but gives the prefetch schedule nothing to skip.
 
 Accounting: every request is stamped at submit and at result-ready (the
-score function is forced to completion before the stamp), so :meth:`stats`
-reports real queue+compute latency percentiles and drain throughput.
+score function is forced to completion before the stamp), and the
+submit→sync latency is observed into bounded log-bucket histograms on the
+batcher's telemetry registry — one aggregate series plus one per bucket —
+so :meth:`stats` reports percentile latency (p50/p90/p99 as histogram
+bucket edges) and drain throughput with **flat memory**: soaking the
+batcher with 10k requests costs the same bytes as 10 (the fix for the old
+unbounded per-request latency list; tests pin the soak).
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -33,6 +39,7 @@ import numpy as np
 
 from repro.sparse.formats import (DEFAULT_BUCKET_BLK_D, minibatch_block_bound,
                                   pad_query_planes, row_block_counts)
+from repro.telemetry.registry import Registry
 
 __all__ = ["Bucket", "bucket_ladder", "calibrate_buckets", "MicroBatcher"]
 
@@ -114,15 +121,21 @@ class MicroBatcher:
     planes and returns ``(scores, labels)`` for every row (pad rows included;
     the batcher drops them). Results are forced (``np.asarray``) before the
     done-stamp so latency numbers include device time, not dispatch time.
+
+    ``registry`` (optional :class:`repro.telemetry.Registry`): where the
+    latency histograms and request/batch counters live — pass the process
+    default to fold serving latency into a unified dump, or leave None for a
+    private registry per batcher (stats are identical either way).
     """
 
     buckets: tuple[Bucket, ...]
     clock: callable = time.monotonic
+    registry: Registry | None = None
     _queue: deque = field(default_factory=deque, repr=False)
     _next_rid: int = 0
-    _done: list = field(default_factory=list, repr=False)
     _undelivered: dict = field(default_factory=dict, repr=False)
     _batches: int = 0
+    _requests: int = 0
     _padded_rows: int = 0
     _drain_seconds: float = 0.0
 
@@ -130,6 +143,12 @@ class MicroBatcher:
         if not self.buckets:
             raise ValueError("need at least one bucket")
         self.buckets = tuple(sorted(self.buckets, key=lambda b: b.k))
+        if self.registry is None:
+            self.registry = Registry(clock=self.clock)
+
+    def _latency_hist(self, bucket_label: str):
+        return self.registry.histogram("serve.latency_seconds",
+                                       bucket=bucket_label)
 
     def bucket_for(self, nnz: int) -> Bucket:
         """Narrowest bucket that fits ``nnz`` nonzeros."""
@@ -209,10 +228,17 @@ class MicroBatcher:
                 t_done = self.t_now()
                 self._batches += 1
                 self._padded_rows += bucket.rows - len(chunk)
+                self.registry.counter("serve.batches",
+                                      bucket=f"k{bucket.k}").inc()
+                agg = self._latency_hist("all")
+                per = self._latency_hist(f"k{bucket.k}")
                 for j, r in enumerate(chunk):
                     r.scores, r.label, r.t_done = scores[j], labels[j], t_done
                     self._undelivered[r.rid] = (r.scores, r.label)
-                    self._done.append(r)
+                    lat = t_done - r.t_submit
+                    agg.observe(lat)
+                    per.observe(lat)
+                self._requests += len(chunk)
                 n_scored += 1
         finally:
             for bucket, chunk in batches[n_scored:]:
@@ -222,16 +248,41 @@ class MicroBatcher:
         return out
 
     def stats(self) -> dict:
-        """Latency/throughput over everything drained so far."""
-        lat = np.array([r.t_done - r.t_submit for r in self._done], np.float64)
-        n = len(lat)
+        """Latency/throughput over everything drained so far.
+
+        Percentiles come from the bounded log-bucket histograms (bucket upper
+        edges, within one ~19% growth factor of exact — the overflow bucket
+        reports the true max), never from raw per-request lists:
+        ``latency_p50/p90/p99_ms`` over all traffic plus a
+        ``per_bucket_latency_ms`` breakdown keyed ``k<bucket.k>``."""
+        n = self._requests
+
+        def pct(h, q):
+            if h is None or not h.count:
+                return float("nan")
+            return float(h.quantile(q) * 1e3)
+
+        agg = self.registry.get("serve.latency_seconds", bucket="all")
+        per_bucket = {}
+        for b in self.buckets:
+            hb = self.registry.get("serve.latency_seconds", bucket=f"k{b.k}")
+            if hb is not None and hb.count:
+                per_bucket[f"k{b.k}"] = {
+                    "count": hb.count,
+                    "p50_ms": pct(hb, 0.50),
+                    "p90_ms": pct(hb, 0.90),
+                    "p99_ms": pct(hb, 0.99),
+                    "max_ms": float(hb.max * 1e3) if math.isfinite(hb.max) else float("nan"),
+                }
         return {
             "requests": n,
             "batches": self._batches,
             "padded_rows": self._padded_rows,
             "pad_fraction": (self._padded_rows / max(1, n + self._padded_rows)),
-            "latency_p50_ms": float(np.percentile(lat, 50) * 1e3) if n else float("nan"),
-            "latency_p99_ms": float(np.percentile(lat, 99) * 1e3) if n else float("nan"),
+            "latency_p50_ms": pct(agg, 0.50),
+            "latency_p90_ms": pct(agg, 0.90),
+            "latency_p99_ms": pct(agg, 0.99),
+            "per_bucket_latency_ms": per_bucket,
             "queries_per_sec": n / self._drain_seconds if self._drain_seconds else float("nan"),
             "drain_seconds": self._drain_seconds,
         }

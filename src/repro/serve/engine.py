@@ -47,8 +47,15 @@ from repro.kernels.hinge_subgrad import ref as hinge_ref
 from repro.serve import snapshot as snap_mod
 from repro.serve.batcher import Bucket
 from repro.sparse.formats import DEFAULT_BUCKET_BLK_D, block_map
+from repro.telemetry.registry import Registry
 
 __all__ = ["SvmServer", "make_mesh_scorer"]
+
+# Counters every server keeps on its registry (as ``serve.<key>`` series);
+# stats() reads them back under these exact keys for back-compat.
+_STAT_KEYS = ("queries", "batches", "sparse_batches", "blocks_visited",
+              "dense_block_equivalent", "cap_overflows", "swaps",
+              "reload_errors", "quarantined")
 
 
 class SvmServer:
@@ -60,13 +67,17 @@ class SvmServer:
     interpret — so a CPU replica and a TPU replica run the same engine.
     ``use_kernels=True`` forces the kernel path (interpret off-TPU; what CI
     exercises). ``meta`` carries the checkpoint's manifest ``extra`` when
-    loaded from disk (iteration, objective, export dtype).
+    loaded from disk (iteration, objective, export dtype). ``registry``: the
+    telemetry registry the ``serve.*`` counters and per-call kernel
+    launch/bytes accounting land on — private per server by default, pass a
+    shared one to fold several components into one dump.
     """
 
     def __init__(self, W, *, meta: dict | None = None,
                  blk_d: int = DEFAULT_BUCKET_BLK_D,
                  use_kernels: bool | None = None,
-                 reload_quarantine: int = 3):
+                 reload_quarantine: int = 3,
+                 registry: Registry | None = None):
         W = np.asarray(W, np.float32)
         if W.ndim not in (1, 2):
             raise ValueError(f"W must be (d,) or (C, d), got {W.shape}")
@@ -89,12 +100,13 @@ class SvmServer:
         self._watch_root: str | None = None
         self._watch_step: int | None = None
         self._reload_failures: dict[int, int] = {}
-        self._stats = {
-            "queries": 0, "batches": 0, "sparse_batches": 0,
-            "blocks_visited": 0, "dense_block_equivalent": 0,
-            "cap_overflows": 0, "swaps": 0, "reload_errors": 0,
-            "quarantined": 0,
-        }
+        # All serving counters live on a telemetry registry (private per
+        # server unless one is shared in) — stats() is a *view* over it, and
+        # kernel launch/bytes accounting lands beside the serve counters.
+        self.registry = registry if registry is not None else Registry()
+
+    def _count(self, key: str, n: int = 1) -> None:
+        self.registry.counter(f"serve.{key}").inc(n)
 
     # ------------------------------------------------------------- loading
 
@@ -151,7 +163,7 @@ class SvmServer:
         self._W_dev = jnp.asarray(W)
         if meta is not None:
             self.meta = dict(meta)
-        self._stats["swaps"] += 1
+        self._count("swaps")
 
     def maybe_reload(self) -> int | None:
         """Poll the watched root once; hot-swap if ``LATEST`` moved.
@@ -176,7 +188,7 @@ class SvmServer:
         try:
             step = ckpt.read_latest(self._watch_root)
         except Exception:
-            self._stats["reload_errors"] += 1
+            self._count("reload_errors")
             return None
         if step is None or step == self._watch_step:
             return None
@@ -187,10 +199,10 @@ class SvmServer:
             w, extra = snap_mod.from_checkpoint(self._watch_root, step)
             self.swap_weights(w, meta=extra)
         except Exception:
-            self._stats["reload_errors"] += 1
+            self._count("reload_errors")
             self._reload_failures[step] = fails + 1
             if fails + 1 == self.reload_quarantine:
-                self._stats["quarantined"] += 1
+                self._count("quarantined")
             return None
         self._watch_step = step
         self._reload_failures.pop(step, None)
@@ -224,8 +236,13 @@ class SvmServer:
         else:
             fn = self._jit(("dense", B), lambda: jax.jit(self._dense_oracle))
         scores, labels = fn(self._W_dev, jnp.asarray(X))
-        self._stats["queries"] += B
-        self._stats["batches"] += 1
+        self._count("queries", B)
+        self._count("batches")
+        if self.use_kernels:
+            # The kernel runs inside jit, so the eager self-recording in ops
+            # never fires — account the launch here, at the host boundary.
+            hinge_ops.record_launch("dense_predict", registry=self.registry,
+                                    B=B, d=d, C=self.n_classes)
         return np.asarray(scores), np.asarray(labels)
 
     def _dense_oracle(self, W, X):
@@ -262,7 +279,7 @@ class SvmServer:
         live = len(np.unique(cols[vals != 0] // self.blk_d))
         if live > cap:
             cap = min(-(-live // 8) * 8, self.n_d_blocks)
-            self._stats["cap_overflows"] += 1
+            self._count("cap_overflows")
         bm = block_map(cols[None], vals[None], self.blk_d, self.n_d_blocks, cap)[0]
         key = ("ell", B, k, cap)
         if self.use_kernels:
@@ -274,11 +291,16 @@ class SvmServer:
         else:
             fn = self._jit(key, lambda: jax.jit(self._ell_oracle))
             scores, labels = fn(self._W_dev, jnp.asarray(cols), jnp.asarray(vals))
-        self._stats["queries"] += B
-        self._stats["batches"] += 1
-        self._stats["sparse_batches"] += 1
-        self._stats["blocks_visited"] += live
-        self._stats["dense_block_equivalent"] += self.n_d_blocks
+        self._count("queries", B)
+        self._count("batches")
+        self._count("sparse_batches")
+        self._count("blocks_visited", live)
+        self._count("dense_block_equivalent", self.n_d_blocks)
+        if self.use_kernels:
+            hinge_ops.record_launch("ell_predict", registry=self.registry,
+                                    blocks_visited=live, B=B, k=k,
+                                    C=self.n_classes, blk_d=self.blk_d,
+                                    n_blocks_max=cap)
         return np.asarray(scores), np.asarray(labels)
 
     def _ell_oracle(self, W, cols, vals):
@@ -305,8 +327,12 @@ class SvmServer:
         """Serving counters: queries/batches served, ``distinct_shapes``
         (jit-cache size — the compile count asserted flat across hot swaps),
         ``swaps`` / ``reload_errors`` / ``quarantined`` from the watch path,
-        and the sparse blocks-visited accounting vs a dense sweep."""
-        s = dict(self._stats)
+        and the sparse blocks-visited accounting vs a dense sweep.
+
+        A *view* over :attr:`registry` (the ``serve.*`` counter series) with
+        the historical flat keys preserved — consumers that want the kernel
+        launch/bytes series too should read the registry directly."""
+        s = {k: int(self.registry.value(f"serve.{k}")) for k in _STAT_KEYS}
         s["distinct_shapes"] = len(self._compiled)
         s["blocks_visited_ratio"] = (
             s["blocks_visited"] / s["dense_block_equivalent"]

@@ -43,6 +43,8 @@ import time
 from repro.core.gadget import (GadgetConfig, SegmentResult, TrainState,
                                gadget_train_stream)
 from repro.serve.snapshot import (Snapshot, latest_train_state, to_checkpoint)
+from repro.telemetry.registry import Registry
+from repro.telemetry.train import TrainTelemetry
 
 __all__ = ["TrainPublisher"]
 
@@ -70,6 +72,14 @@ class TrainPublisher:
       when none exists); the resolved choice is recorded in
       :attr:`resumed_from` (the resume iteration, or None for fresh).
 
+    Telemetry: ``telemetry`` (a :class:`repro.telemetry.TrainTelemetry`)
+    forwards to the stream, attaching per-segment flight-recorder readings to
+    every ``SegmentResult``; ``registry`` is where the publisher's own series
+    land — a ``publish.seconds`` span per flushed segment plus
+    ``publish.segments`` / ``publish.retries`` counters, and the segment's
+    disagreement/objective/drop readings mirrored beside them. Private per
+    publisher by default; pass a shared registry for a unified dump.
+
     Lifecycle: ``start()`` launches the daemon thread and returns ``self``;
     ``join()`` blocks until training converges (or ``cfg.max_iters``) and
     returns the final :class:`~repro.core.gadget.SegmentResult`. Both
@@ -84,7 +94,9 @@ class TrainPublisher:
                  save_train_state: bool = False,
                  resume: TrainState | str | None = None,
                  publish_retries: int = 3, publish_backoff: float = 0.05,
-                 publish_backoff_cap: float = 1.0):
+                 publish_backoff_cap: float = 1.0,
+                 telemetry: TrainTelemetry | None = None,
+                 registry: Registry | None = None):
         if resume is not None and resume != "latest" \
                 and not isinstance(resume, TrainState):
             raise ValueError(
@@ -103,6 +115,11 @@ class TrainPublisher:
         self.publish_backoff = float(publish_backoff)
         self.publish_backoff_cap = float(publish_backoff_cap)
         self.publish_retries_used = 0
+        self.telemetry = telemetry
+        # publish.* series land here: one "publish.seconds" span per flushed
+        # segment, "publish.segments" / "publish.retries" counters, and the
+        # per-segment train.* gauges the stream writes when telemetry is on.
+        self.registry = registry if registry is not None else Registry()
         self._data = (X_parts, y_parts, n_counts)
         self.published: list[int] = []
         self.final: SegmentResult | None = None
@@ -134,7 +151,8 @@ class TrainPublisher:
             for seg in gadget_train_stream(X_parts, y_parts, self.cfg,
                                            segment_iters=self.segment_iters,
                                            n_counts=n_counts,
-                                           resume=self._resolve_resume()):
+                                           resume=self._resolve_resume(),
+                                           telemetry=self.telemetry):
                 self._publish(seg)
                 self.final = seg
         except BaseException as e:  # surfaced via join()/wait()/error
@@ -149,18 +167,28 @@ class TrainPublisher:
         if self.save_train_state:
             train_state = TrainState(iteration=seg.iteration, W=seg.W,
                                      W_sum=seg.W_sum)
-        for attempt in range(self.publish_retries + 1):
-            try:
-                to_checkpoint(snap, self.root, quantize=self.quantize,
-                              keep=self.keep, lam=self.cfg.lam,
-                              train_state=train_state)
-                break
-            except OSError:
-                if attempt == self.publish_retries:
-                    raise
-                self.publish_retries_used += 1
-                time.sleep(min(self.publish_backoff * 2 ** attempt,
-                               self.publish_backoff_cap))
+        with self.registry.span("publish.seconds", iteration=seg.iteration):
+            for attempt in range(self.publish_retries + 1):
+                try:
+                    to_checkpoint(snap, self.root, quantize=self.quantize,
+                                  keep=self.keep, lam=self.cfg.lam,
+                                  train_state=train_state)
+                    break
+                except OSError:
+                    if attempt == self.publish_retries:
+                        raise
+                    self.publish_retries_used += 1
+                    self.registry.counter("publish.retries").inc()
+                    time.sleep(min(self.publish_backoff * 2 ** attempt,
+                                   self.publish_backoff_cap))
+        self.registry.counter("publish.segments").inc()
+        if seg.telemetry is not None:
+            # Mirror the segment's flight-recorder readings next to the
+            # publish series, so one registry tells the whole producer story.
+            self.registry.gauge("train.final_disagreement").set(
+                seg.telemetry.disagreement)
+            self.registry.gauge("train.objective").set(seg.telemetry.objective)
+            self.registry.counter("train.fault_drops").inc(seg.telemetry.drops)
         self.published.append(seg.iteration)
 
     def _raise_error(self) -> None:

@@ -1,0 +1,66 @@
+"""Flight recorder: unified telemetry for train, gossip, kernel, and serve.
+
+Public surface:
+
+* :class:`Registry` / :func:`default_registry` and the module-level
+  :func:`counter` / :func:`gauge` / :func:`histogram` / :func:`span` /
+  :func:`reset` conveniences (see :mod:`repro.telemetry.registry`).
+* :class:`TrainTelemetry` — pass as ``gadget_train(..., telemetry=...)``
+  to record the on-device trace ring; results come back as
+  :class:`TrainTrace` on ``GadgetResult.telemetry``.
+* :func:`to_prometheus` / :func:`dump_jsonl` / :class:`JsonlSink`
+  exporters, and the ``python -m repro.telemetry.dump`` CLI.
+"""
+from .export import (
+    JsonlSink,
+    dump_jsonl,
+    read_jsonl,
+    registry_records,
+    to_prometheus,
+    write_prometheus,
+)
+from .registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    Span,
+    counter,
+    default_registry,
+    gauge,
+    histogram,
+    reset,
+    span,
+)
+from .train import (
+    SegmentTelemetry,
+    TrainTelemetry,
+    TrainTrace,
+    publish_trace,
+    validate_telemetry,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Registry",
+    "Span",
+    "counter",
+    "default_registry",
+    "gauge",
+    "histogram",
+    "reset",
+    "span",
+    "JsonlSink",
+    "dump_jsonl",
+    "read_jsonl",
+    "registry_records",
+    "to_prometheus",
+    "write_prometheus",
+    "SegmentTelemetry",
+    "TrainTelemetry",
+    "TrainTrace",
+    "publish_trace",
+    "validate_telemetry",
+]

@@ -1,0 +1,158 @@
+"""On-device training telemetry: the trace ring and its host-side decode.
+
+:class:`TrainTelemetry` is the user-facing config accepted by
+``gadget_train(..., telemetry=...)`` and ``gadget_train_stream``. When set,
+the jitted training loop carries a fixed-size ring (alongside the snapshot
+ring) recording, every ``every`` iterations:
+
+* consensus disagreement — ``max_i ||w_i - w_consensus||_2``,
+* Push-Sum mass min/max over the window since the previous record,
+* primal objective at the consensus iterate,
+* fault-drop counts (messages lost to the :class:`~repro.core.faults
+  .FaultPlan`, summed over the window; 0 when fault-free).
+
+The ring costs ``slots * 4`` f32/i32 device words and is materialized with
+ONE extra post-termination sync; ``telemetry=None`` leaves the traced
+program untouched (bit-identical trajectories — asserted in tests).
+
+:class:`TrainTrace` is the decoded host-side result attached to
+``GadgetResult.telemetry``; :func:`publish_trace` mirrors its headline
+numbers onto a :class:`~repro.telemetry.registry.Registry` so benches and
+the dump CLI read training health from the same place as serve metrics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from .registry import default_registry
+
+__all__ = [
+    "TrainTelemetry",
+    "TrainTrace",
+    "SegmentTelemetry",
+    "validate_telemetry",
+    "publish_trace",
+]
+
+
+class TrainTelemetry(NamedTuple):
+    """Config for the on-device training trace ring.
+
+    ``every`` — record a trace point every this many iterations (>= 1).
+    ``slots`` — ring capacity; when more than ``slots`` points are recorded
+    the oldest are overwritten (ring semantics, like the snapshot ring).
+    """
+
+    every: int = 1
+    slots: int = 256
+
+
+class TrainTrace(NamedTuple):
+    """Decoded training trace: per-record arrays in iteration order.
+
+    All arrays share length ``count`` (<= slots; ring-decoded oldest
+    first). ``mass_min``/``mass_max`` are windowed extrema of the Push-Sum
+    mass over the iterations since the previous record — under message-drop
+    faults ``1 - mass_min`` is the leakage gauge the fault bench asserts
+    on. ``drops`` counts faulted messages per window (int64, zeros when
+    fault-free). ``final_disagreement`` is measured at the returned
+    consensus regardless of ring cadence.
+    """
+
+    every: int
+    iterations: np.ndarray
+    disagreement: np.ndarray
+    mass_min: np.ndarray
+    mass_max: np.ndarray
+    objective: np.ndarray
+    drops: np.ndarray
+    final_iteration: int
+    final_disagreement: float
+
+    @property
+    def count(self) -> int:
+        """Number of trace points retained in the ring."""
+        return int(self.iterations.shape[0])
+
+
+class SegmentTelemetry(NamedTuple):
+    """Per-segment telemetry from ``gadget_train_stream``.
+
+    One record per published segment: disagreement and objective are
+    measured at the segment boundary; mass/drops aggregate over the
+    segment's active iterations (mass extrema are NaN for segments that
+    run zero active iterations).
+    """
+
+    disagreement: float
+    mass_min: float
+    mass_max: float
+    objective: float
+    drops: int
+
+
+def validate_telemetry(telemetry: Optional[TrainTelemetry]) -> Optional[TrainTelemetry]:
+    """Normalize/validate a ``telemetry=`` argument.
+
+    Accepts None (off), a :class:`TrainTelemetry`, or anything with
+    ``every``/``slots`` attributes; returns a validated
+    :class:`TrainTelemetry` or None.
+    """
+    if telemetry is None:
+        return None
+    every = int(getattr(telemetry, "every", 1))
+    slots = int(getattr(telemetry, "slots", 256))
+    if every < 1:
+        raise ValueError(f"telemetry.every must be >= 1, got {every}")
+    if slots < 1:
+        raise ValueError(f"telemetry.slots must be >= 1, got {slots}")
+    return TrainTelemetry(every=every, slots=slots)
+
+
+def _ring_order(count: int, slots: int) -> np.ndarray:
+    """Indices that reorder a ring written ``count`` times (slot ``i %
+    slots``) into oldest-first retained order."""
+    kept = min(count, slots)
+    start = count % slots if count > slots else 0
+    return (start + np.arange(kept)) % slots
+
+
+def decode_ring(every: int, slots: int, count: int, iterations, disagreement,
+                mass_min, mass_max, objective, drops,
+                final_iteration: int, final_disagreement: float) -> TrainTrace:
+    """Assemble a :class:`TrainTrace` from raw device ring arrays."""
+    order = _ring_order(int(count), slots)
+    return TrainTrace(
+        every=every,
+        iterations=np.asarray(iterations)[order].astype(np.int64),
+        disagreement=np.asarray(disagreement)[order].astype(np.float64),
+        mass_min=np.asarray(mass_min)[order].astype(np.float64),
+        mass_max=np.asarray(mass_max)[order].astype(np.float64),
+        objective=np.asarray(objective)[order].astype(np.float64),
+        drops=np.asarray(drops)[order].astype(np.int64),
+        final_iteration=int(final_iteration),
+        final_disagreement=float(final_disagreement),
+    )
+
+
+def publish_trace(trace: TrainTrace, registry=None) -> None:
+    """Mirror a decoded trace's headline numbers onto a registry.
+
+    Sets ``train.final_disagreement`` / ``train.mass_min`` /
+    ``train.mass_max`` / ``train.objective`` gauges and increments the
+    ``train.fault_drops`` counter; no-op details (empty trace) publish
+    only the final disagreement.
+    """
+    reg = default_registry() if registry is None else registry
+    reg.gauge("train.final_disagreement").set(trace.final_disagreement)
+    if trace.count:
+        reg.gauge("train.objective").set(float(trace.objective[-1]))
+        finite_min = trace.mass_min[np.isfinite(trace.mass_min)]
+        finite_max = trace.mass_max[np.isfinite(trace.mass_max)]
+        if finite_min.size:
+            reg.gauge("train.mass_min").set(float(finite_min.min()))
+        if finite_max.size:
+            reg.gauge("train.mass_max").set(float(finite_max.max()))
+        reg.counter("train.fault_drops").inc(int(trace.drops.sum()))

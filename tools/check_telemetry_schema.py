@@ -1,0 +1,182 @@
+"""Validate flight-recorder JSONL streams against the record schema.
+
+Every line of a telemetry JSONL file (``telemetry.export.dump_jsonl``
+snapshots or a live ``JsonlSink`` event stream) must be a JSON object with
+``ts`` (number), ``kind`` (counter | gauge | histogram | span | event),
+``name`` (non-empty string) and ``labels`` (string-keyed object), plus the
+kind-specific payload:
+
+* counter / gauge — numeric ``value`` (counters additionally >= 0);
+* histogram — ``count`` (int >= 0), ``sum``, ``min``/``max`` (numeric or
+  null when empty), and ``buckets``: a list of ``[le, n]`` pairs with
+  strictly increasing numeric ``le`` (the overflow bucket's ``le`` is null
+  and must come last), bucket counts summing to ``count``;
+* span — numeric ``seconds`` >= 0 (``fields`` optional).
+
+The schema is the compatibility contract between writers (the registry
+exporters) and readers (``python -m repro.telemetry.dump``, dashboards);
+CI runs this over a freshly dumped stream plus ``--selftest``.
+
+Usage:
+    PYTHONPATH=src python tools/check_telemetry_schema.py [--selftest] [files...]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+KINDS = {"counter", "gauge", "histogram", "span", "event"}
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_record(rec) -> list[str]:
+    """Schema violations in one parsed record (empty list = valid)."""
+    errs = []
+    if not isinstance(rec, dict):
+        return [f"record is {type(rec).__name__}, not an object"]
+    if not _is_num(rec.get("ts")):
+        errs.append("missing/non-numeric 'ts'")
+    kind = rec.get("kind")
+    if kind not in KINDS:
+        errs.append(f"bad 'kind' {kind!r} (expected one of {sorted(KINDS)})")
+    name = rec.get("name")
+    if not isinstance(name, str) or not name:
+        errs.append("missing/empty 'name'")
+    labels = rec.get("labels")
+    if not isinstance(labels, dict) or any(
+            not isinstance(k, str) for k in labels):
+        errs.append("'labels' must be a string-keyed object")
+    if kind in ("counter", "gauge"):
+        if not _is_num(rec.get("value")):
+            errs.append(f"{kind} record needs numeric 'value'")
+        elif kind == "counter" and rec["value"] < 0:
+            errs.append(f"counter value {rec['value']} < 0")
+    elif kind == "histogram":
+        count = rec.get("count")
+        if not isinstance(count, int) or count < 0:
+            errs.append("histogram needs int 'count' >= 0")
+        if not _is_num(rec.get("sum")):
+            errs.append("histogram needs numeric 'sum'")
+        for bound in ("min", "max"):
+            v = rec.get(bound, "absent")
+            if v is not None and not _is_num(v):
+                errs.append(f"histogram '{bound}' must be numeric or null")
+        buckets = rec.get("buckets")
+        if not isinstance(buckets, list):
+            errs.append("histogram needs 'buckets' list")
+        else:
+            prev_le = None
+            total = 0
+            for i, pair in enumerate(buckets):
+                if (not isinstance(pair, list) or len(pair) != 2
+                        or (pair[0] is not None and not _is_num(pair[0]))
+                        or not isinstance(pair[1], int) or pair[1] < 0):
+                    errs.append(f"bucket {i} must be [le|null, count>=0]")
+                    continue
+                le, n = pair
+                total += n
+                if le is None:
+                    if i != len(buckets) - 1:
+                        errs.append("null-le (overflow) bucket must be last")
+                elif prev_le is not None and le <= prev_le:
+                    errs.append(f"bucket edges not increasing at index {i}")
+                if le is not None:
+                    prev_le = le
+            if isinstance(count, int) and total != count:
+                errs.append(f"bucket counts sum to {total}, 'count' is {count}")
+    elif kind == "span":
+        s = rec.get("seconds")
+        if not _is_num(s) or s < 0:
+            errs.append("span record needs numeric 'seconds' >= 0")
+    return errs
+
+
+def validate_file(path: str) -> list[str]:
+    """All violations in a JSONL file, each prefixed ``path:line``."""
+    errs = []
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                errs.append(f"{path}:{lineno}: not JSON ({e.msg})")
+                continue
+            errs.extend(f"{path}:{lineno}: {msg}"
+                        for msg in validate_record(rec))
+    return errs
+
+
+def selftest() -> int:
+    """Round-trip a live registry through dump_jsonl and validate it, then
+    confirm the checker actually rejects malformed records."""
+    import tempfile
+
+    from repro.telemetry.export import dump_jsonl
+    from repro.telemetry.registry import Registry
+
+    reg = Registry()
+    reg.counter("train.iterations").inc(40)
+    reg.gauge("train.objective").set(1.5)
+    h = reg.histogram("serve.latency_seconds", bucket="all")
+    for v in (1e-4, 3e-3, 0.2, 50.0):
+        h.observe(v)
+    with reg.span("publish.seconds", iteration=40):
+        pass
+    with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
+                                     delete=False) as fh:
+        path = fh.name
+    dump_jsonl(reg, path, mode="w")
+    errs = validate_file(path)
+    if errs:
+        print("selftest: valid dump rejected:", *errs, sep="\n  ")
+        return 1
+    bad = [
+        {"kind": "counter", "name": "x", "labels": {}, "value": 1},  # no ts
+        {"ts": 1.0, "kind": "nope", "name": "x", "labels": {}, "value": 1},
+        {"ts": 1.0, "kind": "counter", "name": "x", "labels": {}, "value": -2},
+        {"ts": 1.0, "kind": "histogram", "name": "x", "labels": {},
+         "count": 3, "sum": 1.0, "min": 0.1, "max": 0.9,
+         "buckets": [[0.5, 1], [0.25, 2]]},  # edges not increasing
+        {"ts": 1.0, "kind": "span", "name": "x", "labels": {}, "seconds": -1},
+    ]
+    for rec in bad:
+        if not validate_record(rec):
+            print(f"selftest: malformed record accepted: {rec}")
+            return 1
+    print("check_telemetry_schema: selftest ok")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    """CLI entry: validate files (and/or run ``--selftest``)."""
+    args = list(argv)
+    run_self = "--selftest" in args
+    if run_self:
+        args.remove("--selftest")
+    if run_self and selftest() != 0:
+        return 1
+    total = 0
+    for path in args:
+        errs = validate_file(path)
+        for e in errs:
+            print(e)
+        if not errs:
+            print(f"OK    {path}")
+        total += len(errs)
+    if total:
+        print(f"check_telemetry_schema: {total} violation(s)")
+        return 1
+    if not args and not run_self:
+        print("usage: check_telemetry_schema.py [--selftest] [files...]")
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
