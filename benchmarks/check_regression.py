@@ -64,12 +64,22 @@ SKIP_LEAVES = {"speedup", "fused_speedup_vs_pr1", "transfer_ratio",
                "disagreement", "leakage",
                # telemetry_overhead_bench: ratios of two small wall-clocks —
                # the bench's own <= 5% assert is the gate, never the diff
-               "overhead_ratio", "overhead_ratio_sum"}
+               "overhead_ratio", "overhead_ratio_sum",
+               # overload_bench: capacity is re-measured per run and every
+               # count downstream of it (offered traffic, admission-policy
+               # outcomes, ladder excursions) scales with it — the bench's
+               # own bounded/reconciliation asserts are the gate; the
+               # goodput/shed-rate *rates* stay structural on purpose
+               "capacity_qps", "offered_qps", "offered", "max_pending",
+               "timeout_ms", "queue_peak", "max_rung", "delivered", "shed",
+               "deadline_missed", "truncated", "submitted"}
 # whole subtrees that are observability output, not a regression surface:
 # the flight-recorder snapshot's counter values scale with how much traffic
 # the run happened to push (live-pass races, rep counts), so leaves under
 # these keys are reported in the JSON but never diffed
-SKIP_PARENTS = {"telemetry"}
+# ("depth_quartiles": overload_bench's queue-growth evidence — asserted
+# monotone by the bench itself, the raw means are load-noise)
+SKIP_PARENTS = {"telemetry", "depth_quartiles"}
 # the fingerprint subtree identifies the runner; it is compared as a whole,
 # never leaf-by-leaf (a different cpu_count is not a "structural change")
 RUNNER_KEY = "runner"

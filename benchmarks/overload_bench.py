@@ -1,0 +1,312 @@
+"""Open-loop overload benchmark: bounded admission + deadlines + degradation.
+
+Closed-loop benchmarks (``serve_bench``) can never overload the server —
+they wait for each drain before submitting more. This harness drives a live
+:class:`repro.serve.SvmServer` with a **seeded Poisson arrival process**
+whose rate is independent of service completions (open loop), so offered
+load above capacity actually piles up, and measures what the overload
+policy (``docs/ARCHITECTURE.md`` §9) does about it.
+
+Protocol:
+
+1. **Measure capacity** closed-loop through the same batcher/drain
+   machinery the open-loop runs use (so the calibration includes every
+   per-request Python and launch overhead, not just kernel time).
+2. **Sweep load factors** 0.5× / 1.0× / 2.0× of that capacity with the full
+   protection stack on — ``shed-oldest`` bounded admission, default
+   deadlines, and the hysteretic :class:`repro.serve.DegradeLadder` — and
+   once more at 2.0× with every protection off (the historical unbounded
+   batcher).
+3. Record goodput, shed / deadline-miss rates, histogram-backed p50/p99 and
+   queue depth per load point into ``BENCH_overload.json``.
+
+Hard asserts (the regression surface; every run):
+
+* **Accounting** — at every load point the counters reconcile exactly:
+  ``submitted == delivered + shed + deadline_missed`` after the final flush,
+  and every offered request is either submitted or typed-rejected.
+* **Bounded under 2×** — the protected queue never exceeds ``max_pending``
+  and delivered-request p99 stays under ``deadline + slack`` (expired work
+  is dropped before launch, so the tail cannot grow past the deadline).
+* **Goodput holds** — protected goodput at 2× offered load is within 10% of
+  (or above) the 1× level: shedding drops requests, not throughput. The
+  assert compares **busy-time** goodput (delivered / drain seconds — the
+  rate the server actually sustains while scoring) so it cannot flake on
+  how the critical-load random walk at exactly 1.0× happened to shed;
+  wall-clock goodput is recorded beside it. Degraded rungs make surviving
+  requests cheaper, so exceeding 1× goodput is success, not noise — the
+  assert is one-sided from below.
+* **Unprotected contrast** — the unbounded configuration's queue depth
+  grows monotonically through the arrival window (non-decreasing quartile
+  means, last > 2× first) and its peak blows through the protected bound.
+* **Zero recompiles** — ``distinct_shapes`` is identical before and after
+  the whole sweep: every ladder transition (int8 plane, cheapest-bucket
+  routing) reuses already-compiled executables.
+
+Absolute rates are CPU-host numbers, not TPU numbers; the asserts and the
+structural leaves (accounting, bounds, compile count) are the regression
+surface, with goodput/shed-rate visible as warn-only structural leaves.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.overload_bench [--quick] [--json out.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro import serve
+from repro import telemetry as tm
+
+#: delivered-latency tail bound at 2× protected load: requests older than the
+#: deadline are dropped before launch, so p99 can only exceed the deadline by
+#: scheduling slack + one batch's service time (generous for a shared CI box).
+P99_SLACK_MS = 500.0
+#: one-sided goodput floor: 2× goodput >= (1 - GOODPUT_TOL) * 1× goodput.
+GOODPUT_TOL = 0.10
+
+
+def _make_pool(d: int, k_max: int, n_pool: int, seed: int):
+    """Pre-generate a pool of ragged sparse queries (1-D cols/vals each)."""
+    rng = np.random.default_rng(seed)
+    pool = []
+    for _ in range(n_pool):
+        nnz = int(rng.integers(4, k_max + 1))
+        cols = np.sort(rng.choice(d, size=nnz, replace=False)).astype(np.int32)
+        vals = rng.standard_normal(nnz).astype(np.float32)
+        pool.append((cols, vals))
+    return pool
+
+
+def _warm(srv, buckets) -> int:
+    """Compile every bucket shape up front; returns the compile count."""
+    for b in buckets:
+        srv.score_sparse(np.zeros((b.rows, b.k), np.int32),
+                         np.zeros((b.rows, b.k), np.float32),
+                         n_blocks_max=b.n_blocks_max)
+    return srv.stats()["distinct_shapes"]
+
+
+def measure_capacity(srv, buckets, pool, seconds: float) -> float:
+    """Closed-loop service capacity (queries/sec) through the same
+    batcher/drain machinery the open-loop runs use — submit a full wave,
+    drain it, repeat — so the number includes all per-request overhead and
+    1.0× offered load really is the saturation point."""
+    mb = serve.MicroBatcher(buckets)
+    score_fn = srv.scorer_for()
+    wave = max(len(pool) // 4, buckets[0].rows * 4)
+    delivered = 0
+    i = 0
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < seconds:
+        for _ in range(wave):
+            c, v = pool[i % len(pool)]
+            mb.submit(c, v)
+            i += 1
+        delivered += len(mb.drain(score_fn))
+    return delivered / (time.monotonic() - t0)
+
+
+def open_loop_run(srv, buckets, pool, rate_qps: float, duration_s: float, *,
+                  protected: bool, max_pending: int, timeout_s: float,
+                  seed: int, label: str, verbose: bool) -> dict:
+    """One open-loop load point: a submitter thread replays a seeded Poisson
+    arrival schedule at ``rate_qps`` while the main thread drains (and, when
+    ``protected``, steps the degradation ladder between drains). Returns the
+    per-run record for the JSON, with the accounting asserts applied."""
+    mb = serve.MicroBatcher(
+        buckets,
+        max_pending=max_pending if protected else None,
+        admission="shed-oldest",
+        default_timeout=timeout_s if protected else None)
+    ladder = None
+    if protected:
+        ladder = serve.DegradeLadder(srv, mb, high=0.75, low=0.25, patience=2)
+        ladder.prepare()
+
+    n = max(50, int(rate_qps * duration_s))
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+    order = rng.integers(0, len(pool), size=n)
+    shapes0 = srv.stats()["distinct_shapes"]
+
+    done = threading.Event()
+
+    def submitter():
+        t0 = time.monotonic()
+        for at, qi in zip(arrivals, order):
+            lag = t0 + at - time.monotonic()
+            if lag > 0:
+                time.sleep(lag)
+            cols, vals = pool[qi]
+            mb.submit(cols, vals)
+        done.set()
+
+    score_fn = srv.scorer_for()
+    depth = []          # queue depth sampled at each drain, arrival window only
+    max_rung = 0
+    th = threading.Thread(target=submitter, daemon=True,
+                          name=f"overload-submitter-{label}")
+    t_start = time.monotonic()
+    th.start()
+    while not done.is_set() or mb.pending:
+        if not done.is_set():
+            depth.append(mb.pending)
+        if ladder is not None:
+            max_rung = max(max_rung, ladder.observe())
+        if mb.pending:
+            mb.drain(score_fn)
+        else:
+            time.sleep(0.0005)
+    th.join()
+    mb.drain(score_fn)  # flush typed Shed/DeadlineExceeded results, if any
+    wall = time.monotonic() - t_start
+    if ladder is not None:  # leave the shared server at full service
+        srv.set_plane("f32")
+        mb.degrade_to(None)
+
+    st = mb.stats()
+    shapes1 = srv.stats()["distinct_shapes"]
+    assert shapes1 == shapes0, (
+        f"{label}: distinct_shapes moved {shapes0} -> {shapes1} — an overload "
+        f"transition recompiled")
+    assert st["pending"] == 0
+    assert st["submitted"] + st["rejected"] == n, (
+        f"{label}: offered {n} != submitted {st['submitted']} + "
+        f"rejected {st['rejected']}")
+    assert st["submitted"] == st["delivered"] + st["shed"] + st["deadline_missed"], (
+        f"{label}: accounting leak — submitted {st['submitted']} != "
+        f"delivered {st['delivered']} + shed {st['shed']} + "
+        f"deadline_missed {st['deadline_missed']}")
+
+    goodput = st["delivered"] / wall
+    goodput_busy = (st["delivered"] / st["drain_seconds"]
+                    if st["drain_seconds"] else 0.0)
+    rec = {
+        "protected": int(protected),
+        "offered": n,
+        "offered_qps": round(rate_qps, 1),
+        "submitted": st["submitted"],
+        "delivered": st["delivered"],
+        "shed": st["shed"],
+        "deadline_missed": st["deadline_missed"],
+        "rejected": st["rejected"],
+        "truncated": st["truncated"],
+        "goodput_qps": round(goodput, 1),
+        "goodput_busy_qps": round(goodput_busy, 1),
+        "shed_rate": round(st["shed"] / n, 3),
+        "deadline_miss_rate": round(st["deadline_missed"] / n, 3),
+        "queue_peak": st["queue_peak"],
+        "max_rung": max_rung,
+        "us_per_call": {"p50": st["latency_p50_ms"] * 1e3,
+                        "p99": st["latency_p99_ms"] * 1e3},
+        "wall": {"seconds": wall},
+    }
+    if depth:
+        # quartile-mean queue depth over the arrival window: the
+        # bounded-vs-unbounded growth evidence
+        quarts = [float(np.mean(q)) for q in np.array_split(np.array(depth), 4)]
+        rec["depth_quartiles"] = [round(q, 1) for q in quarts]
+    if verbose:
+        emit(f"overload/{label}", st["latency_p99_ms"] * 1e3,
+             f"goodput={goodput:.0f}qps;shed={st['shed']};"
+             f"miss={st['deadline_missed']};peak={st['queue_peak']};"
+             f"rung={max_rung}")
+    return rec
+
+
+def run(quick: bool = False, json_path: str | None = None,
+        verbose: bool = True) -> dict:
+    d = 2048 if quick else 8192
+    k_max = 64
+    cal_seconds = 0.35 if quick else 1.0
+    duration_s = 0.9 if quick else 2.5
+
+    tm.reset()  # the JSON's telemetry section covers this run only
+    rng_w = np.random.default_rng(0)
+    W = rng_w.standard_normal(d).astype(np.float32)
+    # kernel path (interpreted on CPU, like serve_bench): per-launch service
+    # cost dominates per-request queue bookkeeping, as on a real accelerator —
+    # with the cheap jnp oracle the Python-side load generator itself becomes
+    # the bottleneck and goodput measures GIL contention, not the server
+    srv = serve.SvmServer(W, use_kernels=True, registry=tm.default_registry())
+    buckets = serve.bucket_ladder(k_max, rows=8, min_k=16, d=d)
+    pool = _make_pool(d, k_max, n_pool=256, seed=1)
+
+    shapes_warm = _warm(srv, buckets)
+    assert shapes_warm == len(buckets)
+    capacity = measure_capacity(srv, buckets, pool, cal_seconds)
+    if verbose:
+        emit("overload/capacity", 1e6 / capacity, f"qps={capacity:.0f}")
+
+    # protection knobs derived from measured capacity: the queue holds ~50 ms
+    # of work, deadlines allow ~4 queue-drain times of waiting
+    max_pending = max(64, int(capacity * 0.05))
+    timeout_s = max(0.1, 4 * max_pending / capacity)
+
+    points = {}
+    for i, factor in enumerate((0.5, 1.0, 2.0)):
+        points[f"{factor}x"] = open_loop_run(
+            srv, buckets, pool, capacity * factor, duration_s,
+            protected=True, max_pending=max_pending, timeout_s=timeout_s,
+            seed=100 + i, label=f"{factor}x", verbose=verbose)
+    points["2.0x-unprotected"] = open_loop_run(
+        srv, buckets, pool, capacity * 2.0, duration_s,
+        protected=False, max_pending=max_pending, timeout_s=timeout_s,
+        seed=103, label="2.0x-unprotected", verbose=verbose)
+
+    # ---- cross-point asserts: what the protection stack buys at 2× --------
+    p1, p2 = points["1.0x"], points["2.0x"]
+    un = points["2.0x-unprotected"]
+    assert p2["queue_peak"] <= max_pending, (
+        f"protected 2x queue peak {p2['queue_peak']} > bound {max_pending}")
+    p99_bound_ms = timeout_s * 1e3 + P99_SLACK_MS
+    assert p2["us_per_call"]["p99"] <= p99_bound_ms * 1e3, (
+        f"protected 2x p99 {p2['us_per_call']['p99'] / 1e3:.0f} ms > "
+        f"deadline+slack bound {p99_bound_ms:.0f} ms")
+    assert p2["goodput_busy_qps"] >= (1 - GOODPUT_TOL) * p1["goodput_busy_qps"], (
+        f"goodput collapsed under 2x load: {p2['goodput_busy_qps']:.0f} qps "
+        f"busy < {1 - GOODPUT_TOL:.2f} * {p1['goodput_busy_qps']:.0f} qps")
+    assert p2["max_rung"] >= 1, "2x overload never engaged the degrade ladder"
+    assert un["queue_peak"] > max_pending, (
+        f"unprotected 2x queue peak {un['queue_peak']} never exceeded the "
+        f"protected bound {max_pending} — not actually overloaded")
+    uq = un["depth_quartiles"]
+    assert all(b >= a for a, b in zip(uq, uq[1:])) and uq[-1] > 2 * uq[0], (
+        f"unprotected queue depth did not grow monotonically: {uq}")
+    shapes_end = srv.stats()["distinct_shapes"]
+    assert shapes_end == shapes_warm, (
+        f"sweep recompiled: {shapes_warm} -> {shapes_end} shapes")
+
+    out = {
+        "quick": quick,
+        "runner": runner_fingerprint(),
+        "model": {"d": d, "k_max": k_max, "n_buckets": len(buckets),
+                  "bucket_ks": [b.k for b in buckets]},
+        "capacity_qps": round(capacity, 1),
+        "max_pending": max_pending,
+        "timeout_ms": round(timeout_s * 1e3, 1),
+        "distinct_shapes": shapes_end,
+        "load_points": points,
+        "asserts_passed": 1,
+        "telemetry": tm.default_registry().values(),
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale (smaller d, shorter load windows)")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this as an artifact)")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json_path)

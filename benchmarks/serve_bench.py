@@ -136,6 +136,13 @@ def bench_batcher(snap, Pe, ell_test, rows: int, n_queries: int,
 
     st_mb = mb.stats()
     st_srv = srv.stats()
+    # overload accounting on the closed-loop path: an unconfigured batcher
+    # (no max_pending, no deadlines) must behave exactly like the historical
+    # unbounded one — every submit delivered, nothing shed/expired/rejected
+    assert st_mb["submitted"] == st_mb["delivered"] == n_queries, (
+        f"closed-loop accounting leak: submitted {st_mb['submitted']} "
+        f"delivered {st_mb['delivered']} of {n_queries}")
+    assert st_mb["shed"] == st_mb["deadline_missed"] == st_mb["rejected"] == 0
     assert st_srv["distinct_shapes"] <= len(buckets), (
         f"batcher compiled {st_srv['distinct_shapes']} shapes > "
         f"{len(buckets)} buckets")

@@ -82,6 +82,7 @@ from repro.telemetry import train as tmt
 __all__ = [
     "GadgetConfig",
     "GadgetResult",
+    "NonFiniteWeightsError",
     "SegmentResult",
     "SnapshotRing",
     "TrainState",
@@ -92,6 +93,29 @@ __all__ = [
     "transfer_stats",
     "reset_transfer_stats",
 ]
+
+
+class NonFiniteWeightsError(FloatingPointError):
+    """Typed divergence failure: the consensus weight plane went non-finite.
+
+    Raised by ``gadget_train`` / ``gadget_train_stream`` when the on-device
+    guard (checked at the ε-check / segment-boundary cadence) finds NaN/Inf
+    in the consensus weights — bad input features, a zero/negative λ, or
+    fault-starved Push-Sum mass can all produce it — and by
+    ``TrainPublisher`` when asked to publish such a plane. ``iteration`` is
+    the last completed global iteration when the guard fired; ``context``
+    says which stage refused (``"training"`` or ``"publish"``). Each raise
+    increments the ``train.nonfinite`` counter on the default registry, so
+    a supervisor can alert on divergence without parsing tracebacks.
+    """
+
+    def __init__(self, iteration: int, context: str = "training"):
+        super().__init__(
+            f"non-finite consensus weight plane at iteration {iteration} "
+            f"({context}) — training diverged; refusing to treat NaN/Inf "
+            f"weights as a servable model")
+        self.iteration = int(iteration)
+        self.context = context
 
 
 class GadgetConfig(NamedTuple):
@@ -607,7 +631,8 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             return (W, W_sum, jnp.where(active, t + 1, t), snaps, tele), mass
 
         def chunk_body(carry):
-            W, W_sum, t, snaps, tele, ci, _, obj_tr, it_tr, eps_tr, mass_tr = carry
+            (W, W_sum, t, snaps, tele, ci, _, obj_tr, it_tr, eps_tr, mass_tr,
+             bad) = carry
             W_prev = W
             (W, W_sum, t, snaps, tele), masses = jax.lax.scan(
                 step, (W, W_sum, t, snaps, tele), None, length=chunk)
@@ -617,12 +642,26 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             it_tr = it_tr.at[ci].set(t - 1)
             eps_tr = eps_tr.at[ci].set(eps)
             mass_tr = mass_tr.at[ci].set(jnp.min(masses))
+            # Non-finite guard at the ε-check cadence: one lax.cond-gated
+            # isfinite reduction on the consensus already computed for the
+            # trace (a sum is NaN/±Inf iff some element is non-finite under
+            # the ball-projected magnitudes). Records the first bad
+            # iteration; the while cond stops the run there, and the host
+            # raises a typed NonFiniteWeightsError instead of returning —
+            # or publishing — a NaN plane. Pure observation: a finite
+            # trajectory is bit-identical with or without the guard firing.
+            bad = jax.lax.cond(
+                bad == 0,
+                lambda: jnp.where(jnp.isfinite(jnp.sum(w_cons)),
+                                  jnp.int32(0), t - 1),
+                lambda: bad)
             return (W, W_sum, t, snaps, tele, ci + 1, eps, obj_tr, it_tr,
-                    eps_tr, mass_tr)
+                    eps_tr, mass_tr, bad)
 
         def cond(carry):
-            _, _, t, _, _, ci, eps, _, _, _, _ = carry
-            return (ci < n_chunks) & (eps >= cfg.epsilon) & (t <= cfg.max_iters)
+            _, _, t, _, _, ci, eps, _, _, _, _, bad = carry
+            return ((ci < n_chunks) & (eps >= cfg.epsilon)
+                    & (t <= cfg.max_iters) & (bad == 0))
 
         snaps0 = (jnp.zeros((snap_slots, d), jnp.float32),
                   jnp.zeros((snap_slots,), jnp.int32),
@@ -644,16 +683,17 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
                 jnp.zeros((n_chunks,), jnp.int32),
                 jnp.full((n_chunks,), jnp.nan, jnp.float32),
-                jnp.full((n_chunks,), jnp.nan, jnp.float32))
-        (W, W_sum, t, snaps, tele, ci, eps,
-         obj_tr, it_tr, eps_tr, mass_tr) = jax.lax.while_loop(cond, chunk_body, init)
+                jnp.full((n_chunks,), jnp.nan, jnp.float32),
+                jnp.int32(0))
+        (W, W_sum, t, snaps, tele, ci, eps, obj_tr, it_tr, eps_tr, mass_tr,
+         bad) = jax.lax.while_loop(cond, chunk_body, init)
         w_cons = consensus_of(W)
         final_obj = objective_of(w_cons) if snap_every else jnp.float32(jnp.nan)
         # ONE extra reduction at the already-synced boundary — the telemetry
         # ring adds no mid-loop host traffic
         tele_out = tele + (disagreement_of(W, w_cons),) if tele_every else ()
         return (W, W_sum, w_cons, t - 1, ci, eps, obj_tr, it_tr, eps_tr,
-                mass_tr, snaps, tele_out, final_obj)
+                mass_tr, snaps, tele_out, final_obj, bad)
 
     # Buffer donation is a no-op (with a warning) on CPU — only request it
     # where the runtime honors it.
@@ -873,8 +913,13 @@ def gadget_train(
                                         telemetry=tele_cfg)
     out = train(*args)
     (W, W_sum, w_cons, iters, n_done, eps, obj_tr, it_tr, eps_tr,
-     mass_tr, snaps, tele_out, final_obj) = jax.block_until_ready(out)
+     mass_tr, snaps, tele_out, final_obj, bad) = jax.block_until_ready(out)
     transfer_stats["host_syncs"] += 1  # single post-termination sync
+    if int(bad):
+        # the on-device guard caught a non-finite consensus plane: typed
+        # failure, never a silently-NaN GadgetResult
+        tmr.default_registry().counter("train.nonfinite").inc()
+        raise NonFiniteWeightsError(int(bad))
 
     n_done = int(n_done)
     iters = int(iters)
@@ -1094,6 +1139,13 @@ def gadget_train_stream(
             W, W_sum, t, w_cons, objective, eps, mass = out
         transfer_stats["host_syncs"] += 1  # one sync per segment boundary
         iteration = int(t) - 1
+        if not np.all(np.isfinite(np.asarray(w_cons))):
+            # segment boundaries ARE the stream's check cadence and the
+            # consensus is already host-synced here, so the guard is a free
+            # host-side reduction — same typed failure as the device loop,
+            # and it fires before a publisher could flush the segment
+            tmr.default_registry().counter("train.nonfinite").inc()
+            raise NonFiniteWeightsError(iteration)
         _record_train_telemetry(cfg, m, d, X, sparse_block_bound,
                                 iteration - prev_iteration)
         if seg_tele is not None:

@@ -10,13 +10,21 @@ a small fixed set of pad shapes (static shapes ⇒ bounded compile count);
 ``engine`` is the ``SvmServer`` scoring path over the fused dense and
 query-side touched-block sparse predict kernels — with ``watch`` /
 ``maybe_reload`` hot-swapping the weight plane between drains without
-recompiling — plus the ``shard_map`` batch-parallel scorer.
-``benchmarks/serve_bench.py`` and ``benchmarks/anytime_bench.py`` measure
-and assert the whole pipeline; ``docs/ARCHITECTURE.md`` walks it end to end.
+recompiling — plus the ``shard_map`` batch-parallel scorer. ``overload``
+makes the whole path survive traffic it cannot absorb: bounded admission
+(``max_pending`` + reject/shed/block policies), per-request deadlines with
+typed ``QueryRejected`` / ``Shed`` / ``DeadlineExceeded`` outcomes, and the
+hysteretic ``DegradeLadder`` stepping to the int8 plane and cheapest bucket
+under sustained pressure. ``benchmarks/serve_bench.py``,
+``benchmarks/anytime_bench.py`` and ``benchmarks/overload_bench.py``
+measure and assert the whole pipeline; ``docs/ARCHITECTURE.md`` walks it
+end to end (§9 is the overload policy).
 """
-from repro.serve.batcher import (Bucket, MicroBatcher, bucket_ladder,  # noqa: F401
-                                 calibrate_buckets)
+from repro.serve.batcher import (ADMISSION_POLICIES, Bucket,  # noqa: F401
+                                 DeadlineExceeded, MicroBatcher, QueryRejected,
+                                 Shed, bucket_ladder, calibrate_buckets)
 from repro.serve.engine import SvmServer, make_mesh_scorer  # noqa: F401
+from repro.serve.overload import DegradeLadder  # noqa: F401
 from repro.serve.publisher import TrainPublisher  # noqa: F401
 from repro.serve.snapshot import (Snapshot, dequantize_int8,  # noqa: F401
                                   from_checkpoint, latest, quantize_int8,

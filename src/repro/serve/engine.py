@@ -55,7 +55,7 @@ __all__ = ["SvmServer", "make_mesh_scorer"]
 # stats() reads them back under these exact keys for back-compat.
 _STAT_KEYS = ("queries", "batches", "sparse_batches", "blocks_visited",
               "dense_block_equivalent", "cap_overflows", "swaps",
-              "reload_errors", "quarantined")
+              "reload_errors", "quarantined", "plane_swaps")
 
 
 class SvmServer:
@@ -96,6 +96,13 @@ class SvmServer:
         self.use_kernels = bool(use_kernels)
         self.reload_quarantine = int(reload_quarantine)
         self._W_dev = jnp.asarray(W)
+        # Weight planes the degradation ladder can step between: "f32" is the
+        # full-precision model, "int8" (built lazily on first use) is the
+        # int8-quantize→dequantize image of the same weights. Same shape and
+        # dtype, so switching planes is a runtime-argument swap — the jit
+        # cache (and therefore ``distinct_shapes``) never moves.
+        self._planes: dict[str, jax.Array] = {"f32": self._W_dev}
+        self._plane = "f32"
         self._compiled: dict[tuple, object] = {}
         self._watch_root: str | None = None
         self._watch_step: int | None = None
@@ -160,7 +167,13 @@ class SvmServer:
                 f"hot swap must preserve the weight shape {self.W.shape} "
                 f"(compiled executables are shape-keyed), got {W.shape}")
         self.W = W
-        self._W_dev = jnp.asarray(W)
+        had_int8 = "int8" in self._planes
+        self._planes = {"f32": jnp.asarray(W)}
+        if had_int8:
+            # keep the degraded plane in lockstep with the live model, so a
+            # hot swap while degraded serves the NEW weights' int8 image
+            self._planes["int8"] = self._build_int8_plane()
+        self._W_dev = self._planes[self._plane]
         if meta is not None:
             self.meta = dict(meta)
         self._count("swaps")
@@ -213,6 +226,49 @@ class SvmServer:
         """Checkpoint steps the watcher has given up retrying (sorted)."""
         return sorted(s for s, n in self._reload_failures.items()
                       if n >= self.reload_quarantine)
+
+    # ------------------------------------------------- degradation ladder
+
+    def _build_int8_plane(self) -> "jax.Array":
+        """The int8-quantize→dequantize image of the current weights —
+        what an int8 export of this model would serve (same shape/dtype as
+        the f32 plane, so it swaps in without touching the jit cache)."""
+        q, scale = snap_mod.quantize_int8(self.W)
+        return jnp.asarray(snap_mod.dequantize_int8(q, scale))
+
+    @property
+    def plane(self) -> str:
+        """The weight plane currently being served (``"f32"`` or ``"int8"``)."""
+        return self._plane
+
+    @property
+    def degraded(self) -> bool:
+        """True while the server is on a degraded (non-f32) weight plane."""
+        return self._plane != "f32"
+
+    def set_plane(self, name: str) -> None:
+        """Serve from the named weight plane — the overload ladder's
+        precision step (``repro.serve.overload.DegradeLadder`` drives this).
+
+        ``"int8"`` installs the quantize→dequantize image of the current
+        weights (built on device the first time — call once at startup to
+        pre-warm so a mid-overload step-down never pays the build);
+        ``"f32"`` restores full precision. Either way the swap is a runtime
+        argument change: same shapes, same compiled executables,
+        ``stats()["distinct_shapes"]`` stays flat across ladder transitions
+        (asserted by ``benchmarks/overload_bench.py``). Composes with
+        :meth:`swap_weights`: a hot swap while degraded re-quantizes the new
+        weights and keeps serving the degraded plane."""
+        if name not in ("f32", "int8"):
+            raise ValueError(f"unknown weight plane {name!r} "
+                             "(expected 'f32' or 'int8')")
+        if name == "int8" and "int8" not in self._planes:
+            self._planes["int8"] = self._build_int8_plane()
+        if name != self._plane:
+            self._count("plane_swaps")
+        self._plane = name
+        self._W_dev = self._planes[name]
+        self.registry.gauge("serve.degraded").set(float(self.degraded))
 
     # ------------------------------------------------------------- scoring
 
@@ -325,9 +381,11 @@ class SvmServer:
 
     def stats(self) -> dict:
         """Serving counters: queries/batches served, ``distinct_shapes``
-        (jit-cache size — the compile count asserted flat across hot swaps),
-        ``swaps`` / ``reload_errors`` / ``quarantined`` from the watch path,
-        and the sparse blocks-visited accounting vs a dense sweep.
+        (jit-cache size — the compile count asserted flat across hot swaps
+        *and* degradation-ladder transitions), ``swaps`` / ``reload_errors``
+        / ``quarantined`` from the watch path, the sparse blocks-visited
+        accounting vs a dense sweep, and the overload ladder's visible state
+        (``degraded`` 0/1, the served ``plane`` name, ``plane_swaps``).
 
         A *view* over :attr:`registry` (the ``serve.*`` counter series) with
         the historical flat keys preserved — consumers that want the kernel
@@ -337,6 +395,8 @@ class SvmServer:
         s["blocks_visited_ratio"] = (
             s["blocks_visited"] / s["dense_block_equivalent"]
             if s["dense_block_equivalent"] else float("nan"))
+        s["degraded"] = int(self.degraded)
+        s["plane"] = self._plane
         return s
 
 

@@ -40,8 +40,10 @@ from __future__ import annotations
 import threading
 import time
 
-from repro.core.gadget import (GadgetConfig, SegmentResult, TrainState,
-                               gadget_train_stream)
+import numpy as np
+
+from repro.core.gadget import (GadgetConfig, NonFiniteWeightsError,
+                               SegmentResult, TrainState, gadget_train_stream)
 from repro.serve.snapshot import (Snapshot, latest_train_state, to_checkpoint)
 from repro.telemetry.registry import Registry
 from repro.telemetry.train import TrainTelemetry
@@ -161,6 +163,14 @@ class TrainPublisher:
             self._done.set()
 
     def _publish(self, seg: SegmentResult) -> None:
+        if not np.all(np.isfinite(np.asarray(seg.w_consensus))):
+            # Defense in depth: the stream raises its own typed failure at
+            # the segment boundary, so this only fires when a caller hands
+            # _publish a crafted/corrupted segment — either way a NaN plane
+            # must never become a published checkpoint a watcher would swap
+            # in. Surfaced like any training failure via join()/wait().
+            self.registry.counter("publish.nonfinite").inc()
+            raise NonFiniteWeightsError(seg.iteration, context="publish")
         snap = Snapshot(iteration=seg.iteration, w=seg.w_consensus,
                         objective=seg.objective)
         train_state = None

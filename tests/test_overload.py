@@ -1,0 +1,496 @@
+"""Overload policy: bounded admission, deadlines, shedding, degradation.
+
+Covers ``docs/ARCHITECTURE.md`` §9 end to end — the typed admission
+outcomes (:class:`~repro.serve.QueryRejected` / :class:`~repro.serve.Shed`
+/ :class:`~repro.serve.DeadlineExceeded`), the accounting invariant
+``submitted == delivered + shed + deadline_missed + pending``, deadline
+expiry against an injectable clock (property-tested), the hysteretic
+:class:`~repro.serve.DegradeLadder`, and the training-side non-finite
+guards (``NonFiniteWeightsError`` from both train paths and the
+publisher's refusal to ship a NaN plane).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import serve
+from repro import telemetry as tm
+from repro.core.gadget import (GadgetConfig, NonFiniteWeightsError,
+                               SegmentResult, gadget_train,
+                               gadget_train_stream)
+
+RNG = np.random.default_rng(0)
+
+
+def _ok(b, cols, vals):
+    """Trivial score_fn: zeros, labels all +1."""
+    return np.zeros(b.rows), np.ones(b.rows)
+
+
+def _buckets(rows=2, k=4):
+    return (serve.Bucket(rows, k, rows * k),)
+
+
+def _query(nnz=2, d=64, rng=RNG):
+    cols = np.sort(rng.choice(d, size=nnz, replace=False)).astype(np.int32)
+    return cols, rng.normal(size=nnz).astype(np.float32)
+
+
+def _reconciles(mb):
+    st = mb.stats()
+    assert st["submitted"] == (st["delivered"] + st["shed"]
+                               + st["deadline_missed"] + st["pending"]), st
+    return st
+
+
+# ------------------------------------------------------- bounded admission
+
+
+class TestBoundedAdmission:
+    def test_reject_new_raises_typed_and_enqueues_nothing(self):
+        mb = serve.MicroBatcher(_buckets(), max_pending=2,
+                                admission="reject-new")
+        for _ in range(2):
+            mb.submit(*_query())
+        with pytest.raises(serve.QueryRejected) as ei:
+            mb.submit(*_query())
+        assert ei.value.reason == "queue-full"
+        assert ei.value.pending == 2 and ei.value.max_pending == 2
+        assert isinstance(ei.value, ValueError)  # pre-typed callers keep working
+        assert mb.pending == 2
+        st = _reconciles(mb)
+        assert st["rejected"] == 1 and st["submitted"] == 2
+        mb.drain(_ok)
+        mb.submit(*_query())  # drain freed the queue
+        assert mb.pending == 1
+
+    def test_shed_oldest_delivers_typed_shed_results(self):
+        mb = serve.MicroBatcher(_buckets(), max_pending=3,
+                                admission="shed-oldest")
+        rids = [mb.submit(*_query()) for _ in range(5)]  # sheds rids[0], rids[1]
+        assert mb.pending == 3
+        out = mb.drain(_ok)
+        assert sorted(out) == sorted(rids)  # every accepted request has a fate
+        for rid in rids[:2]:
+            r = out[rid]
+            assert isinstance(r, serve.Shed)
+            assert r.rid == rid and r.reason == "shed-oldest"
+            assert r.t_shed >= r.t_submit
+        for rid in rids[2:]:
+            scores, label = out[rid]
+            assert label == 1.0
+        st = _reconciles(mb)
+        assert st["shed"] == 2 and st["delivered"] == 3
+        assert st["queue_peak"] == 3
+
+    def test_block_waits_for_drain_to_free_a_slot(self):
+        mb = serve.MicroBatcher(_buckets(), max_pending=1, admission="block")
+        mb.submit(*_query())
+        got = []
+
+        def bg():
+            got.append(mb.submit(*_query()))
+
+        th = threading.Thread(target=bg, daemon=True)
+        th.start()
+        time.sleep(0.05)
+        assert not got and mb.pending == 1  # submitter parked, nothing lost
+        mb.drain(_ok)  # frees the slot and notifies
+        th.join(timeout=5.0)
+        assert not th.is_alive() and len(got) == 1
+        assert mb.pending == 1
+        _reconciles(mb)
+
+    def test_block_timeout_raises_typed(self):
+        mb = serve.MicroBatcher(_buckets(), max_pending=1, admission="block",
+                                block_timeout=0.05)
+        mb.submit(*_query())
+        t0 = time.monotonic()
+        with pytest.raises(serve.QueryRejected) as ei:
+            mb.submit(*_query())
+        assert ei.value.reason == "block-timeout"
+        assert time.monotonic() - t0 >= 0.04
+        assert mb.pending == 1
+        assert mb.stats()["rejected"] == 1
+
+    def test_admission_knob_validation(self):
+        with pytest.raises(ValueError, match="admission"):
+            serve.MicroBatcher(_buckets(), admission="drop-all")
+        with pytest.raises(ValueError, match="max_pending"):
+            serve.MicroBatcher(_buckets(), max_pending=0)
+        with pytest.raises(ValueError, match="default_timeout"):
+            serve.MicroBatcher(_buckets(), default_timeout=0.0)
+
+    def test_unbounded_batcher_never_sheds(self):
+        mb = serve.MicroBatcher(_buckets())  # historical behavior preserved
+        rids = [mb.submit(*_query()) for _ in range(50)]
+        out = mb.drain(_ok)
+        assert sorted(out) == sorted(rids)
+        st = _reconciles(mb)
+        assert st["shed"] == st["rejected"] == st["deadline_missed"] == 0
+
+
+# -------------------------------------------------------- typed rejection
+
+
+class TestOversizeRejection:
+    def test_oversize_carries_nnz_and_widest_k(self):
+        mb = serve.MicroBatcher(_buckets(k=4))
+        with pytest.raises(serve.QueryRejected) as ei:
+            mb.submit(np.arange(6), np.ones(6))
+        assert ei.value.reason == "oversize"
+        assert ei.value.nnz == 6 and ei.value.k_max == 4
+        assert isinstance(ei.value, ValueError)
+        assert "widest bucket" in str(ei.value)
+        assert mb.stats()["rejected"] == 1
+        assert mb.pending == 0
+
+    def test_submit_csr_all_or_nothing_on_oversize_mid_chunk(self):
+        """Regression: an oversize row in the middle of a CSR chunk used to
+        leave the rows before it enqueued; now the whole chunk is validated
+        before anything is admitted."""
+        from scipy.sparse import csr_matrix
+        d = 64
+        rows = [np.zeros(d, np.float32) for _ in range(5)]
+        for i, r in enumerate(rows):
+            r[: 2 + (6 if i == 2 else 0)] = 1.0  # row 2 has nnz 8 > k=4
+        csr = csr_matrix(np.stack(rows))
+        mb = serve.MicroBatcher(_buckets(k=4))
+        with pytest.raises(serve.QueryRejected) as ei:
+            mb.submit_csr(csr)
+        assert ei.value.reason == "oversize" and ei.value.nnz == 8
+        assert mb.pending == 0, "oversize mid-chunk must enqueue nothing"
+        assert mb.stats()["submitted"] == 0
+        # the same chunk minus the bad row enqueues fully
+        good = csr_matrix(np.stack(rows[:2] + rows[3:]))
+        rids = mb.submit_csr(good)
+        assert len(rids) == 4 and mb.pending == 4
+
+
+# ------------------------------------------------------------- deadlines
+
+
+class TestDeadlines:
+    def _clocked(self, **kw):
+        clock = {"t": 0.0}
+        mb = serve.MicroBatcher(_buckets(), clock=lambda: clock["t"], **kw)
+        return mb, clock
+
+    def test_expired_request_never_reaches_score_fn(self):
+        mb, clock = self._clocked()
+        rid = mb.submit(*_query(), deadline=5.0)
+        clock["t"] = 6.0
+        calls = []
+
+        def spy(b, cols, vals):
+            calls.append(1)
+            return _ok(b, cols, vals)
+
+        out = mb.drain(spy)
+        assert not calls, "expired work must be dropped before launch"
+        r = out[rid]
+        assert isinstance(r, serve.DeadlineExceeded)
+        assert r.rid == rid and r.deadline == 5.0 and r.t_expired == 6.0
+        st = _reconciles(mb)
+        assert st["deadline_missed"] == 1 and st["delivered"] == 0
+
+    def test_default_timeout_sets_deadline(self):
+        mb, clock = self._clocked(default_timeout=2.0)
+        rid_dead = mb.submit(*_query())            # deadline = 2.0
+        rid_live = mb.submit(*_query(), deadline=10.0)  # explicit override
+        clock["t"] = 3.0
+        out = mb.drain(_ok)
+        assert isinstance(out[rid_dead], serve.DeadlineExceeded)
+        assert isinstance(out[rid_live], tuple)
+        _reconciles(mb)
+
+    def test_live_request_scored_before_deadline(self):
+        mb, clock = self._clocked()
+        rid = mb.submit(*_query(), deadline=5.0)
+        clock["t"] = 4.99
+        out = mb.drain(_ok)
+        scores, label = out[rid]
+        assert label == 1.0
+        assert mb.stats()["deadline_missed"] == 0
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_deadline_expiry_property(self, seed):
+        """Random submit/advance/drain schedules against an injectable clock:
+        a request expires iff its deadline has passed at drain time, every
+        rid gets exactly one result, and the accounting reconciles after
+        every drain."""
+        rng = np.random.default_rng(seed)
+        mb, clock = self._clocked()
+        open_reqs = {}   # rid -> deadline (None = immortal)
+        results = {}
+        for _ in range(rng.integers(5, 30)):
+            op = rng.integers(0, 3)
+            if op == 0:
+                dl = (None if rng.integers(2) == 0
+                      else clock["t"] + float(rng.integers(0, 5)))
+                rid = mb.submit(*_query(rng=rng), deadline=dl)
+                open_reqs[rid] = dl
+            elif op == 1:
+                clock["t"] += float(rng.integers(0, 4))
+            else:
+                now = clock["t"]
+                out = mb.drain(_ok)
+                assert sorted(out) == sorted(open_reqs), "one result per rid"
+                for rid, dl in open_reqs.items():
+                    expired = dl is not None and now >= dl
+                    assert isinstance(out[rid], serve.DeadlineExceeded) \
+                        == expired, (rid, dl, now)
+                assert not (set(out) & set(results)), "no duplicate results"
+                results.update(out)
+                open_reqs.clear()
+                _reconciles(mb)
+        out = mb.drain(_ok)
+        results.update(out)
+        assert sorted(out) == sorted(open_reqs)
+        st = _reconciles(mb)
+        assert st["submitted"] == len(results) and st["pending"] == 0
+
+
+# ------------------------------------------------- failure redelivery, soak
+
+
+class TestDrainRobustness:
+    def test_repeated_score_failures_redeliver_everything_once(self):
+        """_undelivered carryover across *consecutive* failing drains: held
+        results survive any number of failures and every rid is delivered
+        exactly once in the end."""
+        mb = serve.MicroBatcher(_buckets())
+        rids = [mb.submit(*_query()) for _ in range(8)]  # 4 batches of 2
+        fail_times = 3
+        state = {"calls": 0, "fails": 0}
+
+        def flaky(b, cols, vals):
+            state["calls"] += 1
+            if state["calls"] % 2 == 0 and state["fails"] < fail_times:
+                state["fails"] += 1
+                raise RuntimeError("boom")
+            return _ok(b, cols, vals)
+
+        delivered = {}
+        for _ in range(fail_times):
+            with pytest.raises(RuntimeError, match="boom"):
+                mb.drain(flaky)
+            assert mb.pending > 0  # failed + unreached batches requeued
+        out = mb.drain(flaky)
+        assert not (set(out) & set(delivered))
+        delivered.update(out)
+        assert sorted(delivered) == sorted(rids)
+        st = _reconciles(mb)
+        assert st["delivered"] == 8 and st["pending"] == 0
+
+    def test_shedding_soak_flat_memory(self):
+        """50k submissions against a 64-slot queue: pending never exceeds the
+        bound, the result ledger drains fully, and batcher memory stays flat
+        (bounded histograms + bounded queue — no per-request growth)."""
+        import tracemalloc
+        mb = serve.MicroBatcher(_buckets(rows=4, k=4), max_pending=64,
+                                admission="shed-oldest")
+        cols = np.array([1, 2], np.int32)
+        vals = np.array([1.0, 0.5], np.float32)
+
+        def pump(n):
+            for i in range(n):
+                mb.submit(cols, vals)
+                assert mb.pending <= 64
+                if i % 512 == 0:
+                    mb.drain(_ok)
+            mb.drain(_ok)
+
+        pump(10_000)  # warm every structure before measuring
+        tracemalloc.start()
+        base, _ = tracemalloc.get_traced_memory()
+        pump(40_000)
+        now, _ = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert now - base < 256 * 1024, (
+            f"batcher grew {(now - base) / 1024:.0f} KiB over 40k submissions")
+        st = _reconciles(mb)
+        assert st["submitted"] == 50_000 and st["pending"] == 0
+        assert st["queue_peak"] <= 64
+        assert st["delivered"] + st["shed"] == 50_000
+
+
+# ------------------------------------------------------- degradation ladder
+
+
+class TestDegradeLadder:
+    def _rig(self, d=256, max_pending=4):
+        W = np.random.default_rng(3).standard_normal(d).astype(np.float32)
+        srv = serve.SvmServer(W)
+        buckets = serve.bucket_ladder(16, rows=2, min_k=4, d=d)
+        mb = serve.MicroBatcher(buckets, max_pending=max_pending,
+                                admission="shed-oldest")
+        lad = serve.DegradeLadder(srv, mb, high=0.75, low=0.25, patience=2)
+        return srv, mb, lad
+
+    def _fill(self, mb, n):
+        for _ in range(n):
+            mb.submit(*_query(nnz=2, d=256))
+
+    def test_hysteresis_steps_down_and_recovers(self):
+        srv, mb, lad = self._rig()
+        lad.prepare()
+        assert srv.plane == "f32" and not srv.degraded
+        self._fill(mb, 4)  # pressure 1.0
+        assert lad.observe() == 0  # patience 2: first breach arms only
+        assert lad.observe() == 1  # rung 1: int8 plane
+        assert srv.plane == "int8" and srv.degraded
+        assert srv.stats()["degraded"] == 1
+        assert lad.observe() == 1
+        assert lad.observe() == 2  # rung 2: + cheapest bucket
+        assert mb._degraded_bucket == mb.buckets[0]
+        assert lad.observe() == 2  # capped at max_rung
+        mb.drain(srv.scorer_for())  # pressure -> 0
+        assert lad.observe() == 2
+        assert lad.observe() == 1  # recovery is also hysteretic
+        assert lad.observe() == 1
+        assert lad.observe() == 0
+        assert srv.plane == "f32" and mb._degraded_bucket is None
+        reg = srv.registry
+        assert reg.value("serve.degrade_steps", direction="down") == 2
+        assert reg.value("serve.degrade_steps", direction="up") == 2
+
+    def test_in_band_pressure_resets_streaks(self):
+        srv, mb, lad = self._rig(max_pending=4)
+        self._fill(mb, 4)
+        lad.observe()           # above-streak 1
+        mb.drain(srv.scorer_for())
+        self._fill(mb, 2)       # pressure 0.5: inside the hysteresis band
+        lad.observe()           # resets the streak
+        self._fill(mb, 2)       # back to 1.0
+        assert lad.observe() == 0, "band must reset the above-streak"
+        assert lad.observe() == 1
+
+    def test_degraded_routing_truncates_to_top_abs_values(self):
+        srv, mb, lad = self._rig()
+        lad.prepare()
+        mb.degrade_to(mb.buckets[0])  # k=4
+        srv.set_plane("int8")
+        cols = np.arange(8, dtype=np.int32)
+        vals = np.array([0.1, -3.0, 0.2, 2.0, -0.3, 1.0, 0.4, -2.5],
+                        np.float32)
+        rid = mb.submit(cols, vals)
+        out = mb.drain(srv.scorer_for())
+        scores, _ = out[rid]
+        w = np.asarray(srv._planes["int8"])
+        keep = np.argsort(-np.abs(vals))[:4]  # |val| top-4: -3, -2.5, 2, 1
+        want = float(np.dot(w[cols[keep]], vals[keep]))
+        np.testing.assert_allclose(np.asarray(scores).reshape(()), want,
+                                   rtol=1e-5)
+        assert mb.stats()["truncated"] == 1
+
+    def test_ladder_transitions_never_recompile(self):
+        srv, mb, lad = self._rig()
+        lad.prepare()
+        score_fn = srv.scorer_for()
+        for _ in range(3):  # touch every bucket at full service
+            self._fill(mb, 4)
+            mb.drain(score_fn)
+        shapes0 = srv.stats()["distinct_shapes"]
+        self._fill(mb, 4)
+        for _ in range(4):
+            lad.observe()
+        assert lad.rung == 2
+        mb.drain(score_fn)
+        for _ in range(6):
+            lad.observe()
+        assert lad.rung == 0
+        self._fill(mb, 4)
+        mb.drain(score_fn)
+        assert srv.stats()["distinct_shapes"] == shapes0
+        assert srv.stats()["plane_swaps"] >= 2
+
+    def test_hot_swap_requantizes_degraded_plane(self):
+        """Publisher hot-swap composes with overload: a weight swap while the
+        ladder is on the int8 rung re-quantizes the *new* weights."""
+        srv, mb, lad = self._rig(d=64)
+        srv.set_plane("int8")
+        W2 = np.full(64, 2.0, np.float32)
+        srv.swap_weights(W2)
+        assert srv.plane == "int8"
+        q = serve.quantize_int8(W2)
+        np.testing.assert_array_equal(np.asarray(srv._planes["int8"]),
+                                      serve.dequantize_int8(*q))
+        srv.set_plane("f32")
+        np.testing.assert_array_equal(np.asarray(srv._W_dev), W2)
+
+    def test_set_plane_validates(self):
+        srv, _, _ = self._rig(d=64)
+        with pytest.raises(ValueError, match="plane"):
+            srv.set_plane("fp4")
+
+    def test_ladder_knob_validation(self):
+        srv, mb, _ = self._rig(d=64)
+        with pytest.raises(ValueError, match="low < high"):
+            serve.DegradeLadder(srv, mb, high=0.2, low=0.5)
+        with pytest.raises(ValueError, match="patience"):
+            serve.DegradeLadder(srv, mb, patience=0)
+        with pytest.raises(ValueError, match="max_rung"):
+            serve.DegradeLadder(srv, mb, max_rung=3)
+
+
+# ---------------------------------------------------- non-finite training
+
+
+class TestNonFiniteGuards:
+    def _data(self, poison=True):
+        rng = np.random.default_rng(5)
+        m, n, d = 2, 8, 16
+        X = rng.normal(size=(m, n, d)).astype(np.float32)
+        if poison:
+            X[0] = np.nan  # every node-0 row: w goes NaN on its first step
+        y = np.where(rng.integers(0, 2, size=(m, n)) == 0, -1.0, 1.0)
+        return X, y.astype(np.float32)
+
+    def _cfg(self, **kw):
+        kw.setdefault("check_every", 4)
+        return GadgetConfig(lam=0.1, batch_size=4, gossip_rounds=1,
+                            topology="ring", max_iters=12, epsilon=0.0, **kw)
+
+    def test_gadget_train_raises_typed_with_iteration(self):
+        tm.reset()
+        X, y = self._data()
+        with pytest.raises(NonFiniteWeightsError) as ei:
+            gadget_train(X, y, self._cfg())
+        assert 1 <= ei.value.iteration <= 12
+        assert ei.value.context == "training"
+        assert isinstance(ei.value, FloatingPointError)
+        assert tm.default_registry().value("train.nonfinite") == 1
+
+    def test_clean_training_untouched(self):
+        tm.reset()
+        X, y = self._data(poison=False)
+        res = gadget_train(X, y, self._cfg())
+        assert np.all(np.isfinite(np.asarray(res.w_consensus)))
+        assert tm.default_registry().get("train.nonfinite") is None
+
+    def test_stream_raises_at_segment_boundary(self):
+        tm.reset()
+        X, y = self._data()
+        with pytest.raises(NonFiniteWeightsError) as ei:
+            for _ in gadget_train_stream(X, y, self._cfg(), segment_iters=4):
+                pass
+        assert ei.value.iteration >= 1
+        assert tm.default_registry().value("train.nonfinite") == 1
+
+    def test_publisher_refuses_nonfinite_segment(self, tmp_path):
+        X, y = self._data(poison=False)
+        pub = serve.TrainPublisher(X, y, self._cfg(), root=str(tmp_path),
+                                   segment_iters=4)
+        bad = SegmentResult(iteration=3, W=None,
+                            w_consensus=np.full(16, np.nan, np.float32),
+                            objective=float("nan"), epsilon=0.0, done=False)
+        with pytest.raises(NonFiniteWeightsError) as ei:
+            pub._publish(bad)
+        assert ei.value.context == "publish"
+        assert pub.published == []
+        assert pub.registry.value("publish.nonfinite") == 1
