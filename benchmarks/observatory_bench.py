@@ -1,0 +1,442 @@
+"""Causal tracing + gossip observatory: lineage, fates, node health, cost.
+
+The acceptance harness for docs/ARCHITECTURE.md §10, four hard-asserted
+sections:
+
+  * **lineage** — a traced ``TrainPublisher`` run, then a deterministic
+    replay (``point_latest`` → ``maybe_reload`` → one score per published
+    version; the live watcher loses the race for intermediate versions, so
+    replay is what makes the guarantee testable): EVERY published version's
+    train.segment → publish → swap → first-score chain must be complete
+    with monotone timestamps, recovered from the JSONL stream alone.
+  * **fates** — a deterministic synthetic load (seeded queries, injectable
+    clock, periodic drains, planted oversize submissions and short
+    deadlines) through a ``RequestTracer``-hooked ``MicroBatcher``: the
+    accounting identity ``submitted == delivered + shed + deadline_missed
+    + pending`` must hold EXACTLY, the traced per-fate counters must equal
+    the batcher's own stats, and the fate reservoir must hold at most
+    ``reservoir`` records over the whole soak (O(1) memory).
+  * **observatory** — per-node rings decode against host references
+    (row-max == the scalar disagreement ring bit-exactly; the final row
+    matches ``||W_i - w_consensus||`` within 1e-5) and a planted fault
+    scenario (message drops + one dead node) must flag the dead node and a
+    positive Push-Sum mass leak while the fault-free fleet stays clean.
+  * **overhead** — with tracing off and the per-node ring ON at the
+    default 20-records-per-run cadence, the trajectory is bit-identical to
+    the bare run and amortized wall-clock overhead stays <= 5%
+    (interleaved reps, min/min ratio — same protocol as
+    telemetry_overhead_bench). A small untraced publisher run additionally
+    asserts serve-side invariance: zero trace records, no manifest trace
+    key.
+
+``--trace-jsonl PATH`` keeps the lineage section's JSONL stream for
+downstream validation (CI runs tools/check_telemetry_schema.py over it —
+a real traced run, not a synthetic fixture). In the JSON, ``per_node`` and
+``lineage_detail`` subtrees are observability output (listed in
+check_regression's SKIP_PARENTS); the section asserts are the gate.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.observatory_bench [--quick] \
+        [--json out.json] [--trace-jsonl trace.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, runner_fingerprint
+from repro import checkpoint as ckpt
+from repro import serve
+from repro import telemetry as tm
+from repro.core.faults import FaultPlan
+from repro.core.gadget import GadgetConfig, gadget_train
+from repro.telemetry import top as tmtop
+from repro.telemetry import trace as tmtr
+
+OVERHEAD_BUDGET = 0.05  # per-node ring at default cadence: <= 5% wall-clock
+
+
+def _make_parts(m, n_i, d, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(m, n_i, d)).astype(np.float32)
+    w_true = rng.normal(size=d).astype(np.float32)
+    y = np.sign(X @ w_true).astype(np.float32)
+    y[y == 0] = 1.0
+    return X, y
+
+
+# ---------------------------------------------------------------- lineage
+
+
+def _run_lineage(trace_path, *, max_iters, segment_iters, d=32):
+    """Traced publish run + deterministic replay; returns (section, records,
+    registry)."""
+    X, y = _make_parts(4, 16, d, seed=0)
+    reg = tm.Registry()
+    reg.attach_sink(tm.JsonlSink(trace_path))
+    with tempfile.TemporaryDirectory() as td:
+        root = os.path.join(td, "ckpts")
+        cfg = GadgetConfig(lam=1e-3, batch_size=4, gossip_rounds=2,
+                           max_iters=max_iters, check_every=segment_iters,
+                           epsilon=0.0, use_kernels=False)
+        pub = serve.TrainPublisher(X, y, cfg, root=root,
+                                   segment_iters=segment_iters,
+                                   registry=reg, trace=True).start()
+        # live pass: poll-and-score while training runs (the racey half —
+        # whichever versions the watcher catches get live serve spans)
+        srv = None
+        Xq = X.reshape(-1, d)[:4]
+        while pub.running:
+            if srv is None and ckpt.read_latest(root) is not None:
+                srv = serve.SvmServer.watch(root, use_kernels=False,
+                                            registry=reg)
+            if srv is not None:
+                srv.maybe_reload()
+                srv.score(Xq)
+            time.sleep(0.005)
+        pub.join()
+        if srv is None:
+            srv = serve.SvmServer.watch(root, use_kernels=False, registry=reg)
+        # replay pass: deterministically complete every version's chain
+        for step in pub.published:
+            ckpt.point_latest(root, step)
+            srv.maybe_reload()
+            srv.score(Xq)
+        manifest_traced = "trace" in (
+            ckpt.read_manifest(root, pub.published[-1]).get("extra") or {})
+    reg.detach_sink()
+    records = tm.read_jsonl(trace_path)
+    chains = tmtr.lineage_chains(records)
+    n_complete = sum(c["complete"] for c in chains.values())
+    all_monotone = all(c["monotone"] for c in chains.values())
+    # hard asserts: acceptance (a)
+    assert sorted(chains) == pub.published, (
+        f"chains for {sorted(chains)} != published {pub.published}")
+    assert n_complete == len(pub.published), (
+        f"only {n_complete}/{len(pub.published)} lineage chains complete")
+    assert all_monotone, "a lineage chain has non-monotone stage timestamps"
+    assert manifest_traced, "published manifest lost the trace context"
+    section = {
+        "n_published": len(pub.published),
+        "n_chains": len(chains),
+        "n_complete": n_complete,
+        "all_monotone": int(all_monotone),
+        "lineage_detail": {
+            str(v): {"complete": int(c["complete"]),
+                     "monotone": int(c["monotone"]),
+                     "n_attempts": len(c["attempts"])}
+            for v, c in sorted(chains.items())
+        },
+    }
+    return section, records, reg
+
+
+# ------------------------------------------------------------------ fates
+
+
+def _run_fates(reg, *, n_requests, reservoir, d=64):
+    """Deterministic synthetic load through a traced MicroBatcher."""
+    clock = {"t": 0.0}
+    tracer = tmtr.RequestTracer(reg, sample=1.0, reservoir=reservoir,
+                                clock=lambda: clock["t"])
+    mb = serve.MicroBatcher((serve.Bucket(4, 8, 32),), registry=reg,
+                            tracer=tracer, max_pending=64,
+                            admission="shed-oldest",
+                            clock=lambda: clock["t"])
+    rng = np.random.default_rng(1)
+
+    def ok(b, cols, vals):
+        return np.zeros(b.rows), np.ones(b.rows)
+
+    rejected = 0
+    for i in range(n_requests):
+        if i % 97 == 0:  # planted oversize: refused at the door
+            try:
+                mb.submit(np.arange(9, dtype=np.int32),
+                          np.ones(9, np.float32))
+            except serve.QueryRejected:
+                rejected += 1
+            continue
+        nnz = int(rng.integers(1, 9))
+        cols = np.sort(rng.choice(d, size=nnz, replace=False)).astype(np.int32)
+        vals = rng.normal(size=nnz).astype(np.float32)
+        # every 7th request gets a deadline too short to survive the cycle
+        deadline = clock["t"] + (0.5 if i % 7 == 0 else 10.0)
+        mb.submit(cols, vals, deadline=deadline)
+        clock["t"] += 0.01
+        if i % 100 == 99:  # drain cycle: expire the short deadlines first
+            mb.drain(ok)
+    mb.drain(ok)
+    st = mb.stats()
+    fates = tracer.fate_counts()
+    # hard asserts: acceptance (b)
+    assert st["submitted"] == (st["delivered"] + st["shed"]
+                               + st["deadline_missed"] + st["pending"]), st
+    assert st["rejected"] == rejected
+    assert fates.get("delivered", 0) == st["delivered"], (fates, st)
+    assert fates.get("shed", 0) == st["shed"], (fates, st)
+    assert fates.get("deadline", 0) == st["deadline_missed"], (fates, st)
+    assert fates.get("rejected", 0) == st["rejected"], (fates, st)
+    assert reg.value("trace.requests") == st["submitted"] + st["rejected"]
+    kept = tracer.sampled_fates()
+    assert len(kept) <= reservoir, (
+        f"reservoir leaked: {len(kept)} > {reservoir}")
+    return {
+        "n_requests": n_requests,
+        "submitted": st["submitted"],
+        "delivered": st["delivered"],
+        "shed": st["shed"],
+        "deadline_missed": st["deadline_missed"],
+        "rejected": st["rejected"],
+        "pending": st["pending"],
+        "reconciled": 1,
+        "reservoir_cap": reservoir,
+        "reservoir_len": len(kept),
+    }
+
+
+# ------------------------------------------------------------ observatory
+
+
+def _run_observatory():
+    """Per-node decode vs host references + planted-fault flagging."""
+    # decode exactness on a fault-free fleet recorded every iteration
+    X, y = _make_parts(4, 16, 24, seed=2)
+    cfg = GadgetConfig(lam=1e-2, batch_size=2, gossip_rounds=2, max_iters=16,
+                       check_every=1, epsilon=0.0, use_kernels=False)
+    r_off = gadget_train(X, y, cfg)
+    r_on = gadget_train(X, y, cfg,
+                        telemetry=tm.TrainTelemetry(every=1, slots=16,
+                                                    per_node=True))
+    bit_identical = (
+        np.array_equal(np.asarray(r_on.W), np.asarray(r_off.W))
+        and np.array_equal(np.asarray(r_on.w_consensus),
+                           np.asarray(r_off.w_consensus)))
+    assert bit_identical, "per-node ring changed the training trajectory"
+    tr = r_on.telemetry
+    rowmax_exact = np.array_equal(tr.node_disagreement.max(axis=1),
+                                  np.asarray(tr.disagreement))
+    assert rowmax_exact, "row-max of node disagreement != scalar ring"
+    host_ref = np.linalg.norm(
+        np.asarray(r_on.W, np.float64)
+        - np.asarray(r_on.w_consensus, np.float64), axis=1)
+    decode_max_err = float(np.abs(tr.node_disagreement[-1] - host_ref).max())
+    # hard assert: acceptance (c), decode half
+    assert decode_max_err <= 1e-5, (
+        f"per-node decode off by {decode_max_err} vs host reference")
+
+    # planted faults: message drops leak mass, node 2 freezes (dead)
+    Xf, yf = _make_parts(6, 16, 24, seed=0)
+    cfg_f = GadgetConfig(max_iters=300, epsilon=0.0, seed=3, check_every=1,
+                         use_kernels=False,
+                         faults=FaultPlan(drop_prob=0.05, drop="message",
+                                          dead_nodes=(2,), seed=5))
+    rep = tm.analyze(gadget_train(
+        Xf, yf, cfg_f, telemetry=tm.TrainTelemetry(
+            every=10, slots=32, per_node=True)).telemetry)
+    cfg_h = cfg_f._replace(faults=None)
+    rep_h = tm.analyze(gadget_train(
+        Xf, yf, cfg_h, telemetry=tm.TrainTelemetry(
+            every=10, slots=32, per_node=True)).telemetry)
+    # hard asserts: acceptance (c), flagging half
+    assert 2 in rep.dead or 2 in rep.stragglers, (
+        f"planted dead node not flagged: {rep}")
+    assert rep.mass_leak > 0, "message drops must leak Push-Sum mass"
+    assert rep_h.healthy, f"fault-free fleet wrongly flagged: {rep_h}"
+    assert rep_h.mixing_rate < 0, "healthy fleet must have a negative slope"
+    return {
+        "bit_identical": int(bit_identical),
+        "rowmax_exact": int(rowmax_exact),
+        "decode_max_err": decode_max_err,
+        "dead_node_flagged": int(2 in rep.dead or 2 in rep.stragglers),
+        "mass_leak_positive": int(rep.mass_leak > 0),
+        "healthy_fleet_clean": int(rep_h.healthy),
+        "mixing_rate_negative": int(rep_h.mixing_rate < 0),
+        "per_node": {
+            str(h.node): {"disagreement": h.disagreement, "mass": h.mass,
+                          "drops": h.drops, "straggler": int(h.straggler),
+                          "dead": int(h.dead)}
+            for h in rep.nodes
+        },
+    }, rep
+
+
+# --------------------------------------------------------------- overhead
+
+
+def _timed(Xp, yp, cfg, ring):
+    t0 = time.time()
+    res = gadget_train(Xp, yp, cfg, telemetry=ring)
+    jax.block_until_ready(res.W)
+    return res, time.time() - t0
+
+
+def _run_overhead(*, d, max_iters, reps):
+    """Per-node ring at default cadence vs bare run: bit-identity + <=5%."""
+    X, y = _make_parts(8, 32, d, seed=3)
+    cfg = GadgetConfig(lam=1e-3, batch_size=8, gossip_rounds=2,
+                       topology="exponential", max_iters=max_iters,
+                       check_every=max(1, max_iters // 4), epsilon=0.0)
+    ring = tm.TrainTelemetry(every=max(1, max_iters // 20), slots=32,
+                             per_node=True)
+    res_off, _ = _timed(X, y, cfg, None)
+    res_on, _ = _timed(X, y, cfg, ring)
+    bit_identical = (
+        np.array_equal(np.asarray(res_on.W), np.asarray(res_off.W))
+        and np.array_equal(np.asarray(res_on.w_consensus),
+                           np.asarray(res_off.w_consensus)))
+    # hard asserts: acceptance (d), identity half
+    assert bit_identical, "per-node ring changed the trajectory"
+    assert res_on.telemetry.node_disagreement is not None
+    off_times, on_times = [], []
+    for _ in range(reps):
+        _, s_off = _timed(X, y, cfg, None)
+        _, s_on = _timed(X, y, cfg, ring)
+        off_times.append(s_off)
+        on_times.append(s_on)
+    off_s, on_s = min(off_times), min(on_times)
+    overhead = on_s / off_s
+    # hard assert: acceptance (d), cost half
+    assert overhead <= 1.0 + OVERHEAD_BUDGET, (
+        f"per-node telemetry overhead {overhead:.3f}x exceeds "
+        f"{1.0 + OVERHEAD_BUDGET:.2f}x (on={on_s:.4f}s off={off_s:.4f}s)")
+
+    # serve-side invariance: an untraced publish run emits zero trace
+    # records and writes no trace key into manifests
+    X2, y2 = _make_parts(3, 16, 32, seed=4)
+    reg2 = tm.Registry()
+    with tempfile.TemporaryDirectory() as td:
+        path2 = os.path.join(td, "untraced.jsonl")
+        reg2.attach_sink(tm.JsonlSink(path2))
+        root2 = os.path.join(td, "ckpts")
+        cfg2 = GadgetConfig(lam=1e-3, batch_size=4, gossip_rounds=2,
+                            max_iters=10, check_every=5, epsilon=0.0,
+                            use_kernels=False)
+        pub2 = serve.TrainPublisher(X2, y2, cfg2, root=root2, segment_iters=5,
+                                    registry=reg2).start()
+        pub2.join()
+        srv2 = serve.SvmServer.watch(root2, use_kernels=False, registry=reg2)
+        srv2.score(X2.reshape(-1, 32)[:4])
+        untraced_manifest_clean = "trace" not in (
+            ckpt.read_manifest(root2, 10).get("extra") or {})
+        reg2.detach_sink()
+        n_trace_records = sum("trace_id" in r for r in tm.read_jsonl(path2))
+    assert n_trace_records == 0, (
+        f"tracing off still emitted {n_trace_records} trace records")
+    assert untraced_manifest_clean, "tracing off wrote a manifest trace key"
+    return {
+        "off": {"seconds": off_s},
+        "on": {"seconds": on_s,
+               "ring_count": int(res_on.telemetry.count)},
+        "overhead_ratio": overhead,
+        "bit_identical": int(bit_identical),
+        "untraced_run_emits_nothing": int(n_trace_records == 0),
+        "untraced_manifest_clean": int(untraced_manifest_clean),
+        "config": {"d": d, "max_iters": max_iters, "reps": reps,
+                   "tele_every": ring.every},
+    }
+
+
+# -------------------------------------------------------------------- run
+
+
+def run(quick: bool = False, json_path: str | None = None,
+        trace_jsonl: str | None = None, verbose: bool = True) -> dict:
+    """All four sections; every acceptance assert is raised in-run."""
+    t0 = time.time()
+    lineage_iters = 40 if quick else 120
+    n_requests = 5000 if quick else 50000
+    ovh_d = 1024 if quick else 2048
+    ovh_iters = 2000 if quick else 3000
+    ovh_reps = 6 if quick else 8
+
+    own_tmp = None
+    if trace_jsonl is None:
+        own_tmp = tempfile.mkdtemp(prefix="observatory_bench_")
+        trace_jsonl = os.path.join(own_tmp, "trace.jsonl")
+
+    lineage, records, reg = _run_lineage(trace_path=trace_jsonl,
+                                         max_iters=lineage_iters,
+                                         segment_iters=10)
+    if verbose:
+        emit("observatory/lineage", 0.0,
+             f"versions={lineage['n_published']}"
+             f";complete={lineage['n_complete']}"
+             f";monotone={lineage['all_monotone']}")
+
+    fates = _run_fates(reg, n_requests=n_requests, reservoir=256)
+    if verbose:
+        emit("observatory/fates", 0.0,
+             f"submitted={fates['submitted']};delivered={fates['delivered']}"
+             f";shed={fates['shed']};deadline={fates['deadline_missed']}"
+             f";rejected={fates['rejected']}"
+             f";reservoir={fates['reservoir_len']}/{fates['reservoir_cap']}")
+
+    observatory, rep = _run_observatory()
+    tm.publish_node_health(rep, reg)
+    if verbose:
+        emit("observatory/node_health", 0.0,
+             f"dead_flagged={observatory['dead_node_flagged']}"
+             f";decode_err={observatory['decode_max_err']:.2e}"
+             f";leak_positive={observatory['mass_leak_positive']}")
+
+    # the top console renders all three panes from the same stream
+    frame = tmtop.render_registry(reg, records)
+    assert "=== gossip nodes ===" in frame and "complete" in frame
+
+    overhead = _run_overhead(d=ovh_d, max_iters=ovh_iters, reps=ovh_reps)
+    if verbose:
+        emit(f"observatory/overhead(d={ovh_d},T={ovh_iters})",
+             overhead["on"]["seconds"] * 1e6,
+             f"ratio={overhead['overhead_ratio']:.3f}x"
+             f";bit_identical={overhead['bit_identical']}")
+
+    out = {
+        "quick": quick,
+        "runner": runner_fingerprint(),
+        "lineage": lineage,
+        "fates": fates,
+        "observatory": observatory,
+        "overhead": overhead,
+        "asserts": {
+            "lineage_all_complete": int(
+                lineage["n_complete"] == lineage["n_published"]),
+            "lineage_all_monotone": lineage["all_monotone"],
+            "fates_reconciled": fates["reconciled"],
+            "reservoir_bounded": int(
+                fates["reservoir_len"] <= fates["reservoir_cap"]),
+            "per_node_decode_matches_host": int(
+                observatory["decode_max_err"] <= 1e-5),
+            "dead_node_flagged": observatory["dead_node_flagged"],
+            "tracing_off_bit_identical": overhead["bit_identical"],
+            "overhead_within_budget": int(
+                overhead["overhead_ratio"] <= 1.0 + OVERHEAD_BUDGET),
+        },
+        "telemetry": reg.values(),
+        "total": {"seconds": time.time() - t0},
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: 4 versions, 5k requests, "
+                         "d=1024/2000-iter overhead arm")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write results as JSON (CI uploads this)")
+    ap.add_argument("--trace-jsonl", dest="trace_jsonl", default=None,
+                    help="keep the lineage section's JSONL stream here "
+                         "(CI schema-validates it)")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json_path,
+        trace_jsonl=args.trace_jsonl)

@@ -30,6 +30,7 @@ import json
 import os
 import shutil
 import tempfile
+import time
 from typing import Any
 
 import jax
@@ -65,7 +66,7 @@ def _is_complete(root: str, step: int) -> bool:
 
 
 def save(root: str, step: int, tree: Pytree, keep: int = 3,
-         extra: dict | None = None) -> str:
+         extra: dict | None = None, point: bool = True) -> str:
     """Write ``tree`` under root/step_XXXXXXXXX atomically; rotate old steps.
 
     The arrays + manifest are staged in a dot-prefixed temp dir and published
@@ -80,6 +81,13 @@ def save(root: str, step: int, tree: Pytree, keep: int = 3,
     manifest's ``"extra"`` key — caller-owned metadata (model kind, export
     quantization, training iteration) readable via :func:`read_manifest`
     without touching the arrays. Returns the published step directory path.
+
+    ``point=False`` writes the step directory but leaves the ``LATEST``
+    pointer untouched — the checkpoint is complete on disk yet invisible to
+    pointer-following readers until the caller hands it off explicitly via
+    :func:`point_latest`. A traced publisher uses this to emit its lineage
+    records *before* any watcher can observe the new version, keeping
+    publish→swap timestamps causally ordered.
     """
     os.makedirs(root, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
@@ -87,6 +95,7 @@ def save(root: str, step: int, tree: Pytree, keep: int = 3,
     manifest = {
         "version": MANIFEST_VERSION,
         "step": step,
+        "ts": time.time(),  # wall-clock write time (lineage/forensics anchor)
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "dtypes": [str(a.dtype) for a in arrays.values()],
@@ -106,9 +115,10 @@ def save(root: str, step: int, tree: Pytree, keep: int = 3,
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
-    current = _read_pointer(root)
-    if current is None or step >= current:
-        _write_pointer(root, step)
+    if point:
+        current = _read_pointer(root)
+        if current is None or step >= current:
+            _write_pointer(root, step)
     _rotate(root, keep)
     return final
 

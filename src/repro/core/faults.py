@@ -52,6 +52,7 @@ __all__ = [
     "faulty_matrix_host",
     "round_fail_key",
     "count_drops",
+    "count_drops_node",
 ]
 
 DROP_MODES = ("link", "message")
@@ -167,6 +168,26 @@ def count_drops(Bs: jax.Array, plan: FaultPlan, t) -> jax.Array:
 
     keys = jax.vmap(lambda r: round_fail_key(plan, t, r))(jnp.arange(R))
     return jnp.sum(jax.vmap(one_round)(Bs, keys))
+
+
+def count_drops_node(Bs: jax.Array, plan: FaultPlan, t) -> jax.Array:
+    """Per-node twin of :func:`count_drops`: (m,) int32 of messages each
+    node failed to deliver at iteration ``t`` — the same replayed failure
+    draws, reduced over each sender's row of the clean mixing stack instead
+    of the whole matrix, so the vector sums exactly to the scalar counter.
+    Feeds the telemetry ring's per-node fault-drop leaves."""
+    R, m = Bs.shape[0], Bs.shape[-1]
+    dead = dead_mask(plan, m)
+    eye = jnp.eye(m, dtype=bool)
+
+    def one_round(B, key):
+        fail = jax.random.bernoulli(key, plan.drop_prob, (m, m))
+        fail = (fail | dead[None, :]) & ~eye
+        real = fail & ~dead[:, None] & (B != 0)
+        return jnp.sum(real.astype(jnp.int32), axis=1)
+
+    keys = jax.vmap(lambda r: round_fail_key(plan, t, r))(jnp.arange(R))
+    return jnp.sum(jax.vmap(one_round)(Bs, keys), axis=0)
 
 
 def faulty_matrix_host(B: np.ndarray, plan: FaultPlan, t: int,

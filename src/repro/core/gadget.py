@@ -62,6 +62,7 @@ and the objective trace all respect them.
 from __future__ import annotations
 
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -77,6 +78,7 @@ from repro.core.push_sum import (PushSumState, collapse_rounds, exponential_sche
 from repro.kernels.hinge_subgrad import ops as hinge_ops
 from repro.kernels.hinge_subgrad import ref as hinge_ref
 from repro.telemetry import registry as tmr
+from repro.telemetry import trace as tmtr
 from repro.telemetry import train as tmt
 
 __all__ = [
@@ -235,6 +237,12 @@ class SegmentResult(NamedTuple):
     # boundary disagreement/objective + active-iteration mass extrema and
     # fault-drop counts. None when telemetry is off.
     telemetry: tmt.SegmentTelemetry | None = None
+    # Root trace context of this segment's version-lineage trace
+    # (gadget_train_stream(..., trace=True)): the publisher derives its
+    # publish span from it and embeds it in the checkpoint manifest, so the
+    # swap/first-serve spans downstream join the same causal chain. None
+    # when tracing is off.
+    trace: tmtr.TraceContext | None = None
 
 
 class TrainState(NamedTuple):
@@ -357,7 +365,7 @@ def _batch_ids(data_key: jax.Array, t: jax.Array, n_counts: jax.Array, batch_siz
 def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
                  m: int, R: int, topology: str, fused: bool,
                  faults: FaultPlan | None = None,
-                 count_drops: bool = False):
+                 count_drops: bool = False, drops_node: bool = False):
     """Mixing for iteration t (1-based), fully on device: the (R, m, m)
     per-round stack, or — when ``fused`` — the single collapsed (m, m) product
     ``P_t = (B_1 ⋯ B_R)^T``. Fault-free deterministic topologies index the
@@ -372,8 +380,14 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
 
     ``count_drops`` (telemetry) additionally returns the iteration's faulted
     message count (:func:`repro.core.faults.count_drops` on the clean rounds
-    — int32 0 when fault-free) as a second output. The default single-output
-    form is byte-identical to pre-telemetry builds."""
+    — int32 0 when fault-free) as a second output; ``drops_node`` switches
+    that output to the (m,) per-sender vector
+    (:func:`repro.core.faults.count_drops_node`, rows summing to the
+    scalar). The default single-output form is byte-identical to
+    pre-telemetry builds."""
+    def zero_drops():
+        return (jnp.zeros((m,), jnp.int32) if drops_node else jnp.int32(0))
+
     if topology == "random":
         kt = jax.random.fold_in(mix_key, t)
         Bs = jax.vmap(
@@ -383,17 +397,18 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
         T = B_stack.shape[0]
         if fused and faults is None:
             P = B_stack[(t - 1) % T]
-            return (P, jnp.int32(0)) if count_drops else P
+            return (P, zero_drops()) if count_drops else P
         idx = ((t - 1) * R + jnp.arange(R)) % T
         Bs = B_stack[idx]
     drops = None
     if faults is not None:
         if count_drops:
-            drops = flt.count_drops(Bs, faults, t)
+            drops = (flt.count_drops_node(Bs, faults, t) if drops_node
+                     else flt.count_drops(Bs, faults, t))
         Bs = flt.faulty_rounds(Bs, faults, t)
     mix = collapse_rounds(Bs) if fused else Bs
     if count_drops:
-        return mix, (jnp.int32(0) if drops is None else drops)
+        return mix, (zero_drops() if drops is None else drops)
     return mix
 
 
@@ -405,7 +420,8 @@ def _iter_mixing(mix_key: jax.Array, B_stack: jax.Array | None, t: jax.Array,
 def _gossip_step(cfg: GadgetConfig, m: int,
                  X: jax.Array, y: jax.Array, n_counts: jax.Array,
                  data_key: jax.Array, W: jax.Array, W_sum: jax.Array,
-                 t: jax.Array, Bs: jax.Array, sparse_block_bound: int | None = None):
+                 t: jax.Array, Bs: jax.Array, sparse_block_bound: int | None = None,
+                 node_mass: bool = False):
     """Steps (a)-(h) for all m nodes at iteration t. ``Bs`` is the (R, m, m)
     per-round stack (sequential path) or the collapsed (m, m) product P_t
     (``cfg.fused``). ``X`` is the dense (m, n_i, d) array or the (cols, vals)
@@ -421,7 +437,12 @@ def _gossip_step(cfg: GadgetConfig, m: int,
     faults, < 1 under message-mode leakage. With ``cfg.faults`` dead nodes
     are frozen bit-exactly: their half-step is suppressed (W_half ← W) and
     their mixing row is e_d, so W_new equals W on dead rows (project_ball is
-    exact identity on an already-projected weight)."""
+    exact identity on an already-projected weight).
+
+    ``node_mass`` (per-node telemetry) appends the (m,) per-node Push-Sum
+    mass ratio ``wts_i / n_i`` — the node-level decomposition of ``mass``
+    (its n-weighted mean is the scalar) — as a fourth output; the default
+    three-output form traces the identical program."""
     tf = t.astype(jnp.float32)
     ids = _batch_ids(data_key, t, n_counts, cfg.batch_size)
 
@@ -469,6 +490,8 @@ def _gossip_step(cfg: GadgetConfig, m: int,
         # (nothing reaches the others), and the bit-exact freeze of their own
         # row happens here, after the mix's renormalizing divide
         W_new = jnp.where(flt.dead_mask(cfg.faults, m)[:, None], W, W_new)
+    if node_mass:
+        return W_new, W_sum + W_new, mass, wts / n_counts
     return W_new, W_sum + W_new, mass
 
 
@@ -477,12 +500,31 @@ def _one_iteration(cfg: GadgetConfig, m: int,
                    data_key: jax.Array, mix_key: jax.Array, B_stack: jax.Array | None,
                    W: jax.Array, W_sum: jax.Array, t: jax.Array,
                    sparse_block_bound: int | None = None,
-                   count_drops: bool = False):
+                   count_drops: bool = False, node_stats: bool = False):
     """One fully device-resident iteration: derive this iteration's mixing
     (stack slice, product-cycle slice, or in-step draw — faults applied on
     device when cfg.faults), then the shared step. Returns
     ``(W, W_sum, mass)`` — or ``(W, W_sum, mass, drops)`` with the
-    iteration's faulted-message count when ``count_drops`` (telemetry)."""
+    iteration's faulted-message count when ``count_drops`` (telemetry).
+
+    ``node_stats`` (per-node telemetry; supersedes ``count_drops``) returns
+    ``(W, W_sum, mass, ndrops, nmass)`` where ``ndrops`` is the (m,) int32
+    per-sender faulted-message count (zeros when fault-free) and ``nmass``
+    the (m,) per-node Push-Sum mass ratio."""
+    if node_stats:
+        if cfg.faults is not None:
+            Bs, ndrops = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds,
+                                      cfg.topology, cfg.fused, cfg.faults,
+                                      count_drops=True, drops_node=True)
+        else:
+            Bs = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds,
+                              cfg.topology, cfg.fused, None)
+            ndrops = jnp.zeros((m,), jnp.int32)
+        W, W_sum, mass, nmass = _gossip_step(cfg, m, X, y, n_counts, data_key,
+                                             W, W_sum, t, Bs,
+                                             sparse_block_bound,
+                                             node_mass=True)
+        return W, W_sum, mass, ndrops, nmass
     if count_drops:
         Bs, drops = _iter_mixing(mix_key, B_stack, t, m, cfg.gossip_rounds,
                                  cfg.topology, cfg.fused, cfg.faults,
@@ -538,7 +580,8 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                        n_chunks: int, chunk: int,
                        sparse_block_bound: int | None = None,
                        snap_every: int = 0, snap_slots: int = 0,
-                       tele_every: int = 0, tele_slots: int = 0):
+                       tele_every: int = 0, tele_slots: int = 0,
+                       tele_nodes: bool = False):
     """Jitted whole-training function: while_loop over ε-check chunks, scan
     over iterations inside each chunk, donated weight buffers, on-device
     objective/ε traces. Returns arrays only — the caller syncs once.
@@ -555,7 +598,15 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
     ``count % tele_slots``; the window accumulators reset at each record.
     With ``tele_every == 0`` the telemetry carry is the empty tuple — no
     pytree leaves, so the traced program (and the trajectory) is
-    bit-identical to the telemetry-free build."""
+    bit-identical to the telemetry-free build.
+
+    ``tele_nodes`` appends per-node ring leaves to the telemetry carry:
+    ``(tele_slots, m)`` rings of per-node disagreement-to-consensus, per-node
+    Push-Sum mass ratio at the record iteration, and windowed per-node
+    fault-drop counts (plus the (m,) drop window accumulator). The scalar
+    rings are unchanged — the scalar disagreement is the row-max of the
+    per-node record, the scalar drop window the row-sum — and
+    ``tele_nodes=False`` traces the exact per-node-free program."""
     # drop counting re-draws the fault stream per iteration — only pay for
     # it when there is both a telemetry ring and a fault plan to observe
     tele_drops = bool(tele_every) and cfg.faults is not None
@@ -573,7 +624,20 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
             active = t <= cfg.max_iters
             # inactive tail iterations report full mass so the per-chunk min
             # below only reflects iterations that actually gossiped
-            if tele_drops:
+            if tele_nodes:
+                W, W_sum, mass, ndrops, nmass = jax.lax.cond(
+                    active,
+                    lambda a: _one_iteration(cfg, m, X, y, n_counts,
+                                             data_key, mix_key, B_stack, *a,
+                                             sparse_block_bound=sparse_block_bound,
+                                             node_stats=True),
+                    lambda a: (a[0], a[1], jnp.float32(1.0),
+                               jnp.zeros((m,), jnp.int32),
+                               jnp.ones((m,), jnp.float32)),
+                    (W, W_sum, t),
+                )
+                drops = jnp.sum(ndrops)
+            elif tele_drops:
                 W, W_sum, mass, drops = jax.lax.cond(
                     active,
                     lambda a: _one_iteration(cfg, m, X, y, n_counts,
@@ -603,7 +667,45 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
 
                 snaps = jax.lax.cond(active & (t % snap_every == 0),
                                      do_snap, lambda op: op[0], (snaps, W))
-            if tele_every:
+            if tele_every and tele_nodes:
+                (ti, tdis, tmn, tmx, tob, tdr, tc, wmin, wmax, wdr,
+                 ndisr, nmassr, ndropr, wndr) = tele
+                # window accumulators only see iterations that gossiped
+                wmin = jnp.where(active, jnp.minimum(wmin, mass), wmin)
+                wmax = jnp.where(active, jnp.maximum(wmax, mass), wmax)
+                wdr = wdr + jnp.where(active, drops, 0)
+                wndr = wndr + jnp.where(active, ndrops, 0)
+
+                def do_rec_nodes(op):
+                    ((ti, tdis, tmn, tmx, tob, tdr, tc, ndisr, nmassr,
+                      ndropr), (W_now, wmin, wmax, wdr, nmass_now, wndr)) = op
+                    w_cons = consensus_of(W_now)
+                    node_dis = jnp.linalg.norm(W_now - w_cons[None, :], axis=1)
+                    slot = tc % tele_slots
+                    ring = (ti.at[slot].set(t),
+                            # scalar ring = row-max of the per-node record
+                            tdis.at[slot].set(jnp.max(node_dis)),
+                            tmn.at[slot].set(wmin), tmx.at[slot].set(wmax),
+                            tob.at[slot].set(objective_of(w_cons)),
+                            tdr.at[slot].set(wdr), tc + 1,
+                            ndisr.at[slot].set(node_dis),
+                            nmassr.at[slot].set(nmass_now),
+                            ndropr.at[slot].set(wndr))
+                    # record consumed the window: reset the accumulators
+                    return ring, (jnp.float32(jnp.inf), jnp.float32(-jnp.inf),
+                                  jnp.int32(0), jnp.zeros((m,), jnp.int32))
+
+                ring, (wmin, wmax, wdr, wndr) = jax.lax.cond(
+                    active & (t % tele_every == 0), do_rec_nodes,
+                    lambda op: (op[0], (op[1][1], op[1][2], op[1][3],
+                                        op[1][5])),
+                    ((ti, tdis, tmn, tmx, tob, tdr, tc, ndisr, nmassr,
+                      ndropr), (W, wmin, wmax, wdr, nmass, wndr)))
+                (ti, tdis, tmn, tmx, tob, tdr, tc,
+                 ndisr, nmassr, ndropr) = ring
+                tele = (ti, tdis, tmn, tmx, tob, tdr, tc, wmin, wmax, wdr,
+                        ndisr, nmassr, ndropr, wndr)
+            elif tele_every:
                 ti, tdis, tmn, tmx, tob, tdr, tc, wmin, wmax, wdr = tele
                 # window accumulators only see iterations that gossiped
                 wmin = jnp.where(active, jnp.minimum(wmin, mass), wmin)
@@ -676,6 +778,12 @@ def _make_device_train(cfg: GadgetConfig, m: int, n_i: int, d: int,
                      jnp.zeros((tele_slots,), jnp.int32),
                      jnp.int32(0),
                      jnp.float32(jnp.inf), jnp.float32(-jnp.inf), jnp.int32(0))
+            if tele_nodes:
+                tele0 = tele0 + (
+                    jnp.full((tele_slots, m), jnp.nan, jnp.float32),
+                    jnp.full((tele_slots, m), jnp.nan, jnp.float32),
+                    jnp.zeros((tele_slots, m), jnp.int32),
+                    jnp.zeros((m,), jnp.int32))
         else:
             tele0 = ()
         init = (W0, W_sum0, jnp.int32(1), snaps0, tele0, jnp.int32(0),
@@ -772,7 +880,8 @@ def _prepare_device_train(cfg: GadgetConfig, X_parts: jax.Array, y_parts: jax.Ar
                                sparse_block_bound, snap_every,
                                int(snapshot_slots) if snap_every else 0,
                                tele.every if tele else 0,
-                               tele.slots if tele else 0)
+                               tele.slots if tele else 0,
+                               tele.per_node if tele else False)
     args = (X, jnp.asarray(y_parts), B_stack, data_key, mix_key,
             n_counts, jnp.zeros((m, d), dtype), jnp.zeros((m, d), dtype))
     return train, args
@@ -884,11 +993,17 @@ def gadget_train(
             # W = 0 everywhere: disagreement is exactly 0, nothing recorded
             empty_i = np.zeros((0,), np.int64)
             empty_f = np.zeros((0,), np.float64)
-            trace = tmt.TrainTrace(every=tele_cfg.every, iterations=empty_i,
-                                   disagreement=empty_f, mass_min=empty_f,
-                                   mass_max=empty_f, objective=empty_f,
-                                   drops=empty_i, final_iteration=0,
-                                   final_disagreement=0.0)
+            empty_nf = np.zeros((0, m), np.float64)
+            trace = tmt.TrainTrace(
+                every=tele_cfg.every, iterations=empty_i,
+                disagreement=empty_f, mass_min=empty_f,
+                mass_max=empty_f, objective=empty_f,
+                drops=empty_i, final_iteration=0,
+                final_disagreement=0.0,
+                node_disagreement=empty_nf if tele_cfg.per_node else None,
+                node_mass=empty_nf if tele_cfg.per_node else None,
+                node_drops=(empty_nf.astype(np.int64)
+                            if tele_cfg.per_node else None))
             tmt.publish_trace(trace)
         ring = None
         if snap_every:
@@ -925,10 +1040,17 @@ def gadget_train(
     iters = int(iters)
     trace = None
     if tele_cfg:
-        ti, tdis, tmn, tmx, tob, tdr, tc, _, _, _, final_dis = tele_out
+        ndisr = nmassr = ndropr = None
+        if tele_cfg.per_node:
+            (ti, tdis, tmn, tmx, tob, tdr, tc, _, _, _,
+             ndisr, nmassr, ndropr, _, final_dis) = tele_out
+        else:
+            ti, tdis, tmn, tmx, tob, tdr, tc, _, _, _, final_dis = tele_out
         trace = tmt.decode_ring(tele_cfg.every, tele_cfg.slots, int(tc),
                                 ti, tdis, tmn, tmx, tob, tdr,
-                                iters, float(final_dis))
+                                iters, float(final_dis),
+                                node_disagreement=ndisr, node_mass=nmassr,
+                                node_drops=ndropr)
         tmt.publish_trace(trace)
     rcfg = _resolve_kernels(cfg)
     X_in, m_in, _, d_in, _ = _unpack_partitions(X_parts)
@@ -1049,6 +1171,9 @@ def gadget_train_stream(
     n_counts=None,
     resume: TrainState | None = None,
     telemetry: tmt.TrainTelemetry | None = None,
+    trace: bool = False,
+    trace_link: str | None = None,
+    trace_registry=None,
 ):
     """Generator twin of :func:`gadget_train`: yield a :class:`SegmentResult`
     every ``segment_iters`` iterations while training stays device-resident.
@@ -1081,6 +1206,19 @@ def gadget_train_stream(
     registry (``every``/``slots`` are ring parameters and don't apply here:
     the segment boundary IS the cadence). ``telemetry=None`` (default)
     traces the exact pre-telemetry program: trajectories stay bit-identical.
+
+    ``trace=True`` starts one causal trace per segment (the version-lineage
+    root): a ``train.segment`` span — segment wall seconds, iteration,
+    objective — is emitted on ``trace_registry`` (default: the process
+    default registry) at every boundary, and
+    the root :class:`~repro.telemetry.trace.TraceContext` rides out on
+    ``SegmentResult.trace`` for the publisher to extend (explicit
+    propagation across the thread boundary; host-side only, the traced
+    device program is untouched). ``trace_link`` (the prior run's trace_id,
+    e.g. recovered from a checkpoint manifest by the publisher on
+    ``resume="latest"``) is stamped onto the first segment's span as a
+    ``resumed_from_trace`` attr, linking the fresh traces to the
+    pre-crash lineage.
     """
     _validate_topology(cfg)
     tele_cfg = tmt.validate_telemetry(telemetry)
@@ -1123,10 +1261,13 @@ def gadget_train_stream(
         W = jnp.zeros((m, d), dtype)
         W_sum = jnp.zeros((m, d), dtype)
         t = jnp.int32(1)
+    first_segment = True
     while True:
         prev_iteration = int(t) - 1
+        seg_t0 = time.monotonic()
         out = segment(X, y, B_stack, data_key, mix_key, n_counts, W, W_sum, t)
         out = jax.block_until_ready(out)
+        seg_seconds = time.monotonic() - seg_t0
         seg_tele = None
         if tele_cfg:
             (W, W_sum, t, w_cons, objective, eps, mass,
@@ -1158,11 +1299,24 @@ def gadget_train_stream(
             reg.counter("train.fault_drops").inc(seg_tele.drops)
         eps_f = float(eps)
         done = eps_f < cfg.epsilon or iteration >= cfg.max_iters
+        seg_ctx = None
+        if trace:
+            # one fresh trace per segment: this span is the lineage root the
+            # publisher/server chain hangs off (via SegmentResult.trace)
+            seg_ctx = tmtr.TraceContext.new()
+            attrs = {"iteration": iteration, "objective": float(objective),
+                     "epsilon": eps_f, "done": done}
+            if first_segment and trace_link:
+                attrs["resumed_from_trace"] = trace_link
+            tmtr.emit_span(trace_registry if trace_registry is not None
+                           else tmr.default_registry(),
+                           "train.segment", seg_ctx, seg_seconds, **attrs)
+        first_segment = False
         yield SegmentResult(iteration=iteration, W=W,
                             w_consensus=np.asarray(w_cons),
                             objective=float(objective), epsilon=eps_f,
                             done=done, W_sum=W_sum, mass=float(mass),
-                            telemetry=seg_tele)
+                            telemetry=seg_tele, trace=seg_ctx)
         if done:
             return
 

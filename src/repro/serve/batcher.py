@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.sparse.formats import (DEFAULT_BUCKET_BLK_D, minibatch_block_bound,
                                   pad_query_planes, row_block_counts)
+from repro.telemetry import trace as tmtr
 from repro.telemetry.registry import Registry
 
 __all__ = ["Bucket", "bucket_ladder", "calibrate_buckets", "MicroBatcher",
@@ -214,6 +215,16 @@ class MicroBatcher:
     * ``block_timeout`` — real-time cap for the ``block`` policy's wait
       (``None`` parks the submitter until a drain frees a slot).
 
+    Tracing: ``tracer`` (optional
+    :class:`repro.telemetry.trace.RequestTracer`) samples submissions into
+    per-request fate traces — one ``serve.request`` span per sampled request,
+    closed by its terminal fate (``delivered`` with the executed bucket and
+    the degrade rung at execution, ``shed``, ``deadline``, or ``rejected``
+    with the rejection reason) — and each scored batch gets a
+    ``serve.score.seconds`` span that closes even when ``score_fn`` raises
+    (error-annotated). ``tracer=None`` (default) adds nothing to the hot
+    path.
+
     Submit and drain are thread-safe (one condition variable guards the
     queue and the result ledger); ``score_fn`` runs *outside* the lock so
     an open-loop submitter thread is never serialized behind a kernel
@@ -227,6 +238,7 @@ class MicroBatcher:
     admission: str = "reject-new"
     default_timeout: float | None = None
     block_timeout: float | None = None
+    tracer: tmtr.RequestTracer | None = None
     _queue: deque = field(default_factory=deque, repr=False)
     _next_rid: int = 0
     _undelivered: dict = field(default_factory=dict, repr=False)
@@ -297,6 +309,8 @@ class MicroBatcher:
                     rid=victim.rid, t_submit=victim.t_submit,
                     t_shed=self.t_now())
                 self.registry.counter("serve.shed").inc()
+                if self.tracer is not None:
+                    self.tracer.finish(victim.rid, "shed")
         else:  # block: park the submitter until a drain frees a slot
             t_end = (time.monotonic() + self.block_timeout
                      if self.block_timeout is not None else None)
@@ -324,18 +338,26 @@ class MicroBatcher:
         admission failures raise :class:`QueryRejected` without enqueuing."""
         cols = np.asarray(cols, np.int32).reshape(-1)
         vals = np.asarray(vals, np.float32).reshape(-1)
-        self.bucket_for(len(cols))  # reject oversize at submit, not drain
-        with self._cond:
-            self._admit_locked()
-            now = self.t_now()
-            if deadline is None and self.default_timeout is not None:
-                deadline = now + self.default_timeout
-            rid = self._next_rid
-            self._next_rid += 1
-            self._queue.append(_Request(rid, cols, vals, now,
-                                        deadline=deadline))
-            self.registry.counter("serve.submitted").inc()
-            self._queue_peak = max(self._queue_peak, len(self._queue))
+        try:
+            self.bucket_for(len(cols))  # reject oversize at submit, not drain
+            with self._cond:
+                self._admit_locked()
+                now = self.t_now()
+                if deadline is None and self.default_timeout is not None:
+                    deadline = now + self.default_timeout
+                rid = self._next_rid
+                self._next_rid += 1
+                self._queue.append(_Request(rid, cols, vals, now,
+                                            deadline=deadline))
+                self.registry.counter("serve.submitted").inc()
+                self._queue_peak = max(self._queue_peak, len(self._queue))
+        except QueryRejected as e:
+            if self.tracer is not None:
+                # refused at the door: no rid, zero-duration rejected span
+                self.tracer.reject(reason=e.reason)
+            raise
+        if self.tracer is not None:
+            self.tracer.start(rid)
         return rid
 
     def submit_csr(self, csr, *, deadline: float | None = None) -> list[int]:
@@ -363,6 +385,8 @@ class MicroBatcher:
         if bad.size:
             self.registry.counter("serve.rejected",
                                   reason="oversize").inc(int(bad.size))
+            if self.tracer is not None:
+                self.tracer.reject(reason="oversize")
             raise QueryRejected(
                 f"chunk row {int(bad[0])} with {int(nnz[bad[0]])} nonzeros "
                 f"exceeds the widest bucket (k={widest}) — "
@@ -423,6 +447,8 @@ class MicroBatcher:
                         rid=r.rid, t_submit=r.t_submit, deadline=r.deadline,
                         t_expired=now)
                 self.registry.counter("serve.deadline_missed").inc()
+                if self.tracer is not None:
+                    self.tracer.finish(r.rid, "deadline")
             else:
                 live.append(r)
         return live
@@ -470,8 +496,18 @@ class MicroBatcher:
                     continue
                 cols, vals = pad_query_planes(
                     [(r.cols, r.vals) for r in chunk], bucket.rows, bucket.k)
-                scores, labels = score_fn(bucket, cols, vals)
-                scores, labels = np.asarray(scores), np.asarray(labels)  # sync
+                if self.tracer is not None:
+                    # the span closes on the exception path too: a flaky
+                    # score_fn raise still records it, error-annotated
+                    with tmtr.TracedSpan(self.registry, "serve.score.seconds",
+                                         tmtr.TraceContext.new(),
+                                         bucket=f"k{bucket.k}"):
+                        scores, labels = score_fn(bucket, cols, vals)
+                        scores = np.asarray(scores)  # force inside the span
+                        labels = np.asarray(labels)
+                else:
+                    scores, labels = score_fn(bucket, cols, vals)
+                    scores, labels = np.asarray(scores), np.asarray(labels)  # sync
                 t_done = self.t_now()
                 self._batches += 1
                 self._padded_rows += bucket.rows - len(chunk)
@@ -479,6 +515,8 @@ class MicroBatcher:
                                       bucket=f"k{bucket.k}").inc()
                 agg = self._latency_hist("all")
                 per = self._latency_hist(f"k{bucket.k}")
+                rung = (int(self.tracer.registry.value("serve.degrade_rung")
+                            or 0) if self.tracer is not None else 0)
                 with self._cond:
                     for j, r in enumerate(chunk):
                         r.scores, r.label, r.t_done = scores[j], labels[j], t_done
@@ -488,6 +526,10 @@ class MicroBatcher:
                         per.observe(lat)
                     self._requests += len(chunk)
                     self.registry.counter("serve.delivered").inc(len(chunk))
+                if self.tracer is not None:
+                    for r in chunk:
+                        self.tracer.finish(r.rid, "delivered",
+                                           bucket=f"k{bucket.k}", rung=rung)
                 n_scored += 1
         finally:
             with self._cond:

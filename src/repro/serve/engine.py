@@ -36,6 +36,7 @@ backward when an operator rolls back via ``checkpoint.point_latest``.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,7 @@ from repro.kernels.hinge_subgrad import ref as hinge_ref
 from repro.serve import snapshot as snap_mod
 from repro.serve.batcher import Bucket
 from repro.sparse.formats import DEFAULT_BUCKET_BLK_D, block_map
+from repro.telemetry import trace as tmtr
 from repro.telemetry.registry import Registry
 
 __all__ = ["SvmServer", "make_mesh_scorer"]
@@ -107,6 +109,9 @@ class SvmServer:
         self._watch_root: str | None = None
         self._watch_step: int | None = None
         self._reload_failures: dict[int, int] = {}
+        # (step, swap ctx) awaiting its first scoring call — the lineage
+        # chain's terminal "serve.first_score" event fires once per swap
+        self._pending_first_score: tuple[int, tmtr.TraceContext] | None = None
         # All serving counters live on a telemetry registry (private per
         # server unless one is shared in) — stats() is a *view* over it, and
         # kernel launch/bytes accounting lands beside the serve counters.
@@ -142,10 +147,15 @@ class SvmServer:
         step = ckpt.read_latest(root)
         if step is None:
             raise FileNotFoundError(f"no complete checkpoints under {root}")
+        t0 = time.monotonic()
         w, extra = snap_mod.from_checkpoint(root, step)
         srv = cls(w, meta=extra, **kw)
         srv._watch_root = root
         srv._watch_step = step
+        # the initial install is a swap too (version 0 of this server's
+        # life) — without it the first published version's lineage chain
+        # would have no serve-side stages
+        srv._emit_swap_span(step, time.monotonic() - t0, extra=extra)
         return srv
 
     # ------------------------------------------------------------ hot swap
@@ -208,18 +218,60 @@ class SvmServer:
         fails = self._reload_failures.get(step, 0)
         if fails >= self.reload_quarantine:
             return None
+        t0 = time.monotonic()
         try:
             w, extra = snap_mod.from_checkpoint(self._watch_root, step)
             self.swap_weights(w, meta=extra)
-        except Exception:
+        except Exception as e:
             self._count("reload_errors")
             self._reload_failures[step] = fails + 1
-            if fails + 1 == self.reload_quarantine:
+            quarantined = fails + 1 == self.reload_quarantine
+            if quarantined:
                 self._count("quarantined")
+            self._emit_swap_span(step, time.monotonic() - t0, extra=None,
+                                 error=("quarantined" if quarantined
+                                        else f"{type(e).__name__}: {e}"))
             return None
         self._watch_step = step
         self._reload_failures.pop(step, None)
+        self._emit_swap_span(step, time.monotonic() - t0, extra=extra)
         return step
+
+    def _emit_swap_span(self, step: int, seconds: float, *,
+                        extra: dict | None, error: str | None = None) -> None:
+        """Emit the lineage ``serve.swap`` span for one reload attempt.
+
+        Linked through the checkpoint manifest's ``extra["trace"]`` (the
+        publish span's context); the failed-load path re-reads the manifest
+        best-effort since ``from_checkpoint`` never returned. No-op for
+        untraced checkpoints, so tracing off emits nothing. A successful
+        swap arms the one-shot ``serve.first_score`` event the next scoring
+        call completes the chain with."""
+        trace = (extra or {}).get("trace")
+        if trace is None:
+            try:
+                manifest = ckpt.read_manifest(self._watch_root, step)
+                trace = (manifest.get("extra") or {}).get("trace")
+            except Exception:
+                return
+        parent = tmtr.TraceContext.from_extra(trace)
+        if parent is None:
+            return
+        ctx = parent.child()
+        tmtr.emit_span(self.registry, "serve.swap", ctx, seconds,
+                       version=step, error=error)
+        if error is None:
+            self._pending_first_score = (step, ctx)
+
+    def _note_first_score(self) -> None:
+        """Fire the pending ``serve.first_score`` lineage event, if armed —
+        called by every scoring path; one event per successful swap."""
+        if self._pending_first_score is None:
+            return
+        step, ctx = self._pending_first_score
+        self._pending_first_score = None
+        tmtr.emit_event(self.registry, "serve.first_score", ctx.child(),
+                        version=step)
 
     @property
     def quarantined_steps(self) -> list[int]:
@@ -294,6 +346,7 @@ class SvmServer:
         scores, labels = fn(self._W_dev, jnp.asarray(X))
         self._count("queries", B)
         self._count("batches")
+        self._note_first_score()
         if self.use_kernels:
             # The kernel runs inside jit, so the eager self-recording in ops
             # never fires — account the launch here, at the host boundary.
@@ -350,6 +403,7 @@ class SvmServer:
         self._count("queries", B)
         self._count("batches")
         self._count("sparse_batches")
+        self._note_first_score()
         self._count("blocks_visited", live)
         self._count("dense_block_equivalent", self.n_d_blocks)
         if self.use_kernels:

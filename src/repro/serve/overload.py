@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 
 from repro.serve.batcher import MicroBatcher
 from repro.serve.engine import SvmServer
+from repro.telemetry import trace as tmtr
 
 __all__ = ["DegradeLadder"]
 
@@ -57,6 +58,10 @@ class DegradeLadder:
     whose queue is short but whose tail is blown still degrades. Without a
     bounded queue (``max_pending=None``) *only* the latency term can drive
     the ladder; configure at least one or :meth:`observe` is inert.
+
+    ``trace=True`` additionally emits a traced ``serve.degrade`` event on
+    every rung transition (direction + new rung) so the observatory's fate
+    view can correlate degraded delivery with the transition that caused it.
     """
 
     server: SvmServer
@@ -66,6 +71,7 @@ class DegradeLadder:
     patience: int = 2
     max_rung: int = 2
     latency_slo_ms: float | None = None
+    trace: bool = False
     rung: int = 0
     _above: int = field(default=0, repr=False)
     _below: int = field(default=0, repr=False)
@@ -135,3 +141,6 @@ class DegradeLadder:
         reg = self.server.registry
         reg.counter("serve.degrade_steps", direction=direction).inc()
         reg.gauge("serve.degrade_rung").set(float(self.rung))
+        if self.trace:
+            tmtr.emit_event(reg, "serve.degrade", tmtr.TraceContext.new(),
+                            direction=direction, rung=self.rung)

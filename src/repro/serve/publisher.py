@@ -42,9 +42,11 @@ import time
 
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.core.gadget import (GadgetConfig, NonFiniteWeightsError,
                                SegmentResult, TrainState, gadget_train_stream)
 from repro.serve.snapshot import (Snapshot, latest_train_state, to_checkpoint)
+from repro.telemetry import trace as tmtr
 from repro.telemetry.registry import Registry
 from repro.telemetry.train import TrainTelemetry
 
@@ -82,6 +84,22 @@ class TrainPublisher:
     disagreement/objective/drop readings mirrored beside them. Private per
     publisher by default; pass a shared registry for a unified dump.
 
+    Tracing: ``trace=True`` turns on version-lineage tracing — the stream
+    roots one :class:`~repro.telemetry.trace.TraceContext` per segment
+    (``train.segment`` span on :attr:`registry`), each publish extends it
+    with a ``publish.seconds`` span (plus one ``publish.attempt`` child span
+    per write attempt, error-annotated on OSError retries — same trace_id
+    across attempts) and a ``publish.visible`` event marking the LATEST
+    pointer handoff (emitted immediately before the pointer write, so every
+    watcher swap timestamp causally follows it — the checkpoint is written
+    unpointed and only becomes observable at the handoff), and the context
+    is embedded in the checkpoint manifest
+    (``extra["trace"]``) so the serving watcher's swap span links back. On
+    ``resume="latest"`` the fresh run starts new traces but stamps the prior
+    run's trace_id onto the first segment span as ``resumed_from_trace``.
+    ``trace=False`` (default) emits nothing — byte-identical telemetry to
+    the pre-tracing publisher.
+
     Lifecycle: ``start()`` launches the daemon thread and returns ``self``;
     ``join()`` blocks until training converges (or ``cfg.max_iters``) and
     returns the final :class:`~repro.core.gadget.SegmentResult`. Both
@@ -98,7 +116,8 @@ class TrainPublisher:
                  publish_retries: int = 3, publish_backoff: float = 0.05,
                  publish_backoff_cap: float = 1.0,
                  telemetry: TrainTelemetry | None = None,
-                 registry: Registry | None = None):
+                 registry: Registry | None = None,
+                 trace: bool = False):
         if resume is not None and resume != "latest" \
                 and not isinstance(resume, TrainState):
             raise ValueError(
@@ -122,6 +141,8 @@ class TrainPublisher:
         # segment, "publish.segments" / "publish.retries" counters, and the
         # per-segment train.* gauges the stream writes when telemetry is on.
         self.registry = registry if registry is not None else Registry()
+        self.trace = bool(trace)
+        self._trace_link: str | None = None
         self._data = (X_parts, y_parts, n_counts)
         self.published: list[int] = []
         self.final: SegmentResult | None = None
@@ -139,12 +160,24 @@ class TrainPublisher:
         return self
 
     def _resolve_resume(self) -> TrainState | None:
-        """Materialize the ``resume`` argument into a TrainState (or None)."""
+        """Materialize the ``resume`` argument into a TrainState (or None).
+
+        When tracing and resuming from the watched root, also recover the
+        prior run's trace_id from the resume checkpoint's manifest — the
+        fresh run's first segment span links back to it
+        (``resumed_from_trace``)."""
         if self.resume is None:
             return None
         state = (latest_train_state(self.root) if self.resume == "latest"
                  else self.resume)
         self.resumed_from = None if state is None else int(state.iteration)
+        if self.trace and state is not None and self.resume == "latest":
+            try:
+                extra = ckpt.read_manifest(self.root).get("extra") or {}
+                prior = tmtr.TraceContext.from_extra(extra.get("trace"))
+                self._trace_link = prior.trace_id if prior else None
+            except (OSError, ValueError):
+                self._trace_link = None
         return state
 
     def _run(self) -> None:
@@ -154,7 +187,10 @@ class TrainPublisher:
                                            segment_iters=self.segment_iters,
                                            n_counts=n_counts,
                                            resume=self._resolve_resume(),
-                                           telemetry=self.telemetry):
+                                           telemetry=self.telemetry,
+                                           trace=self.trace,
+                                           trace_link=self._trace_link,
+                                           trace_registry=self.registry):
                 self._publish(seg)
                 self.final = seg
         except BaseException as e:  # surfaced via join()/wait()/error
@@ -177,20 +213,62 @@ class TrainPublisher:
         if self.save_train_state:
             train_state = TrainState(iteration=seg.iteration, W=seg.W,
                                      W_sum=seg.W_sum)
-        with self.registry.span("publish.seconds", iteration=seg.iteration):
+        # The publish span is a child of the segment's lineage root; its
+        # context rides into the checkpoint manifest so the serving watcher
+        # can link its swap span back. TracedSpan (vs the plain registry
+        # span) closes on the exception path too — a final-attempt OSError
+        # still records the span, error-annotated.
+        pub_ctx = seg.trace.child() if seg.trace is not None else None
+        span_cm = (tmtr.TracedSpan(self.registry, "publish.seconds", pub_ctx,
+                                   iteration=seg.iteration)
+                   if pub_ctx is not None
+                   else self.registry.span("publish.seconds",
+                                           iteration=seg.iteration))
+        with span_cm:
             for attempt in range(self.publish_retries + 1):
+                t_att = time.monotonic()
                 try:
+                    # point=False: the checkpoint is complete on disk but
+                    # invisible to pointer-following watchers until the
+                    # explicit handoff below — publish records must land
+                    # before any swap can observe the version, or chain
+                    # timestamps go non-monotone under thread scheduling.
                     to_checkpoint(snap, self.root, quantize=self.quantize,
                                   keep=self.keep, lam=self.cfg.lam,
-                                  train_state=train_state)
+                                  train_state=train_state,
+                                  trace=(pub_ctx.to_extra()
+                                         if pub_ctx is not None else None),
+                                  point=False)
+                    if pub_ctx is not None:
+                        tmtr.emit_span(self.registry, "publish.attempt",
+                                       pub_ctx.child(),
+                                       time.monotonic() - t_att,
+                                       attempt=attempt)
                     break
-                except OSError:
+                except OSError as e:
+                    if pub_ctx is not None:
+                        # per-attempt child span, same trace_id as the run:
+                        # the retry story is reconstructable from the JSONL
+                        tmtr.emit_span(self.registry, "publish.attempt",
+                                       pub_ctx.child(),
+                                       time.monotonic() - t_att,
+                                       attempt=attempt,
+                                       error=f"OSError: {e}")
                     if attempt == self.publish_retries:
                         raise
                     self.publish_retries_used += 1
                     self.registry.counter("publish.retries").inc()
                     time.sleep(min(self.publish_backoff * 2 ** attempt,
                                    self.publish_backoff_cap))
+        if pub_ctx is not None:
+            # emitted after the publish span record closes and BEFORE the
+            # pointer handoff, so chain timestamps are causally monotone:
+            # segment-end < publish-end <= visible <= pointer-land <= swap
+            tmtr.emit_event(self.registry, "publish.visible", pub_ctx,
+                            iteration=seg.iteration)
+        # the handoff: only now can a watcher's maybe_reload observe the
+        # version (monotone by construction — publisher steps only grow)
+        ckpt.point_latest(self.root, seg.iteration)
         self.registry.counter("publish.segments").inc()
         if seg.telemetry is not None:
             # Mirror the segment's flight-recorder readings next to the

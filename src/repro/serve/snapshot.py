@@ -131,7 +131,8 @@ def dequantize_int8(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
 def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
                   step: int | None = None, keep: int = 3,
                   lam: float | None = None,
-                  train_state: TrainState | None = None) -> str:
+                  train_state: TrainState | None = None,
+                  trace: dict | None = None, point: bool = True) -> str:
     """Export one snapshot as a servable checkpoint under ``root``.
 
     ``quantize``: ``None`` ships f32 weights; ``"int8"`` ships the int8+scale
@@ -148,6 +149,16 @@ def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
     :func:`train_state_from_checkpoint` to rebuild the exact per-node solver
     state, so a crashed trainer can resume bit-identically from its last
     published model instead of restarting from zero.
+
+    ``trace`` (optional dict — a
+    :meth:`repro.telemetry.trace.TraceContext.to_extra`) is stored verbatim
+    under ``extra["trace"]``: the cross-process half of version-lineage
+    tracing, letting the serving watcher's swap span link back to the
+    publish/segment spans that produced this checkpoint.
+
+    ``point=False`` defers the ``LATEST`` pointer handoff to the caller
+    (see :func:`repro.checkpoint.save`) — the traced publisher's ordering
+    lever, so its publish records always precede any watcher's swap.
     """
     if quantize not in (None, "int8"):
         raise ValueError(f"unknown quantize mode {quantize!r}")
@@ -168,6 +179,8 @@ def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
     }
     if lam is not None:
         extra["lam"] = float(lam)
+    if trace is not None:
+        extra["trace"] = dict(trace)
     if train_state is not None:
         W = np.asarray(train_state.W)
         W_sum = np.asarray(train_state.W_sum)
@@ -182,7 +195,7 @@ def to_checkpoint(snap: Snapshot, root: str, *, quantize: str | None = None,
             "dtype": str(W.dtype),
         }
     return ckpt.save(root, snap.iteration if step is None else step, tree,
-                     keep=keep, extra=extra)
+                     keep=keep, extra=extra, point=point)
 
 
 def from_checkpoint(root: str, step: int | None = None

@@ -10,6 +10,11 @@ Public surface:
   :class:`TrainTrace` on ``GadgetResult.telemetry``.
 * :func:`to_prometheus` / :func:`dump_jsonl` / :class:`JsonlSink`
   exporters, and the ``python -m repro.telemetry.dump`` CLI.
+* :class:`TraceContext` / :class:`RequestTracer` and the lineage helpers
+  (see :mod:`repro.telemetry.trace`; ``python -m repro.telemetry.trace``
+  prints causal chains), :func:`analyze` / :func:`publish_node_health`
+  per-node health (:mod:`repro.telemetry.observatory`), and the
+  ``python -m repro.telemetry.top`` live console.
 """
 from .export import (
     JsonlSink,
@@ -31,6 +36,21 @@ from .registry import (
     histogram,
     reset,
     span,
+)
+from .observatory import (
+    NodeHealth,
+    ObservatoryReport,
+    analyze,
+    publish_node_health,
+)
+from .trace import (
+    RequestTracer,
+    TraceContext,
+    TracedSpan,
+    emit_event,
+    emit_span,
+    format_chain,
+    lineage_chains,
 )
 from .train import (
     SegmentTelemetry,
@@ -63,4 +83,15 @@ __all__ = [
     "TrainTrace",
     "publish_trace",
     "validate_telemetry",
+    "TraceContext",
+    "TracedSpan",
+    "RequestTracer",
+    "emit_span",
+    "emit_event",
+    "lineage_chains",
+    "format_chain",
+    "NodeHealth",
+    "ObservatoryReport",
+    "analyze",
+    "publish_node_health",
 ]

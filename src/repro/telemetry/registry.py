@@ -269,6 +269,10 @@ class Span:
     series per name) and, when the registry has a JSONL sink attached, emits
     a ``span`` event carrying ``fields`` (e.g. the step number) and the
     measured seconds.
+
+    Spans close on the exception path too: a raise inside the block still
+    observes the histogram and emits the record, with an ``error`` field
+    naming the exception (the raise itself propagates unchanged).
     """
 
     def __init__(self, registry: "Registry", name: str, fields: dict):
@@ -284,6 +288,8 @@ class Span:
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.seconds = self.registry.clock() - self._t0
+        if exc_type is not None:
+            self.fields.setdefault("error", f"{exc_type.__name__}: {exc}")
         self.registry.histogram(self.name).observe(self.seconds)
         self.registry.emit({"kind": "span", "name": self.name, "labels": {},
                             "seconds": self.seconds, "fields": self.fields})

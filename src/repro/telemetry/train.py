@@ -43,10 +43,17 @@ class TrainTelemetry(NamedTuple):
     ``every`` — record a trace point every this many iterations (>= 1).
     ``slots`` — ring capacity; when more than ``slots`` points are recorded
     the oldest are overwritten (ring semantics, like the snapshot ring).
+    ``per_node`` — also carry per-node leaves: ``(slots, m)`` rings of
+    per-node disagreement-to-consensus ``||w_i - w_cons||_2``, per-node
+    Push-Sum mass ratio at the record iteration, and per-node fault-drop
+    counts over the window (by mixing-matrix row; rows sum to the scalar
+    ``drops`` series). The observatory (:mod:`repro.telemetry.observatory`)
+    decodes these into node-health records.
     """
 
     every: int = 1
     slots: int = 256
+    per_node: bool = False
 
 
 class TrainTrace(NamedTuple):
@@ -59,6 +66,12 @@ class TrainTrace(NamedTuple):
     on. ``drops`` counts faulted messages per window (int64, zeros when
     fault-free). ``final_disagreement`` is measured at the returned
     consensus regardless of ring cadence.
+
+    When the ring ran with ``per_node=True`` the three ``node_*`` arrays are
+    ``(count, m)`` (else None): per-node disagreement ``||w_i - w_cons||_2``
+    at each record (its row-max equals ``disagreement`` exactly), the
+    per-node Push-Sum mass ratio at the record iteration, and per-node
+    fault drops over the window (rows sum to ``drops``).
     """
 
     every: int
@@ -70,6 +83,9 @@ class TrainTrace(NamedTuple):
     drops: np.ndarray
     final_iteration: int
     final_disagreement: float
+    node_disagreement: Optional[np.ndarray] = None
+    node_mass: Optional[np.ndarray] = None
+    node_drops: Optional[np.ndarray] = None
 
     @property
     def count(self) -> int:
@@ -104,11 +120,12 @@ def validate_telemetry(telemetry: Optional[TrainTelemetry]) -> Optional[TrainTel
         return None
     every = int(getattr(telemetry, "every", 1))
     slots = int(getattr(telemetry, "slots", 256))
+    per_node = bool(getattr(telemetry, "per_node", False))
     if every < 1:
         raise ValueError(f"telemetry.every must be >= 1, got {every}")
     if slots < 1:
         raise ValueError(f"telemetry.slots must be >= 1, got {slots}")
-    return TrainTelemetry(every=every, slots=slots)
+    return TrainTelemetry(every=every, slots=slots, per_node=per_node)
 
 
 def _ring_order(count: int, slots: int) -> np.ndarray:
@@ -121,8 +138,12 @@ def _ring_order(count: int, slots: int) -> np.ndarray:
 
 def decode_ring(every: int, slots: int, count: int, iterations, disagreement,
                 mass_min, mass_max, objective, drops,
-                final_iteration: int, final_disagreement: float) -> TrainTrace:
-    """Assemble a :class:`TrainTrace` from raw device ring arrays."""
+                final_iteration: int, final_disagreement: float,
+                node_disagreement=None, node_mass=None,
+                node_drops=None) -> TrainTrace:
+    """Assemble a :class:`TrainTrace` from raw device ring arrays; the three
+    optional ``node_*`` arguments are the ``(slots, m)`` per-node rings
+    (decoded with the same ring order) when the run carried them."""
     order = _ring_order(int(count), slots)
     return TrainTrace(
         every=every,
@@ -134,6 +155,12 @@ def decode_ring(every: int, slots: int, count: int, iterations, disagreement,
         drops=np.asarray(drops)[order].astype(np.int64),
         final_iteration=int(final_iteration),
         final_disagreement=float(final_disagreement),
+        node_disagreement=(None if node_disagreement is None else
+                           np.asarray(node_disagreement)[order].astype(np.float64)),
+        node_mass=(None if node_mass is None else
+                   np.asarray(node_mass)[order].astype(np.float64)),
+        node_drops=(None if node_drops is None else
+                    np.asarray(node_drops)[order].astype(np.int64)),
     )
 
 

@@ -383,6 +383,62 @@ class TestTrainTelemetry:
 
 
 # ---------------------------------------------------------------------------
+# Per-node telemetry leaves (observatory inputs)
+# ---------------------------------------------------------------------------
+
+
+class TestPerNodeTelemetry:
+    def test_default_carries_no_node_rings(self):
+        X, y = _toy_parts()
+        tr = gadget_train(X, y, _cfg(),
+                          telemetry=tm.TrainTelemetry()).telemetry
+        assert tr.node_disagreement is None
+        assert tr.node_mass is None and tr.node_drops is None
+
+    def test_per_node_bit_identical_and_decode_matches_host(self):
+        """per_node=True perturbs nothing (bit-identical trajectory) and the
+        decoded leaves agree with host references: row-max of the per-node
+        disagreement IS the scalar ring, the final row matches
+        ``||W_i - w_consensus||`` within 1e-5, and fault-free mass is
+        exactly 1 everywhere."""
+        X, y = _toy_parts()
+        cfg = _cfg(check_every=1)
+        r_off = gadget_train(X, y, cfg)
+        r_on = gadget_train(X, y, cfg,
+                            telemetry=tm.TrainTelemetry(
+                                every=1, slots=cfg.max_iters, per_node=True))
+        assert np.array_equal(np.asarray(r_on.W), np.asarray(r_off.W))
+        assert np.array_equal(np.asarray(r_on.w_consensus),
+                              np.asarray(r_off.w_consensus))
+        tr = r_on.telemetry
+        assert tr.node_disagreement.shape == (cfg.max_iters, 4)
+        np.testing.assert_array_equal(tr.node_disagreement.max(axis=1),
+                                      np.asarray(tr.disagreement))
+        host_ref = np.linalg.norm(
+            np.asarray(r_on.W, np.float64)
+            - np.asarray(r_on.w_consensus, np.float64), axis=1)
+        np.testing.assert_allclose(tr.node_disagreement[-1], host_ref,
+                                   atol=1e-5)
+        np.testing.assert_array_equal(tr.node_mass,
+                                      np.ones_like(tr.node_mass))
+        assert not tr.node_drops.any()
+
+    def test_per_node_drop_rows_sum_to_scalar_ring(self):
+        X, y = _toy_parts()
+        cfg = _cfg(check_every=1,
+                   faults=FaultPlan(drop_prob=0.3, drop="message", seed=5))
+        tr = gadget_train(X, y, cfg,
+                          telemetry=tm.TrainTelemetry(
+                              every=1, slots=cfg.max_iters,
+                              per_node=True)).telemetry
+        assert int(np.sum(tr.node_drops)) > 0
+        np.testing.assert_array_equal(tr.node_drops.sum(axis=1),
+                                      np.asarray(tr.drops))
+        # message drops destroy mass somewhere in the fleet
+        assert float(tr.node_mass.min()) < 1.0
+
+
+# ---------------------------------------------------------------------------
 # Kernel accounting
 # ---------------------------------------------------------------------------
 

@@ -13,9 +13,19 @@ kind-specific payload:
   and must come last), bucket counts summing to ``count``;
 * span — numeric ``seconds`` >= 0 (``fields`` optional).
 
+Traced spans/events (``repro.telemetry.trace``) additionally carry
+``trace_id`` / ``span_id`` / ``parent_id`` at the top level: when any is
+present, ``trace_id`` and ``span_id`` must both be non-empty strings and
+``parent_id`` null or a non-empty string. Across a whole file, every
+``parent_id`` must appear as some record's ``span_id`` *within the same
+trace_id* — no orphan parents (the lineage chain writers emit parent and
+child onto one sink, so a dangling parent means a dropped or cross-wired
+record).
+
 The schema is the compatibility contract between writers (the registry
 exporters) and readers (``python -m repro.telemetry.dump``, dashboards);
-CI runs this over a freshly dumped stream plus ``--selftest``.
+CI runs this over a freshly dumped stream plus ``--selftest``, and the
+bench-smoke job runs it over a real traced train→publish→swap→serve run.
 
 Usage:
     PYTHONPATH=src python tools/check_telemetry_schema.py [--selftest] [files...]
@@ -91,12 +101,52 @@ def validate_record(rec) -> list[str]:
         s = rec.get("seconds")
         if not _is_num(s) or s < 0:
             errs.append("span record needs numeric 'seconds' >= 0")
+    errs.extend(_trace_errors(rec))
+    return errs
+
+
+def _trace_errors(rec: dict) -> list[str]:
+    """Violations of the trace-id triplet on one record (empty when the
+    record carries no trace ids at all)."""
+    present = [k for k in ("trace_id", "span_id", "parent_id") if k in rec]
+    if not present:
+        return []
+    errs = []
+    for key in ("trace_id", "span_id"):
+        v = rec.get(key)
+        if not isinstance(v, str) or not v:
+            errs.append(f"traced record needs non-empty string '{key}'")
+    pid = rec.get("parent_id")
+    if pid is not None and (not isinstance(pid, str) or not pid):
+        errs.append("'parent_id' must be null or a non-empty string")
+    return errs
+
+
+def validate_trace_linkage(records) -> list[str]:
+    """Cross-record trace checks over ``(lineno, record)`` pairs: every
+    ``parent_id`` must appear as a ``span_id`` under the same ``trace_id``
+    somewhere in the stream (no orphan parents)."""
+    spans_by_trace: dict[str, set[str]] = {}
+    for _, rec in records:
+        tid, sid = rec.get("trace_id"), rec.get("span_id")
+        if isinstance(tid, str) and isinstance(sid, str):
+            spans_by_trace.setdefault(tid, set()).add(sid)
+    errs = []
+    for lineno, rec in records:
+        tid, pid = rec.get("trace_id"), rec.get("parent_id")
+        if not isinstance(tid, str) or not isinstance(pid, str):
+            continue
+        if pid not in spans_by_trace.get(tid, set()):
+            errs.append(f"line {lineno}: parent_id {pid!r} never appears as "
+                        f"a span_id in trace {tid!r} (orphan parent)")
     return errs
 
 
 def validate_file(path: str) -> list[str]:
-    """All violations in a JSONL file, each prefixed ``path:line``."""
+    """All violations in a JSONL file, each prefixed ``path:line`` —
+    per-record schema plus the file-wide trace-linkage pass."""
     errs = []
+    parsed: list[tuple[int, dict]] = []
     with open(path, encoding="utf-8") as fh:
         for lineno, line in enumerate(fh, 1):
             line = line.strip()
@@ -109,6 +159,9 @@ def validate_file(path: str) -> list[str]:
                 continue
             errs.extend(f"{path}:{lineno}: {msg}"
                         for msg in validate_record(rec))
+            if isinstance(rec, dict):
+                parsed.append((lineno, rec))
+    errs.extend(f"{path}: {msg}" for msg in validate_trace_linkage(parsed))
     return errs
 
 
@@ -145,10 +198,56 @@ def selftest() -> int:
          "buckets": [[0.5, 1], [0.25, 2]]},  # edges not increasing
         {"ts": 1.0, "kind": "span", "name": "x", "labels": {}, "seconds": -1},
     ]
+    bad += [
+        {"ts": 1.0, "kind": "span", "name": "x", "labels": {}, "seconds": 0.1,
+         "trace_id": "", "span_id": "s1"},  # empty trace_id
+        {"ts": 1.0, "kind": "event", "name": "x", "labels": {},
+         "trace_id": "t1"},  # span_id missing when trace_id present
+        {"ts": 1.0, "kind": "span", "name": "x", "labels": {}, "seconds": 0.1,
+         "trace_id": "t1", "span_id": "s1", "parent_id": 7},  # non-str parent
+    ]
     for rec in bad:
         if not validate_record(rec):
             print(f"selftest: malformed record accepted: {rec}")
             return 1
+    # Trace round-trip through the real emitters, then linkage checks.
+    from repro.telemetry import trace as tmtr
+    from repro.telemetry.export import JsonlSink
+    treg = Registry()
+    with tempfile.NamedTemporaryFile("w", suffix=".jsonl",
+                                     delete=False) as fh:
+        tpath = fh.name
+    treg.attach_sink(JsonlSink(tpath))
+    root = tmtr.TraceContext.new()
+    tmtr.emit_span(treg, "train.segment", root, 0.5, iteration=10)
+    tmtr.emit_span(treg, "publish.seconds", root.child(), 0.01, iteration=10)
+    treg.detach_sink()
+    errs = validate_file(tpath)
+    if errs:
+        print("selftest: valid traced stream rejected:", *errs, sep="\n  ")
+        return 1
+    linked = [
+        (1, {"ts": 1.0, "kind": "span", "name": "a", "labels": {},
+             "seconds": 0.1, "trace_id": "t1", "span_id": "s1"}),
+        (2, {"ts": 1.0, "kind": "span", "name": "b", "labels": {},
+             "seconds": 0.1, "trace_id": "t1", "span_id": "s2",
+             "parent_id": "s1"}),
+    ]
+    if validate_trace_linkage(linked):
+        print("selftest: well-linked trace rejected")
+        return 1
+    orphan = linked + [
+        (3, {"ts": 1.0, "kind": "span", "name": "c", "labels": {},
+             "seconds": 0.1, "trace_id": "t1", "span_id": "s3",
+             "parent_id": "nope"}),
+        # same parent id exists, but in a *different* trace — still orphan
+        (4, {"ts": 1.0, "kind": "span", "name": "d", "labels": {},
+             "seconds": 0.1, "trace_id": "t2", "span_id": "s4",
+             "parent_id": "s1"}),
+    ]
+    if len(validate_trace_linkage(orphan)) != 2:
+        print("selftest: orphan parents not flagged")
+        return 1
     print("check_telemetry_schema: selftest ok")
     return 0
 
